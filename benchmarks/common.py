@@ -1,0 +1,72 @@
+"""Shared helpers for the paper-figure benchmark harnesses.
+
+Every harness prints CSV rows `figure,setting,metric,value` (plus a
+human-readable table) and returns the rows so benchmarks/run.py can
+aggregate everything into bench_output.txt.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.core.strategies import StrategySpec
+from repro.data import datasets as ds
+from repro.federated.runtime import run_experiment
+from repro.models.config import FederatedConfig
+
+QUICK = os.environ.get("BENCH_QUICK", "1") != "0"
+
+# tiny model shared across figures (paper: ViT-B/GPT2 — reduced for 1 CPU core)
+MODEL_KW = dict(d_model=48, num_layers=2, num_heads=4, d_ff=96)
+ROUNDS = 30 if QUICK else 120
+EVAL_EVERY = 5 if QUICK else 10
+
+
+@functools.lru_cache(maxsize=None)
+def get_task(name: str, alpha: float = 0.1, seed: int = 0):
+    if name == "synth_image":
+        return ds.make_synth_image(n_examples=1024, n_clients=48, n_patches=8,
+                                   dim=48, alpha=alpha, seed=seed)
+    if name == "synth_text":
+        return ds.make_synth_text(n_examples=768, n_clients=48, vocab=128,
+                                  length=24, alpha=alpha, seed=seed)
+    if name == "synth_reddit":
+        return ds.make_synth_reddit(n_users=96, vocab=128, length=20, seed=seed)
+    if name == "synth_flair":
+        return ds.make_synth_flair(n_users=96, n_patches=8, dim=48, seed=seed)
+    raise KeyError(name)
+
+
+def default_fed(**kw) -> FederatedConfig:
+    base = dict(n_clients=8, local_batch=8, local_steps=1,
+                client_lr=5e-3, client_momentum=0.9, server_lr=5e-3)
+    base.update(kw)
+    return FederatedConfig(**base)
+
+
+def run(task, spec: StrategySpec, fed: Optional[FederatedConfig] = None,
+        rounds: int = None, lora_rank: int = 16, seed: int = 0, **kw):
+    t0 = time.time()
+    kw.setdefault("model_kw", MODEL_KW)
+    kw.setdefault("pretrain_steps", 40 if QUICK else 150)
+    res = run_experiment(task, spec=spec, fed=fed or default_fed(),
+                         rounds=rounds or ROUNDS, lora_rank=lora_rank,
+                         eval_every=EVAL_EVERY, seed=seed, **kw)
+    res.elapsed = time.time() - t0
+    return res
+
+
+def emit(rows: List[Dict], header: str):
+    print(f"\n== {header} ==", flush=True)
+    for r in rows:
+        print(",".join(str(r[k]) for k in ("figure", "setting", "metric", "value")),
+              flush=True)
+    return rows
+
+
+def row(figure, setting, metric, value):
+    return {"figure": figure, "setting": setting, "metric": metric,
+            "value": round(value, 6) if isinstance(value, float) else value}

@@ -1,0 +1,50 @@
+"""Figure 3: communication time to reach a target accuracy under asymmetric
+up/down bandwidth (1x, 1/4x, 1/16x upload speed).
+
+Paper claim: FLASC's independent upload density makes it robust to slow
+uploads — d_up=1/64 reaches target ~16x faster than dense LoRA."""
+from __future__ import annotations
+
+from repro.core.strategies import StrategySpec
+from benchmarks.common import QUICK, emit, get_task, row, run
+
+METHODS = {
+    "lora": StrategySpec(kind="lora"),
+    "flasc_1/4_1/4": StrategySpec(kind="flasc", density_down=0.25, density_up=0.25),
+    "flasc_1/4_1/16": StrategySpec(kind="flasc", density_down=0.25, density_up=1 / 16),
+    "flasc_1/4_1/64": StrategySpec(kind="flasc", density_down=0.25, density_up=1 / 64),
+    "sparse_adapter_1/4": StrategySpec(kind="sparse_adapter", density_down=0.25),
+    "adapter_lth_.98": StrategySpec(kind="adapter_lth", lth_keep=0.98),
+}
+BW_RATIOS = (1, 4, 16)          # download/upload speed ratio
+DOWN_BW = 1e6                   # arbitrary unit; times reported relative to LoRA
+
+
+def main():
+    task = get_task("synth_text")
+    # target = fraction of the dense-LoRA best accuracy (70%-style threshold)
+    ref = run(task, METHODS["lora"])
+    target = 0.9 * ref.best_acc()
+    rows = [row("fig3", "lora", "target_acc", target)]
+    results = {"lora": ref}
+    for name, spec in METHODS.items():
+        if name not in results:
+            results[name] = run(task, spec)
+    for ratio in BW_RATIOS:
+        base_t = None
+        for name, res in results.items():
+            reached = [h for h in res.history if h.get("acc", 0) >= target]
+            if not reached:
+                rows.append(row("fig3", f"up1/{ratio}/{name}", "rel_time", -1.0))
+                continue
+            h = reached[0]
+            t = h["down_bytes"] / DOWN_BW + h["up_bytes"] / (DOWN_BW / ratio)
+            if name == "lora":
+                base_t = t
+            rows.append(row("fig3", f"up1/{ratio}/{name}", "rel_time",
+                            t / base_t if base_t else 1.0))
+    return emit(rows, "Figure 3: time-to-accuracy under asymmetric bandwidth")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Kernel microbenches + sparsifier cost.
+
+On this CPU container the Pallas kernels execute in interpret mode, so the
+numbers are NOT TPU timings — they validate plumbing and give the relative
+cost of the exact-sort vs histogram Top-K selectors (pure-jnp paths, which
+ARE the CPU production path)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, row
+from repro.core import sparsity as sp
+
+
+def timeit(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    rows = []
+    x = jax.random.normal(jax.random.key(0), (1 << 22,))  # 4M entries
+
+    exact = jax.jit(lambda v: sp.topk_mask(v, 0.25, exact=True))
+    hist = jax.jit(lambda v: sp.topk_mask(v, 0.25, exact=False))
+    rows.append(row("kernels", "topk_exact_4M", "us_per_call", timeit(exact, x)))
+    rows.append(row("kernels", "topk_histogram_4M", "us_per_call", timeit(hist, x)))
+
+    from repro.kernels import ops
+    q = jax.random.normal(jax.random.key(1), (1, 128, 2, 32))
+    k = jax.random.normal(jax.random.key(2), (1, 128, 2, 32))
+    v = jax.random.normal(jax.random.key(3), (1, 128, 2, 32))
+    rows.append(row("kernels", "flash_attn_128_interp", "us_per_call",
+                    timeit(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)))
+    xm = jax.random.normal(jax.random.key(4), (128, 256))
+    w = jax.random.normal(jax.random.key(5), (256, 128))
+    a = jax.random.normal(jax.random.key(6), (256, 8))
+    b = jax.random.normal(jax.random.key(7), (8, 128))
+    rows.append(row("kernels", "lora_matmul_ref_path", "us_per_call",
+                    timeit(lambda: ops.lora_matmul(xm, w, a, b, 2.0))))
+    return emit(rows, "Kernel microbenches (CPU interpret / ref paths)")
+
+
+if __name__ == "__main__":
+    main()

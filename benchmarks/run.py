@@ -1,0 +1,32 @@
+"""Run every paper-figure benchmark and print CSV (figure,setting,metric,value).
+
+  PYTHONPATH=src python -m benchmarks.run               # quick mode
+  BENCH_QUICK=0 PYTHONPATH=src python -m benchmarks.run # full mode
+
+One harness per paper artifact (Figures 2-8, Table 1) plus kernel
+microbenches.  See EXPERIMENTS.md for the claim-by-claim validation that
+reads these numbers."""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig2_comm_efficiency, fig3_async_bandwidth,
+                            fig4_freezing, fig5_heterogeneity, fig6_system_het,
+                            fig7_privacy, kernels_bench, table1_partitions)
+    t0 = time.time()
+    print("figure,setting,metric,value")
+    table1_partitions.main()
+    kernels_bench.main()
+    fig2_comm_efficiency.main()
+    fig3_async_bandwidth.main()
+    fig4_freezing.main()
+    fig5_heterogeneity.main()
+    fig6_system_het.main()
+    fig7_privacy.main()
+    print(f"\n[benchmarks done in {time.time() - t0:.0f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Serve a LoRA-finetuned model: batched prefill + greedy decode, with the
+merge-for-serving path cross-checked against the unmerged adapter.
+
+  PYTHONPATH=src python examples/serve_lora.py --arch qwen3-32b
+(uses the reduced smoke variant of the chosen architecture on CPU)
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import lora as lora_mod
+from repro.models import model as mdl
+from repro.models.config import LoRAConfig
+from repro.models.layers import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-32b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(mdl.model_spec(cfg), jax.random.key(0))
+    lcfg = LoRAConfig(rank=8)
+    lora = jax.tree.map(
+        lambda x: x + 0.01 * jax.random.normal(jax.random.key(2), x.shape, x.dtype),
+        lora_mod.init_lora(cfg, lcfg, jax.random.key(1)))
+
+    B, S = args.batch, args.prompt_len
+    batch = {"tokens": jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab_size)}
+    if cfg.encoder_decoder:
+        batch["frames"] = jax.random.normal(jax.random.key(4), (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.key(4), (B, cfg.num_image_tokens, cfg.vision_embed_dim)) * 0.1
+
+    max_len = S + args.gen
+    logits, cache = mdl.prefill(params, cfg, batch, lora=lora,
+                                lora_scale=lcfg.scale, max_len=max_len)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    step = jax.jit(lambda t, p, c: mdl.decode_step(params, cfg, t, p, c,
+                                                   lora=lora, lora_scale=lcfg.scale))
+    out_tokens = [tok]
+    for i in range(args.gen - 1):
+        lg, cache = step(tok, jnp.asarray(S + i), cache)
+        tok = jnp.argmax(lg[:, 0], -1).astype(jnp.int32)
+        out_tokens.append(tok)
+    gen = jnp.stack(out_tokens, axis=1)
+    print("generated token ids:\n", gen)
+
+    if not cfg.tie_embeddings:
+        merged = lora_mod.merge_lora(params, lora, cfg, lcfg)
+        lg_m = mdl.forward(merged, cfg, batch)["logits"][:, -1]
+        lg_u = mdl.forward(params, cfg, batch, lora=lora,
+                           lora_scale=lcfg.scale)["logits"][:, -1]
+        err = float(jnp.max(jnp.abs(lg_m - lg_u)))
+        print(f"merge-for-serving max |Δlogit| = {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

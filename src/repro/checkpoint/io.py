@@ -1,0 +1,68 @@
+"""Pytree checkpointing: npz payload + path-keyed manifest (no orbax here).
+
+Keys are '/'-joined tree paths; restore validates against a reference tree
+structure (or rebuilds a nested dict when none is given).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = jax.tree.flatten_with_path(tree)
+    payload = {_path_str(p): np.asarray(v) for p, v in flat}
+    manifest = {"keys": sorted(payload.keys())}
+    np.savez(path, __manifest__=json.dumps(manifest), **payload)
+
+
+def load_pytree(path: str, like: Optional[Any] = None) -> Any:
+    with np.load(path, allow_pickle=False) as z:
+        payload = {k: z[k] for k in z.files if k != "__manifest__"}
+    if like is not None:
+        flat, treedef = jax.tree.flatten_with_path(like)
+        leaves = []
+        for p, ref in flat:
+            key = _path_str(p)
+            if key not in payload:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = payload[key]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+            leaves.append(arr.astype(ref.dtype))
+        return jax.tree.unflatten(jax.tree.structure(like), leaves)
+    # rebuild nested dict
+    out: Dict[str, Any] = {}
+    for key, arr in payload.items():
+        node = out
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return out
+
+
+def save_server_round(flatP, server_state, sstate, path: str) -> None:
+    save_pytree({"P": flatP, "server": server_state, "strategy": sstate}, path)
+
+
+def load_server_round(path: str, like=None):
+    tree = load_pytree(path, like)
+    return tree["P"], tree["server"], tree["strategy"]

@@ -1,0 +1,26 @@
+"""DeepSeek-V2 236B [arXiv:2405.04434]. 60L, d_model 5120, 128 heads with
+MLA (kv_lora 512, q_lora 1536, nope 128 / rope 64 / v 128), MoE: 2 shared +
+160 routed experts top-6 (expert d_ff 1536; first layer dense d_ff 12288),
+vocab 102400."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", family="moe", num_layers=60, d_model=5120,
+    num_heads=128, num_kv_heads=128, head_dim=128, d_ff=1536,
+    vocab_size=102400, activation="swiglu",
+    use_mla=True, kv_lora_rank=512, q_lora_rank=1536,
+    qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+    num_experts=160, num_shared_experts=2, moe_top_k=6, moe_d_ff=1536,
+    dense_d_ff=12288, first_k_dense=1,
+    chunked_attn_threshold=4096,  # flash-style attention from 4k (memory)
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-smoke", family="moe", num_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=4, head_dim=32, d_ff=64, vocab_size=512,
+    activation="swiglu", use_mla=True, kv_lora_rank=32, q_lora_rank=48,
+    qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+    num_experts=4, num_shared_experts=1, moe_top_k=2, moe_d_ff=64,
+    dense_d_ff=256, first_k_dense=1,
+    param_dtype="float32", compute_dtype="float32",
+)

@@ -1,0 +1,25 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437]. 61L, d_model 7168, 128 heads MLA
+(kv_lora 512, q_lora 1536), MoE: 1 shared + 256 routed top-8 (expert d_ff
+2048; first 3 layers dense d_ff 18432), MTP depth 1, vocab 129280."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe", num_layers=61, d_model=7168,
+    num_heads=128, num_kv_heads=128, head_dim=128, d_ff=2048,
+    vocab_size=129280, activation="swiglu",
+    use_mla=True, kv_lora_rank=512, q_lora_rank=1536,
+    qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+    num_experts=256, num_shared_experts=1, moe_top_k=8, moe_d_ff=2048,
+    dense_d_ff=18432, first_k_dense=3, mtp_depth=1,
+    chunked_attn_threshold=4096,  # flash-style attention from 4k (memory)
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v3-smoke", family="moe", num_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=4, head_dim=32, d_ff=64, vocab_size=512,
+    activation="swiglu", use_mla=True, kv_lora_rank=32, q_lora_rank=48,
+    qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+    num_experts=4, num_shared_experts=1, moe_top_k=2, moe_d_ff=64,
+    dense_d_ff=256, first_k_dense=1, mtp_depth=1,
+    param_dtype="float32", compute_dtype="float32",
+)

@@ -1,0 +1,19 @@
+"""InternVL2-Llama3-76B [arXiv:2404.16821]. LLM backbone (Llama-3-70B
+shape): 80L, d_model 8192, 64 heads (kv 8), d_ff 28672, vocab 128256.
+InternViT-6B frontend is a STUB: input_specs provides 3200-dim patch
+embeddings consumed through a 2-layer MLP projector (256 image tokens)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm", num_layers=80, d_model=8192,
+    num_heads=64, num_kv_heads=8, head_dim=128, d_ff=28672,
+    vocab_size=128256, activation="swiglu", rope_theta=500_000.0,
+    num_image_tokens=256, vision_embed_dim=3200,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke", family="vlm", num_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+    num_image_tokens=4, vision_embed_dim=64,
+    param_dtype="float32", compute_dtype="float32",
+)

@@ -1,0 +1,21 @@
+"""Whisper-large-v3 [arXiv:2212.04356]. Encoder-decoder, 32+32 layers,
+d_model 1280, 20 heads, d_ff 5120 (GELU), vocab 51866.  The mel+conv audio
+frontend is a STUB: input_specs provides 1500 precomputed frame embeddings.
+Decode = decoder step with cross-attention over the fixed encoder context;
+long_500k is skipped (DESIGN.md §4: 448-token decoder context has no 524k
+analogue)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="audio", num_layers=32, d_model=1280,
+    num_heads=20, num_kv_heads=20, head_dim=64, d_ff=5120,
+    vocab_size=51866, activation="gelu",
+    encoder_decoder=True, num_encoder_layers=32, encoder_seq=1500,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="audio", num_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+    activation="gelu", encoder_decoder=True, num_encoder_layers=2,
+    encoder_seq=16, param_dtype="float32", compute_dtype="float32",
+)

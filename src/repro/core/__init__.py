@@ -1,0 +1,8 @@
+from repro.core.sparsity import topk_mask, sparsify, threshold_exact, threshold_histogram
+from repro.core.strategies import StrategySpec, init_strategy_state
+from repro.core.fedround import FlatMeta, federated_round, make_round_fn, init_server
+from repro.core.comm import CommLedger
+
+__all__ = ["topk_mask", "sparsify", "threshold_exact", "threshold_histogram",
+           "StrategySpec", "init_strategy_state", "FlatMeta",
+           "federated_round", "make_round_fn", "init_server", "CommLedger"]

@@ -1,0 +1,68 @@
+"""Client<->server communication accounting (the paper's cost model).
+
+The paper reports communication as the number of transmitted LoRA entries
+(float32 values) relative to dense LoRA; Figure 3 converts to *time* under
+asymmetric up/down bandwidth.  We track both the paper-faithful value-only
+bytes and a practical values+indices estimate (4B value + 4B index; a
+bitmap-coded mask costs n/8 bytes and is cheaper below d≈0.97 — we report
+min(index, bitmap) as the practical coding).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+VALUE_BYTES = 4
+
+
+@dataclasses.dataclass
+class CommLedger:
+    total_params: int                   # dense LoRA entry count (the `P` vector)
+    down_values: int = 0                # cumulative transmitted entries
+    up_values: int = 0
+    rounds: int = 0
+    down_value_bytes: float = VALUE_BYTES   # 4.0 f32, 1.0 int8, 0.5 int4...
+    up_value_bytes: float = VALUE_BYTES
+
+    def record_round(self, n_clients: int, down_nnz: float, up_nnz_total: float):
+        """down_nnz: entries sent per client on download (same global mask);
+        up_nnz_total: sum of entries uploaded across clients."""
+        self.down_values += int(down_nnz) * n_clients
+        self.up_values += int(up_nnz_total)
+        self.rounds += 1
+
+    # --- paper-faithful (values only) ---
+    @property
+    def down_bytes(self) -> int:
+        return int(self.down_values * self.down_value_bytes)
+
+    @property
+    def up_bytes(self) -> int:
+        return int(self.up_values * self.up_value_bytes)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.down_bytes + self.up_bytes
+
+    # --- practical coding (indices or bitmap, whichever is smaller) ---
+    def coded_bytes(self, values: int, per_message_params: int, messages: int) -> int:
+        idx = values * (VALUE_BYTES + 4)
+        bitmap = values * VALUE_BYTES + (per_message_params // 8) * messages
+        return min(idx, bitmap)
+
+    def dense_equivalent_bytes(self, n_clients_per_round: int) -> int:
+        """What dense LoRA would have cost over the same rounds."""
+        return self.rounds * n_clients_per_round * self.total_params * 2 * VALUE_BYTES
+
+    def comm_time(self, down_bw: float, up_bw: float, n_clients: int) -> float:
+        """Figure 3 cost model: ideal noiseless channels, per-round time =
+        (per-client download)/down_bw + (per-client upload)/up_bw, summed
+        over rounds.  Uses average per-client sizes."""
+        if self.rounds == 0:
+            return 0.0
+        down_per = self.down_bytes / (self.rounds * n_clients)
+        up_per = self.up_bytes / (self.rounds * n_clients)
+        return self.rounds * (down_per / down_bw + up_per / up_bw)
+
+
+def lora_dense_bytes(n_params: int) -> int:
+    return n_params * VALUE_BYTES

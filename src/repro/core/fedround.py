@@ -1,0 +1,194 @@
+"""The federated round — FLASC Algorithm 1 (and every baseline) as a single
+jit-able function.
+
+One call = one FL round: download-mask the dense server vector P, run n
+clients' local SGD(+momentum) epochs in parallel (vmap over the client
+axis — sharded over `data`/`pod` in the production mesh), mask each dense
+local delta for upload, (optionally DP clip+noise), aggregate, and apply
+the FedAdam server update.  All strategy logic lives in the flat global
+vector space; the model only ever sees the unflattened LoRA pytree.
+
+This function *is* the object lowered by the multi-pod dry-run for the
+`train_4k` shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp as dp_mod
+from repro.core import quantization as qz
+from repro.core import sparsity as sp
+from repro.core import strategies as st
+from repro.models.config import FederatedConfig
+from repro.optim import adam_init, adam_update
+
+LossFn = Callable[[Any, Dict[str, jax.Array]], jax.Array]
+# loss_of(trainable_tree, microbatch) -> scalar
+
+
+@dataclasses.dataclass
+class FlatMeta:
+    """Static flatten metadata for the trainable tree."""
+    treedef: Any
+    shapes: Tuple
+    p_len: int
+    rank_idx: Optional[np.ndarray] = None
+    is_b: Optional[np.ndarray] = None
+
+    @classmethod
+    def of(cls, tree, with_rank_map: bool = True):
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes = tuple((l.shape, l.dtype) for l in leaves)
+        p_len = int(sum(np.prod(s) for s, _ in shapes))
+        rk = ib = None
+        if with_rank_map:
+            rk, ib = st.rank_index_map(tree)
+        return cls(treedef, shapes, p_len, rk, ib)
+
+    def flatten(self, tree) -> jax.Array:
+        leaves = jax.tree.leaves(tree)
+        return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+    def unflatten(self, flat: jax.Array):
+        out, off = [], 0
+        for shape, dtype in self.shapes:
+            n = int(np.prod(shape))
+            out.append(flat[off:off + n].reshape(shape).astype(dtype))
+            off += n
+        return jax.tree.unflatten(self.treedef, out)
+
+
+def init_server(flatP: jax.Array):
+    return {"opt": adam_init(flatP), "round": jnp.zeros((), jnp.int32)}
+
+
+def _client_update(flat0, cbatch, m_train, up_mode, *, loss_of, meta: FlatMeta,
+                   fed: FederatedConfig, exact_topk: bool,
+                   quant_bits_up: int = 0, quant_key=None):
+    """One client's local epoch(s). cbatch leaves: (local_steps, local_bs, ...).
+    Returns (masked[, quantized] flat delta, up_nnz, mean loss)."""
+
+    def grad_step(carry, mb):
+        flat, mu = carry
+        loss, g = jax.value_and_grad(lambda f: loss_of(meta.unflatten(f), mb))(flat)
+        if m_train is not None:
+            g = g * m_train
+        mu = fed.client_momentum * mu + g
+        flat = flat - fed.client_lr * mu
+        return (flat, mu), loss
+
+    mu0 = jnp.zeros_like(flat0)
+    (flatT, _), losses = jax.lax.scan(grad_step, (flat0, mu0), cbatch)
+    delta = flat0 - flatT                                     # pseudo-gradient sign
+    mode, arg = up_mode
+    if mode == "topk":
+        delta, nnz = sp.sparsify(delta, arg, exact=exact_topk)
+    else:
+        delta = delta * arg
+        nnz = jnp.sum((delta != 0).astype(jnp.float32))
+    if quant_bits_up:
+        delta = qz.quantize_roundtrip(delta, quant_bits_up, quant_key)
+    return delta, nnz, jnp.mean(losses)
+
+
+def federated_round(flatP, server_state, sstate, client_batches, rng, *,
+                    loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
+                    spec: st.StrategySpec, spmd_axis_name=None):
+    """One round. client_batches leaves: (n_clients, local_steps, local_bs, ...).
+
+    `spmd_axis_name` (e.g. ('data',) or ('pod','data')) shards the vmapped
+    client axis across the mesh in the production lowering.
+    Returns (flatP', server_state', sstate', metrics).
+    """
+    round_idx = server_state["round"]
+    n_clients = jax.tree.leaves(client_batches)[0].shape[0]
+
+    m_down_global = st.download_mask(spec, flatP, sstate, round_idx)
+    # server-side error feedback (flasc_ef): clients start from the
+    # residual-corrected masked weights; the unsent part feeds next round.
+    P_base = flatP + sstate["e"] if spec.kind == "flasc_ef" else flatP
+
+    per_client_masks = []
+    for c in range(n_clients):
+        m_dn, m_tr, up = st.client_masks(spec, m_down_global, c, meta.p_len,
+                                         meta.rank_idx, meta.is_b)
+        per_client_masks.append((m_dn, m_tr, up))
+
+    homogeneous = spec.kind not in ("hetlora",) and not spec.client_densities
+
+    qkeys = (jax.random.split(rng, n_clients + 1)
+             if (rng is not None and (spec.quant_bits_up or spec.quant_bits_down))
+             else None)
+    if homogeneous:
+        m_dn, m_tr, up = per_client_masks[0]
+        P_c = P_base * m_dn
+        if spec.quant_bits_down:
+            P_c = qz.quantize_roundtrip(P_c, spec.quant_bits_down,
+                                        qkeys[-1] if qkeys is not None else None)
+        run = functools.partial(_client_update, loss_of=loss_of, meta=meta,
+                                fed=fed, exact_topk=spec.exact_topk,
+                                quant_bits_up=spec.quant_bits_up)
+        if qkeys is not None:
+            deltas, nnzs, losses = jax.vmap(
+                lambda cb, k: run(P_c, cb, m_tr, up, quant_key=k),
+                spmd_axis_name=spmd_axis_name)(client_batches, qkeys[:-1])
+        else:
+            deltas, nnzs, losses = jax.vmap(
+                lambda cb: run(P_c, cb, m_tr, up),
+                spmd_axis_name=spmd_axis_name)(client_batches)
+        down_nnz = jnp.sum(m_dn.astype(jnp.float32))
+    else:
+        outs = []
+        for c in range(n_clients):
+            m_dn, m_tr, up = per_client_masks[c]
+            cb = jax.tree.map(lambda x: x[c], client_batches)
+            outs.append(_client_update(P_base * m_dn, cb, m_tr, up,
+                                       loss_of=loss_of, meta=meta, fed=fed,
+                                       exact_topk=spec.exact_topk))
+        deltas = jnp.stack([o[0] for o in outs])
+        nnzs = jnp.stack([o[1] for o in outs])
+        losses = jnp.stack([o[2] for o in outs])
+        down_nnz = jnp.mean(jnp.stack(
+            [jnp.sum(m[0].astype(jnp.float32)) for m in per_client_masks]))
+
+    if fed.dp_clip > 0.0:
+        key = rng if rng is not None else jax.random.key(0)
+        pseudo_grad, _ = dp_mod.dp_aggregate(deltas, fed.dp_clip, fed.dp_noise, key)
+    else:
+        pseudo_grad = jnp.mean(deltas, axis=0)
+
+    if fed.server_opt == "adam":
+        flatP, opt = adam_update(flatP, pseudo_grad, server_state["opt"],
+                                 fed.server_lr, fed.adam_b1, fed.adam_b2,
+                                 fed.adam_eps)
+    else:   # FedAvg/FedSGD rule (paper Appendix A): W <- W - lr * mean(delta)
+        flatP = flatP - fed.server_lr * pseudo_grad
+        opt = server_state["opt"]
+    if spec.kind == "flasc_ef":
+        sstate = {"e": P_base * (1.0 - m_down_global)}   # unsent residual
+    sstate, flatP = st.update_strategy_state(spec, sstate, flatP, round_idx)
+    server_state = {"opt": opt, "round": round_idx + 1}
+
+    metrics = {
+        "loss": jnp.mean(losses),
+        "down_nnz": down_nnz,
+        "up_nnz": jnp.sum(nnzs),
+        "grad_norm": jnp.linalg.norm(pseudo_grad),
+    }
+    return flatP, server_state, sstate, metrics
+
+
+def make_round_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
+                  spec: st.StrategySpec, spmd_axis_name=None):
+    """jit-ready closure over the static pieces."""
+    def fn(flatP, server_state, sstate, client_batches, rng):
+        return federated_round(flatP, server_state, sstate, client_batches,
+                               rng, loss_of=loss_of, meta=meta, fed=fed,
+                               spec=spec, spmd_axis_name=spmd_axis_name)
+    return fn

@@ -1,0 +1,51 @@
+"""Uniform symmetric quantization for FLASC messages (beyond-paper, but the
+paper's §2 names quantization as the complementary compression family —
+FedPAQ [56], QuPeD [49]).  Composes with Top-K: mask first, then quantize
+the surviving values, so the wire format is (indices/bitmap, b-bit values,
+one f32 scale).
+
+Stochastic rounding keeps the quantizer unbiased (E[deq(q(x))] = x), which
+matters because FedAdam treats the mean delta as a pseudo-gradient.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, bits: int, key: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """x (n,) f32 -> (int levels (n,) f32-held, scale ()).  bits in [2, 8].
+    key enables stochastic rounding (unbiased); None = nearest."""
+    assert 2 <= bits <= 8, bits
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(x)) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    y = x / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, x.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -qmax - 1, qmax), scale
+
+
+def dequantize(levels: jax.Array, scale: jax.Array) -> jax.Array:
+    return levels * scale
+
+
+def quantize_roundtrip(x: jax.Array, bits: int,
+                       key: Optional[jax.Array] = None) -> jax.Array:
+    """The simulation primitive: what the receiver reconstructs."""
+    if bits <= 0 or bits >= 32:
+        return x
+    levels, scale = quantize(x, bits, key)
+    return dequantize(levels, scale)
+
+
+def message_bytes(nnz, bits: int) -> jax.Array:
+    """Wire bytes for nnz quantized values (+ 4B scale)."""
+    if bits <= 0 or bits >= 32:
+        return nnz * 4.0
+    return nnz * (bits / 8.0) + 4.0

@@ -1,0 +1,164 @@
+"""Federated finetuning strategies: FLASC and every baseline in the paper.
+
+All strategies are expressed over the *flat global vector* `P` (Algorithm 1)
+as three mask channels per round:
+
+  m_down  — applied to server weights before download
+  m_train — applied to client gradients (None = dense local finetuning)
+  m_up    — applied to the client delta before upload
+
+| strategy       | m_down              | m_train        | m_up            |
+|----------------|---------------------|----------------|-----------------|
+| lora (dense)   | 1                   | 1              | 1               |
+| flasc          | TopK(P, d_down)     | 1 (dense!)     | TopK(Δ, d_up)   |
+| flasc_ef       | TopK(P+e, d_down)   | 1              | TopK(Δ, d_up)   |
+| sparse_adapter | fixed M (after r=1) | M              | M               |
+| fedselect      | TopK(P, d) (fresh)  | m_down         | m_down          |
+| adapter_lth    | LTH mask M_t        | M_t            | M_t             |
+| ffa            | 1                   | [is B entry]   | [is B entry]    |
+| hetlora        | rank<r_c (struct.)  | m_down(c)      | m_down(c)       |
+
+`full_ft` reuses `lora` over the backbone vector.  The only strategy with
+dense local training *and* independent up/down sparsity is FLASC — exactly
+the paper's point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparsity as sp
+
+KINDS = ("lora", "flasc", "flasc_ef", "sparse_adapter", "fedselect",
+         "adapter_lth", "ffa", "hetlora")
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategySpec:
+    kind: str = "flasc"
+    density_down: float = 0.25
+    density_up: float = 0.25
+    exact_topk: bool = True
+    # Adapter-LTH schedule
+    lth_prune_every: int = 1
+    lth_keep: float = 0.98
+    # heterogeneity: per-client-slot density (flasc-het) or rank (hetlora)
+    client_densities: Tuple[float, ...] = ()
+    hetlora_ranks: Tuple[int, ...] = ()
+    # message quantization (0 = off); composes with Top-K: mask -> quantize
+    quant_bits_down: int = 0
+    quant_bits_up: int = 0
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+
+
+def rank_index_map(lora_tree) -> Tuple[np.ndarray, np.ndarray]:
+    """Static per-entry metadata for the flat view: (rank_idx, is_b).
+
+    For a leaf 'a' (..., d_in, r): rank component = position % r.
+    For a leaf 'b' (..., r, d_out): rank component = (position // d_out) % r.
+    """
+    leaves, _ = jax.tree.flatten_with_path(lora_tree)
+    rank_idx, is_b = [], []
+    for path, leaf in leaves:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        n = int(np.prod(leaf.shape))
+        pos = np.arange(n, dtype=np.int32)
+        if name == "a":
+            r = leaf.shape[-1]
+            rank_idx.append(pos % r)
+            is_b.append(np.zeros(n, np.int8))
+        elif name == "b":
+            r, d_out = leaf.shape[-2], leaf.shape[-1]
+            rank_idx.append((pos // d_out) % r)
+            is_b.append(np.ones(n, np.int8))
+        else:  # non-LoRA leaf (full_ft): no rank structure
+            rank_idx.append(np.zeros(n, np.int32))
+            is_b.append(np.ones(n, np.int8))
+    return np.concatenate(rank_idx), np.concatenate(is_b)
+
+
+def init_strategy_state(spec: StrategySpec, p_len: int):
+    if spec.kind == "flasc_ef":
+        # beyond-paper: server-side error feedback for download sparsity —
+        # the Top-K residual accumulates and is re-offered next round
+        # (EF14/EF21-style; upload-side EF is infeasible cross-device
+        # because clients are stateless across rounds).
+        return {"e": jnp.zeros((p_len,), jnp.float32)}
+    if spec.kind == "sparse_adapter":
+        return {"mask": jnp.ones((p_len,), jnp.bool_),
+                "initialized": jnp.zeros((), jnp.bool_)}
+    if spec.kind == "adapter_lth":
+        return {"mask": jnp.ones((p_len,), jnp.bool_),
+                "density": jnp.ones((), jnp.float32)}
+    return {}
+
+
+def download_mask(spec: StrategySpec, flatP, sstate, round_idx):
+    """Global (non-per-client) download mask. (p_len,) bool."""
+    if spec.kind == "flasc":
+        return sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk)
+    if spec.kind == "flasc_ef":
+        return sp.topk_mask(flatP + sstate["e"], spec.density_down,
+                            exact=spec.exact_topk)
+    if spec.kind == "fedselect":
+        return sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk)
+    if spec.kind == "sparse_adapter":
+        return sstate["mask"]
+    if spec.kind == "adapter_lth":
+        return sstate["mask"]
+    return jnp.ones_like(flatP, bool)       # lora, ffa, (hetlora handled per client)
+
+
+def client_masks(spec: StrategySpec, m_down, client_slot: int, p_len: int,
+                 rank_idx=None, is_b=None):
+    """(m_down_c, m_train_c, m_up_mode) for one client slot.
+    m_up_mode: None => TopK of delta at upload density (FLASC); otherwise a
+    fixed mask array."""
+    if spec.kind in ("flasc", "flasc_ef"):
+        d_up = spec.client_densities[client_slot] if spec.client_densities else spec.density_up
+        return m_down, None, ("topk", d_up)
+    if spec.kind == "lora":
+        return m_down, None, ("fixed", m_down)
+    if spec.kind in ("sparse_adapter", "fedselect", "adapter_lth"):
+        return m_down, m_down, ("fixed", m_down)
+    if spec.kind == "ffa":
+        m_train = jnp.asarray(is_b == 1)
+        return m_down, m_train, ("fixed", m_train)
+    if spec.kind == "hetlora":
+        r_c = spec.hetlora_ranks[client_slot]
+        m = jnp.asarray(rank_idx < r_c)
+        return m, m, ("fixed", m)
+    raise ValueError(spec.kind)
+
+
+def update_strategy_state(spec: StrategySpec, sstate, flatP, round_idx):
+    """End-of-round state transition. Returns (sstate, flatP) — Adapter-LTH
+    permanently zeroes pruned weights."""
+    if spec.kind == "sparse_adapter":
+        # paper Appx A: one dense round, then magnitude-prune once, freeze.
+        def first(_):
+            return {"mask": sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk),
+                    "initialized": jnp.ones((), jnp.bool_)}
+        def rest(_):
+            return sstate
+        sstate = jax.lax.cond(sstate["initialized"], rest, first, None)
+        return sstate, flatP
+    if spec.kind == "adapter_lth":
+        def prune(_):
+            dens = jnp.maximum(sstate["density"] * spec.lth_keep, 1e-4)
+            masked = jnp.where(sstate["mask"], jnp.abs(flatP), 0.0)
+            thr = sp.threshold_exact_dynamic(masked, dens)
+            mask = masked >= jnp.maximum(thr, 1e-38)
+            return {"mask": mask, "density": dens}
+        def keep(_):
+            return sstate
+        do = (round_idx % spec.lth_prune_every == 0) & (round_idx > 0)
+        sstate = jax.lax.cond(do, prune, keep, None)
+        return sstate, flatP * sstate["mask"]
+    return sstate, flatP

@@ -1,0 +1,3 @@
+from repro.data.datasets import TASKS, FederatedTask, make_synth_image, make_synth_text, make_synth_reddit, make_synth_flair
+from repro.data.partition import dirichlet_partition, natural_partition
+from repro.data.pipeline import sample_round, eval_batches

@@ -1,0 +1,1 @@
+from repro.federated.runtime import run_experiment, ExperimentResult, model_for_task, pretrain, evaluate

@@ -1,0 +1,82 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the pl.pallas_call kernels run natively;
+elsewhere (this CPU container, unit tests) the same kernel bodies execute
+under interpret=True — or the pure-jnp refs when shapes don't tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lora_matmul import lora_matmul_pallas
+from repro.kernels.topk_mask import BLOCK, threshold_count_pallas, topk_mask_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def topk_mask(x: jax.Array, threshold: jax.Array, use_kernel: bool = True):
+    """Magnitude-threshold mask of a flat vector. Returns (masked, nnz)."""
+    n = x.shape[0]
+    if use_kernel and n % BLOCK == 0:
+        masked, cnt = topk_mask_pallas(x, threshold, interpret=not _on_tpu())
+        return masked, cnt
+    masked = ref.topk_mask_ref(x, threshold)
+    return masked, jnp.sum((masked != 0).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("density", "iters", "use_kernel"))
+def histogram_threshold(x: jax.Array, density: float, iters: int = 24,
+                        use_kernel: bool = True):
+    """Bisection Top-K threshold using the streaming count kernel."""
+    n = x.shape[0]
+    a = jnp.abs(x)
+    k = jnp.asarray(max(int(round(n * density)), 1), jnp.float32)
+    hi = jnp.max(a)
+    lo = jnp.zeros_like(hi)
+    kernel_ok = use_kernel and n % BLOCK == 0
+
+    def count(t):
+        if kernel_ok:
+            return threshold_count_pallas(a, t, interpret=not _on_tpu()).astype(jnp.float32)
+        return ref.threshold_count_ref(a, t).astype(jnp.float32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        c = count(mid)
+        lo = jnp.where(c > k, mid, lo)
+        hi = jnp.where(c > k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def lora_matmul(x, w, a, b, scale: float):
+    """Fused y = x @ w + scale * (x @ a) @ b."""
+    M, K = x.shape
+    N = w.shape[1]
+    r = a.shape[1]
+    if M % 128 == 0 and N % 128 == 0 and K % 256 == 0 and r % 8 == 0:
+        return lora_matmul_pallas(x, w, a, b, scale, bm=128, bn=128,
+                                  bk=256, interpret=not _on_tpu())
+    return ref.lora_matmul_ref(x, w, a, b, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal: bool = True):
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    if S % 128 == 0 and T % 128 == 0:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_mask_ref(x: jax.Array, threshold: jax.Array) -> jax.Array:
+    """Magnitude-threshold masking: keep x where |x| >= threshold."""
+    return jnp.where(jnp.abs(x) >= threshold, x, jnp.zeros_like(x))
+
+
+def threshold_count_ref(x: jax.Array, threshold: jax.Array) -> jax.Array:
+    """Number of entries with |x| >= threshold (int32)."""
+    return jnp.sum((jnp.abs(x) >= threshold).astype(jnp.int32))
+
+
+def lora_matmul_ref(x, w, a, b, scale: float):
+    """y = x @ w + scale * (x @ a) @ b.
+    x (M,K), w (K,N), a (K,r), b (r,N)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    y = y + scale * jnp.dot(jnp.dot(x, a, preferred_element_type=jnp.float32)
+                            .astype(x.dtype), b,
+                            preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q (B,S,H,hd), k/v (B,T,H,hd) (kv heads pre-broadcast).  f32 softmax."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bshd,bthd->bhst", q, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(hd).astype(jnp.float32)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)

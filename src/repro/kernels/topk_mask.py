@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: magnitude-threshold masking (FLASC's sparsifier).
+
+The FLASC hot spot is `x * (|x| >= t)` over the flattened adapter vector
+(tens of millions of entries, every round, on download and per-client
+upload).  On TPU this is a pure VPU streaming op: tile the vector into
+lane-aligned blocks resident in VMEM, compare against the scalar threshold
+(prefetched to SMEM), write the masked block.  A fused count output feeds
+the histogram threshold-refinement loop so the bisection never re-reads
+the vector from HBM more than once per iteration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 64 * 1024  # 256 KiB f32 per block — comfortably inside VMEM
+
+
+def _mask_kernel(thr_ref, x_ref, out_ref, cnt_ref):
+    t = thr_ref[0]
+    x = x_ref[...]
+    keep = jnp.abs(x) >= t
+    out_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
+    cnt_ref[0] = jnp.sum(keep.astype(jnp.int32))
+
+
+def topk_mask_pallas(x: jax.Array, threshold: jax.Array, *,
+                     block: int = BLOCK, interpret: bool = False):
+    """x (n,) with n % block == 0 (pad upstream). threshold scalar.
+    Returns (masked x, kept count)."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    thr = jnp.reshape(threshold.astype(x.dtype), (1,))
+    masked, counts = pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                # threshold (broadcast)
+            pl.BlockSpec((block,), lambda i: (i,)),            # x tile
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(thr, x)
+    return masked, jnp.sum(counts)
+
+
+def _count_kernel(thr_ref, x_ref, cnt_ref):
+    cnt_ref[0] = jnp.sum((jnp.abs(x_ref[...]) >= thr_ref[0]).astype(jnp.int32))
+
+
+def threshold_count_pallas(x: jax.Array, threshold: jax.Array, *,
+                           block: int = BLOCK, interpret: bool = False):
+    """Count of |x| >= threshold (one streaming pass)."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    thr = jnp.reshape(threshold.astype(x.dtype), (1,))
+    counts = pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        interpret=interpret,
+    )(thr, x)
+    return jnp.sum(counts)

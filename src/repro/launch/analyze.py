@@ -1,0 +1,83 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Static profile of one (arch x shape): top live-buffer classes and top
+collectives with loop multiplicity — the 'profiler' of the hypothesis ->
+change -> measure loop (EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python -m repro.launch.analyze --arch xlstm-1.3b --shape train_4k
+"""
+import argparse
+import collections
+import re
+
+import numpy as np
+
+_DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "f16": 2, "s8": 1}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+
+    from repro.launch import hloprof
+    from repro.launch.dryrun import lower_combo_compiled
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    compiled, stats = lower_combo_compiled(args.arch, args.shape, mesh)
+    hlo = compiled.as_text()
+    mem = compiled.memory_analysis()
+    print(f"peak: arg={mem.argument_size_in_bytes/2**30:.2f} "
+          f"temp={mem.temp_size_in_bytes/2**30:.2f} "
+          f"out={mem.output_size_in_bytes/2**30:.2f} GiB  "
+          f"flops/dev={stats['flops']:.3e} coll/dev={stats['collective_bytes']/2**30:.1f} GiB")
+
+    # --- top buffer classes ---
+    seen = collections.Counter()
+    for m in re.finditer(r" = (\w+)\[([\d,]*)\]", hlo):
+        dt, dims = m.groups()
+        if dt not in _DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if n * _DT[dt] > 2 ** 27:
+            seen[f"{dt}[{dims}]"] += 1
+
+    def size_of(k):
+        dt = k.split("[")[0]
+        n = int(np.prod([int(d) for d in k.split("[")[1].rstrip("]").split(",")]))
+        return n * _DT[dt]
+
+    print("\ntop buffer classes (size x mentions):")
+    for k, c in sorted(seen.items(), key=lambda kv: -size_of(kv[0]))[: args.top]:
+        print(f"  {size_of(k)/2**30:8.2f} GiB x{c:4d}  {k}")
+
+    # --- top collectives (multiplicity-weighted) ---
+    comps = hloprof.parse_computations(hlo)
+    entry = next((c for c in comps if c.startswith("main")),
+                 max(comps, key=lambda c: len(comps[c].ops)))
+    mult = hloprof._multiplicities(comps, entry)
+    rows = collections.Counter()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0)
+        if not m:
+            continue
+        for op in comp.ops:
+            k = op.kind.replace("-start", "")
+            if k in ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute"):
+                _, sz = hloprof._shape_info(op.shape_str)
+                rows[(k, op.shape_str[:44], cname[:36])] += m * sz
+    print("\ntop collectives (bytes x trips):")
+    for (k, shp, cn), b in rows.most_common(args.top):
+        print(f"  {b/2**30:8.2f} GiB  {k:16s} {shp:44s} {cn}")
+
+
+if __name__ == "__main__":
+    main()

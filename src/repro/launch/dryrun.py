@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, prove memory fits, and dump cost/collective stats
+for the roofline analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+Every failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the framework, not in the dry-run.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.registry import (ARCH_IDS, LONG_CONTEXT_WINDOW, get_config,
+                                    long_500k_mode)
+from repro.core import strategies as st
+from repro.launch import steps as steps_mod
+from repro.launch import hloprof
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.shardings import (DEFAULT_RULES, activation_sharding,
+                                    fsdp_rules, spec_tree_shardings)
+from repro.models.config import INPUT_SHAPES, LoRAConfig
+from repro.models.layers import spec_to_shape_dtype
+from repro.models.model import count_params
+
+# per-device param bytes above which the FSDP overlay kicks in.  Training
+# needs headroom for activations/grads (4 GiB); serving can hold TP-resident
+# weights up to ~10 GiB — FSDP weight re-gathers per decode step are pure
+# overhead when the weights fit (measured: 15 GB of AGs per TOKEN on
+# internvl2 decode before this split).
+FSDP_BYTES_BUDGET = {"train": 4 * 2 ** 30,
+                     "prefill": 10 * 2 ** 30,
+                     "decode": 10 * 2 ** 30}
+
+
+def rules_for(cfg, mesh, kind: str):
+    """Sharding rules: TRAIN overlay for the federated round; FSDP overlay
+    when pure tensor-parallel storage would exceed the per-device budget."""
+    base = dict(steps_mod.TRAIN_RULES) if kind == "train" else dict(DEFAULT_RULES)
+    model_ways = mesh.shape.get("model", 1)
+    per_dev = count_params(cfg) * 2 / model_ways
+    if per_dev > FSDP_BYTES_BUDGET[kind]:
+        base = fsdp_rules(base)
+    return base
+
+
+def plan_for(arch: str, shape_name: str):
+    """Returns (cfg, shape, window, skip_reason)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    window = None
+    if shape_name == "long_500k":
+        mode = long_500k_mode(arch)
+        if mode == "skip":
+            return cfg, shape, None, ("whisper decoder context is 448 tokens; "
+                                      "524k decode inapplicable (DESIGN.md §4)")
+        if mode == "sliding_window":
+            window = LONG_CONTEXT_WINDOW
+    return cfg, shape, window, None
+
+
+def lower_combo_compiled(arch: str, shape_name: str, mesh, *, lora_rank: int = 16):
+    """Like lower_combo but also returns the compiled executable."""
+    stats = lower_combo(arch, shape_name, mesh, lora_rank=lora_rank,
+                        _keep=True)
+    return stats.pop("_compiled"), stats
+
+
+def lower_combo(arch: str, shape_name: str, mesh, *, lora_rank: int = 16,
+                _keep: bool = False):
+    """Lower + compile one (arch, shape) on `mesh`. Returns stats dict."""
+    cfg, shape, window, skip = plan_for(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "status": "SKIP",
+                "reason": skip}
+    lcfg = LoRAConfig(rank=lora_rank)
+    rules = rules_for(cfg, mesh, shape.kind)
+    sh = lambda tree: spec_tree_shardings(tree, mesh, rules)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        fed = steps_mod.fed_for_mesh(mesh, shape)
+        spec = st.StrategySpec(kind="flasc", density_down=0.25, density_up=0.25)
+        meta = steps_mod.abstract_flat_meta(cfg, lcfg)
+        fn = steps_mod.build_train_step(cfg, lcfg, fed, spec, meta, window=window,
+                                        spmd_axis_name=steps_mod.train_spmd_axes(mesh))
+        ins = steps_mod.train_inputs(cfg, lcfg, fed, shape)
+        args = (spec_to_shape_dtype(ins["params"]),
+                spec_to_shape_dtype(ins["flatP"]),
+                spec_to_shape_dtype(ins["server"]),
+                {},
+                spec_to_shape_dtype(ins["batches"]),
+                jax.ShapeDtypeStruct((2,), np.dtype("uint32")))
+        shardings = (sh(ins["params"]), sh(ins["flatP"]), sh(ins["server"]),
+                     {}, sh(ins["batches"]),
+                     NamedSharding(mesh, PartitionSpec(None)))
+    elif shape.kind == "prefill":
+        fn = steps_mod.build_prefill_step(cfg, lcfg, window=window)
+        ins = steps_mod.prefill_inputs(cfg, lcfg, shape)
+        args = tuple(spec_to_shape_dtype(ins[k]) for k in ("params", "lora", "batch"))
+        shardings = tuple(sh(ins[k]) for k in ("params", "lora", "batch"))
+    else:  # decode
+        fn = steps_mod.build_decode_step(cfg, lcfg, window=window)
+        ins = steps_mod.decode_inputs(cfg, lcfg, shape, window=window)
+        args = tuple(spec_to_shape_dtype(ins[k])
+                     for k in ("params", "lora", "token", "pos", "cache"))
+        shardings = tuple(sh(ins[k])
+                          for k in ("params", "lora", "token", "pos", "cache"))
+
+    donate = {"train": (1, 2), "prefill": (), "decode": (4,)}[shape.kind]
+    with activation_sharding(mesh, rules):
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    chips = mesh_chip_count(mesh)
+    hlo = compiled.as_text()
+    coll = hloprof.profile(hlo, default_group=chips)  # trip-count aware
+
+    stats = {
+        "arch": arch, "shape": shape_name, "status": "OK",
+        "mesh": dict(mesh.shape), "chips": chips,
+        "compile_s": round(t_compile, 1),
+        "flops": float(coll.pop("dot_flops")),          # per-device, trip-count aware
+        "dot_traffic_bytes": float(coll.pop("dot_traffic_bytes")),
+        "xla_flops_raw": float(cost.get("flops", 0.0)),  # XLA's (loop bodies counted once)
+        "bytes_accessed_raw": float(cost.get("bytes accessed", 0.0)),
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
+                                     + getattr(mem, "argument_size_in_bytes", 0)),
+        "cpu_upcast_bytes": int(hloprof.cpu_upcast_bytes(hlo)),
+        **coll,
+    }
+    if _keep:
+        stats["_compiled"] = compiled
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--lora-rank", type=int, default=16)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [("pod1", make_production_mesh()),
+                  ("pod2", make_production_mesh(multi_pod=True))]
+    else:
+        tag = "pod2" if args.multi_pod else "pod1"
+        meshes = [(tag, make_production_mesh(multi_pod=args.multi_pod))]
+
+    combos = ([(args.arch, args.shape)] if (args.arch and args.shape) else
+              [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES])
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for mesh_tag, mesh in meshes:
+        for arch, shape in combos:
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh_tag}.json")
+            try:
+                stats = lower_combo(arch, shape, mesh, lora_rank=args.lora_rank)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                stats = {"arch": arch, "shape": shape, "status": "FAIL",
+                         "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(stats, f, indent=1)
+            line = (f"[{mesh_tag}] {arch:20s} {shape:12s} {stats['status']:4s} ")
+            if stats["status"] == "OK":
+                peak_adj = (stats['peak_bytes_per_device']
+                            - 2 * stats['cpu_upcast_bytes'])  # double-buffered
+                line += (f"compile={stats['compile_s']:6.1f}s "
+                         f"flops={stats['flops']:.3e} "
+                         f"peak/dev={stats['peak_bytes_per_device']/2**30:6.2f}GiB "
+                         f"(tpu-adj~{max(peak_adj,0)/2**30:5.2f}) "
+                         f"coll={stats['collective_bytes']/2**30:7.3f}GiB")
+            elif stats["status"] == "SKIP":
+                line += stats["reason"][:60]
+            else:
+                line += stats["error"][:90]
+            print(line, flush=True)
+    if failures:
+        raise SystemExit(f"{failures} combos failed")
+
+
+if __name__ == "__main__":
+    main()

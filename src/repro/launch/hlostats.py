@@ -1,0 +1,95 @@
+"""Parse compiled HLO text for collective statistics.
+
+`cost_analysis()` does not expose collective traffic, so we scan the
+compiled module for collective ops and sum their *result* shape bytes,
+then convert to estimated link traffic with standard algorithm factors:
+
+  all-gather        result bytes * (n-1)/n      (ring AG)
+  reduce-scatter    result bytes * (n-1)        (operand = n * result)
+  all-reduce        result bytes * 2(n-1)/n     (RS + AG ring)
+  all-to-all        result bytes * (n-1)/n
+  collective-permute result bytes               (point-to-point)
+
+n = shards participating (parsed from replica_groups when present, else the
+total partition count).  This is the `collective_bytes` input of the
+roofline's collective term.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[\w\[\],]+(?:\{[\d,]*\})?))\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\b")
+# explicit groups: replica_groups={{0,1},{2,3},...}  -> size = len(first group)
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+# iota groups: replica_groups=[128,2]<=[256] -> (num_groups, group_size)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind.startswith("all-gather"):
+        return (n - 1) / n
+    if kind.startswith("all-reduce"):
+        return 2 * (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    if kind == "all-to-all":
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def collective_stats(hlo_text: str, default_group: int) -> Dict[str, float]:
+    """Returns per-kind and total estimated link bytes (per participating
+    device) plus op counts."""
+    bytes_by_kind: Dict[str, float] = defaultdict(float)
+    count_by_kind: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        gm = _GROUPS_EXPLICIT_RE.search(line)
+        if gm:
+            n = len(gm.group(1).split(","))
+        else:
+            gm = _GROUPS_IOTA_RE.search(line)
+            n = int(gm.group(2)) if gm else default_group
+        sz = _shape_bytes(shape_str)
+        bytes_by_kind[kind] += sz * _factor(kind, n)
+        count_by_kind[kind] += 1
+    out = {f"bytes.{k}": v for k, v in bytes_by_kind.items()}
+    out.update({f"count.{k}": float(v) for k, v in count_by_kind.items()})
+    out["collective_bytes"] = float(sum(bytes_by_kind.values()))
+    out["collective_ops"] = float(sum(count_by_kind.values()))
+    return out

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import
+to get placeholder devices; smoke tests and benches see the real single CPU.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, pods: int = 0):
+    """Small mesh for in-test dry-runs (requires enough host devices)."""
+    if pods:
+        return jax.make_mesh((pods, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    return int(mesh.devices.size)

@@ -1,0 +1,148 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh), three per-device time terms on TPU v5e:
+
+  t_compute    = dot_flops / PEAK_FLOPS          (trip-count-aware HLO dots)
+  t_memory     = dot_traffic_bytes / HBM_BW      (dot operands+results; an
+                 upper bound that ignores fusion reuse, minus the CPU-only
+                 f32 weight upcasts)
+  t_collective = collective_bytes / ICI_BW       (per-device link bytes with
+                 ring-algorithm factors)
+
+plus MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE for train; 2*N*B decode;
+2*N*tokens prefill) and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs
+(global).  The dominant term is the hillclimb target (§Perf).
+
+  PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun --md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models.config import INPUT_SHAPES
+from repro.models.model import count_params
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per-device budget used here)
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Reference useful FLOPs (global, whole step)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    cache = min(shape.seq_len, 8192) if cfg.sliding_window is None else shape.seq_len
+    attn = 4.0 * cfg.num_layers * shape.seq_len * cfg.num_heads * cfg.hd
+    return 2.0 * n_active * shape.global_batch + attn * shape.global_batch
+
+
+def load_rows(dirpath: str, mesh_tag: str) -> List[Dict]:
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPE_ORDER:
+            path = os.path.join(dirpath, f"{arch}__{shape}__{mesh_tag}.json")
+            if not os.path.exists(path):
+                continue
+            d = json.load(open(path))
+            rows.append(d)
+    return rows
+
+
+def analyse(d: Dict) -> Optional[Dict]:
+    if d.get("status") != "OK":
+        return None
+    chips = d["chips"]
+    t_c = d["flops"] / PEAK_FLOPS
+    traffic = max(d["dot_traffic_bytes"] - 2 * d.get("cpu_upcast_bytes", 0), 0.0)
+    t_m = traffic / HBM_BW
+    t_x = d["collective_bytes"] / ICI_BW
+    mf = model_flops(d["arch"], d["shape"])
+    hlo_global = d["flops"] * chips
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    total = max(terms.values())
+    return {
+        **d,
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "dominant": dom, "bound_s": total,
+        "model_flops": mf, "useful_ratio": mf / max(hlo_global, 1.0),
+        "mfu_bound": mf / (chips * PEAK_FLOPS * max(total, 1e-12)),
+    }
+
+
+NOTES = {
+    "compute": "raise arithmetic efficiency (fusion/larger tiles) or shrink redundant recompute",
+    "memory": "improve reuse (flash/blocking), cut f32 transients, fuse elementwise chains",
+    "collective": "reshard to cut AG/AR volume (SP placement, expert a2a, overlap with compute)",
+}
+
+
+def emit_markdown(rows: List[Dict]) -> str:
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant | MODEL_FLOPS | useful ratio | peak/dev GiB (tpu-adj) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d.get("status") == "SKIP":
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | SKIP | — | — | {d['reason'][:48]} |")
+            continue
+        a = analyse(d)
+        if a is None:
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | FAIL | — | — | {d.get('error','')[:48]} |")
+            continue
+        adj = max(a["peak_bytes_per_device"] - 2 * a.get("cpu_upcast_bytes", 0), 0) / 2**30
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute']:.3f} | {a['t_memory']:.3f} "
+            f"| {a['t_collective']:.3f} | **{a['dominant']}** | {a['model_flops']:.2e} "
+            f"| {a['useful_ratio']:.2f} | {a['peak_bytes_per_device']/2**30:.1f} ({adj:.1f}) |")
+    return "\n".join(out)
+
+
+def pick_hillclimb(rows: List[Dict]) -> Dict[str, str]:
+    """worst roofline fraction / most collective-bound / most representative."""
+    analysed = [a for a in (analyse(d) for d in rows) if a]
+    worst = min(analysed, key=lambda a: a["mfu_bound"])
+    coll = max(analysed, key=lambda a: a["t_collective"] / max(a["bound_s"], 1e-12))
+    rep = next(a for a in analysed if a["shape"] == "train_4k")  # paper's own regime
+    return {"worst_roofline": f"{worst['arch']}/{worst['shape']}",
+            "most_collective": f"{coll['arch']}/{coll['shape']}",
+            "representative": f"{rep['arch']}/{rep['shape']}"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.dir, args.mesh)
+    if args.md:
+        print(emit_markdown(rows))
+        print()
+        print("hillclimb picks:", json.dumps(pick_hillclimb(rows), indent=1))
+    else:
+        for d in rows:
+            a = analyse(d)
+            if a:
+                print(f"{a['arch']:20s} {a['shape']:12s} comp={a['t_compute']:8.3f}s "
+                      f"mem={a['t_memory']:8.3f}s coll={a['t_collective']:8.3f}s "
+                      f"dom={a['dominant']:10s} ratio={a['useful_ratio']:6.2f}")
+            else:
+                print(f"{d['arch']:20s} {d['shape']:12s} {d['status']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Serving launcher: batched prefill + decode for any assigned arch
+(reduced variant on CPU; the full configs are exercised via dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch hymba-1.5b --steps 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=8)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_config
+    from repro.models import model as mdl
+    from repro.models.layers import init_params
+
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(mdl.model_spec(cfg), jax.random.key(0))
+    B, S = args.batch, args.prompt_len
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.num_image_tokens, cfg.vision_embed_dim)) * 0.1
+
+    max_len = S + args.steps
+    t0 = time.time()
+    logits, cache = mdl.prefill(params, cfg, batch, max_len=max_len)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    print(f"[serve] prefill {B}x{S} in {time.time()-t0:.2f}s")
+
+    step = jax.jit(lambda t, p, c: mdl.decode_step(params, cfg, t, p, c))
+    toks = [tok]
+    t0 = time.time()
+    for i in range(args.steps - 1):
+        lg, cache = step(tok, jnp.asarray(S + i), cache)
+        tok = jnp.argmax(lg[:, 0], -1).astype(jnp.int32)
+        toks.append(tok)
+    dt = time.time() - t0
+    print(f"[serve] {args.steps - 1} decode steps in {dt:.2f}s "
+          f"({(args.steps - 1) * B / max(dt, 1e-9):.1f} tok/s)")
+    print(jnp.stack(toks, 1))
+
+
+if __name__ == "__main__":
+    main()

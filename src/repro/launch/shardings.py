@@ -1,0 +1,114 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Params and caches declare *logical* axes in their `P` specs (layers.P);
+these rules translate them to `PartitionSpec`s for a given mesh, with a
+divisibility guard: a logical axis only shards if the dim is divisible by
+the mesh-axis size (e.g. whisper's 20 heads stay replicated on a 16-wide
+model axis instead of producing an invalid sharding).
+
+`constrain` is a no-op unless an activation-sharding context is active, so
+the same model code runs on 1 CPU device in tests and at 512-way SPMD in the
+dry-run.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.layers import P
+
+# logical axis -> mesh axis name(s); tuples shard over multiple mesh axes.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "clients": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert_mlp": (),            # experts already shard over model
+    "experts": ("model",),
+    "kv_seq": ("model",),
+    "seq": ("model",),           # sequence-parallel residual stream (Megatron SP)
+    "embed": (),
+    "embed2": (),
+    "layer": (),
+}
+
+
+# FSDP overlay: weight d_model/d_ff storage dims shard over the data axes
+# too (ZeRO-3); XLA inserts the per-layer all-gathers inside the scan.  Used
+# for archs whose params exceed a per-device budget under pure TP.
+FSDP_EXTRA = {
+    "embed": ("pod", "data"),
+    # NOTE: expert_mlp stays unsharded — we1 (E, D, F) already uses
+    # experts->model and embed->data; a third mapped dim would duplicate.
+}
+
+
+def fsdp_rules(base=None):
+    return dict(base or DEFAULT_RULES, **FSDP_EXTRA)
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[dict] = None
+
+
+_CTX = _Ctx()
+
+
+def _mesh_axes(mesh: Mesh, names: Sequence[str]) -> Tuple[str, ...]:
+    return tuple(n for n in names if n in mesh.shape)
+
+
+def _axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names], dtype=np.int64)) if names else 1
+
+
+def logical_to_pspec(shape, axes, mesh: Mesh, rules=None) -> PartitionSpec:
+    rules = rules or DEFAULT_RULES
+    entries = []
+    for dim, ax in zip(shape, axes):
+        names = _mesh_axes(mesh, rules.get(ax, ())) if ax else ()
+        size = _axis_size(mesh, names)
+        if names and size > 1 and dim % size == 0:
+            entries.append(names if len(names) > 1 else names[0])
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries)
+
+
+def spec_tree_shardings(spec_tree, mesh: Mesh, rules=None):
+    """P-spec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, logical_to_pspec(p.shape, p.axes, mesh, rules)),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules=None):
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, (rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def constrain(x, logical_axes):
+    """Sharding-constrain an activation by logical axes; no-op outside an
+    activation_sharding context.  Extra leading dims (e.g. the vmapped client
+    axis) are replicated-padded on the left automatically."""
+    if _CTX.mesh is None:
+        return x
+    mesh, rules = _CTX.mesh, _CTX.rules
+    axes = tuple(logical_axes)
+    if len(axes) < x.ndim:  # leading vmap axes
+        axes = (None,) * (x.ndim - len(axes)) + axes
+    spec = logical_to_pspec(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

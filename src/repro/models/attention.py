@@ -1,0 +1,400 @@
+"""Attention variants: GQA/MQA (+qk-norm, sliding window), chunked
+flash-style attention for long prefill, MLA (DeepSeek), and decode paths.
+
+Shapes: x (B, S, D); q (B, S, H, hd); k/v (B, T, KV, hd).  GQA is computed
+with grouped einsums (no materialized KV repeat).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import P, apply_rope, linear, rms_norm
+from repro.launch.shardings import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def gqa_spec(cfg: ModelConfig, cross: bool = False):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = cfg.param_dtype
+    spec = {
+        "wq": P((D, H * hd), ("embed", "heads"), dtype=dt),
+        "wk": P((D, KV * hd), ("embed", "kv_heads"), dtype=dt),
+        "wv": P((D, KV * hd), ("embed", "kv_heads"), dtype=dt),
+        "wo": P((H * hd, D), ("heads", "embed"), dtype=dt),
+    }
+    if cfg.qk_norm and not cross:
+        spec["q_norm"] = P((hd,), (None,), init="ones", dtype=dt)
+        spec["k_norm"] = P((hd,), (None,), init="ones", dtype=dt)
+    return spec
+
+
+def mla_spec(cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = cfg.param_dtype
+    spec = {
+        "wkv_a": P((D, cfg.kv_lora_rank + rope_d), ("embed", None), dtype=dt),
+        "kv_norm": P((cfg.kv_lora_rank,), (None,), init="ones", dtype=dt),
+        "wk_b": P((cfg.kv_lora_rank, H * nope), (None, "heads"), dtype=dt),
+        "wv_b": P((cfg.kv_lora_rank, H * vd), (None, "heads"), dtype=dt),
+        "wo": P((H * vd, D), ("heads", "embed"), dtype=dt),
+    }
+    if cfg.q_lora_rank > 0:
+        spec["wq_a"] = P((D, cfg.q_lora_rank), ("embed", None), dtype=dt)
+        spec["q_norm"] = P((cfg.q_lora_rank,), (None,), init="ones", dtype=dt)
+        spec["wq_b"] = P((cfg.q_lora_rank, H * (nope + rope_d)), (None, "heads"), dtype=dt)
+    else:
+        spec["wq"] = P((D, H * (nope + rope_d)), ("embed", "heads"), dtype=dt)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_pos, k_pos, window: Optional[int] = None):
+    """Bool mask (..., S, T): True = attend."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# core attention (full / chunked)
+# ---------------------------------------------------------------------------
+
+def _grouped_scores(q, k, scale):
+    """q (B,S,KV,G,hd), k (B,T,KV,hd) -> (B,KV,G,S,T) in f32."""
+    return jnp.einsum("bskgh,btkh->bkgst", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _grouped_out(probs, v):
+    """probs (B,KV,G,S,T), v (B,T,KV,hd) -> (B,S,KV,G,hd)."""
+    return jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+
+
+def full_attention(q, k, v, mask, scale):
+    """q (B,S,H,hd) grouped against k/v (B,T,KV,hd). mask (S,T) or (B,S,T)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    scores = _grouped_scores(qg, k, scale)
+    if mask is not None:
+        m = mask if mask.ndim == 2 else mask[:, None, None]
+        scores = jnp.where(m if mask.ndim != 2 else mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _grouped_out(probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def chunked_attention(q, k, v, scale, *, causal: bool,
+                      window: Optional[int], cq: int, ckv: int,
+                      q_offset: int = 0):
+    """Flash-style online-softmax attention, chunked over both q and kv.
+
+    Memory is O(cq * ckv) per (head, chunk) instead of O(S*T).  This is the
+    pure-jnp oracle for the Pallas flash kernel (kernels/flash_attention.py)
+    and the path used for >=32k prefill.
+    q (B,S,H,hd); k,v (B,T,KV,hd). q tokens are at positions q_offset + i.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]                    # value head dim may differ (MLA)
+    G = H // KV
+    cq = min(cq, S)
+    ckv = min(ckv, T)
+    assert S % cq == 0 and T % ckv == 0, (S, cq, T, ckv)
+    nq, nkv = S // cq, T // ckv
+
+    qg = q.reshape(B, nq, cq, KV, G, hd)
+    kc = k.reshape(B, nkv, ckv, KV, hd)
+    vc = v.reshape(B, nkv, ckv, KV, hdv)
+    q_pos_all = q_offset + jnp.arange(S).reshape(nq, cq)
+    k_pos_all = jnp.arange(T).reshape(nkv, ckv)
+
+    def make_kv_step(qi, q_pos):
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            kj, vj, k_pos = inp
+            s = _grouped_scores(qi, kj, scale)            # (B,KV,G,cq,ckv)
+            if causal:
+                msk = causal_mask(q_pos, k_pos, window)
+                s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] \
+                + _grouped_out_f32(p, vj)
+            return (m_new, l_new, acc), None
+        return kv_step
+
+    def init_carry():
+        return (jnp.full((B, KV, G, cq), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, cq), jnp.float32),
+                jnp.zeros((B, cq, KV, G, hdv), jnp.float32))
+
+    def finish(m, l, acc):
+        return acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+
+    # Block-level causal skipping pays off only for few q chunks (train-length
+    # MLA: nq=4 → −9..13% step cost). At 32k prefill (nq=32) the unrolled
+    # chunks each re-gather the seq-sharded KV panels under SPMD, doubling
+    # collective+peak — measured and REFUTED, so the fused lax.map loop stays
+    # the prefill path (see EXPERIMENTS.md §Perf).
+    if causal and q_offset == 0 and S == T and nq <= 8:
+        outs = []
+        for i in range(nq):
+            hi = min(((i + 1) * cq + ckv - 1) // ckv, nkv)
+            lo = 0 if window is None else max((i * cq - window) // ckv, 0)
+            step = make_kv_step(qg[:, i], q_pos_all[i])
+
+            def body(j, carry, _lo=lo, _step=step):
+                kj = jax.lax.dynamic_index_in_dim(kc, _lo + j, 1, False)
+                vj = jax.lax.dynamic_index_in_dim(vc, _lo + j, 1, False)
+                kp = jax.lax.dynamic_index_in_dim(k_pos_all, _lo + j, 0, False)
+                return _step(carry, (kj, vj, kp))[0]
+
+            m, l, acc = jax.lax.fori_loop(0, hi - lo, body, init_carry())
+            outs.append(finish(m, l, acc))
+        out = jnp.stack(outs, axis=0)       # chunk-major, like lax.map
+    else:
+        def one_q_chunk(args):
+            qi, q_pos = args        # (B,cq,KV,G,hd), (cq,)
+            (m, l, acc), _ = jax.lax.scan(make_kv_step(qi, q_pos), init_carry(),
+                                          (kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+                                           k_pos_all))
+            return finish(m, l, acc)
+
+        out = jax.lax.map(one_q_chunk, (qg.swapaxes(0, 1), q_pos_all))
+    out = out.swapaxes(0, 1).reshape(B, S, H, hdv)
+    return out.astype(q.dtype)
+
+
+def _grouped_out_f32(probs, v):
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+def decode_attention(q1, k, v, scale, *, valid=None):
+    """Single-token decode: q1 (B,1,H,hd), k/v (B,T,KV,hd) (T may be
+    seq-sharded over the `model` axis; the softmax reductions lower to
+    cheap all-reduces rather than a cache gather).  `valid` (T,) bool masks
+    unfilled cache slots."""
+    B, _, H, hd = q1.shape
+    T, KV = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    qg = q1.reshape(B, 1, KV, H // KV, hd)
+    s = _grouped_scores(qg, k, scale)                 # (B,KV,G,1,T)
+    if valid is not None:
+        s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _grouped_out(p, v).reshape(B, 1, H, hdv)
+    return out
+
+
+def cache_valid_mask(T: int, pos):
+    """Valid cache slots after writing at slot (pos % T): every slot j <= pos,
+    or all slots once a rolling buffer has wrapped (pos >= T)."""
+    return (jnp.arange(T) <= pos) | (pos >= T)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention module
+# ---------------------------------------------------------------------------
+
+def _maybe_qk_norm(params, q, k, cfg):
+    if cfg.qk_norm and "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k
+
+
+def gqa_forward(params, x, cfg: ModelConfig, *, lora=None, lora_scale=1.0,
+                positions=None, window=None, causal=True, kv_from=None,
+                return_kv=False):
+    """Self (or cross, via kv_from) attention over a full sequence."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    lget = (lora or {}).get
+    kv_src = x if kv_from is None else kv_from
+    T = kv_src.shape[1]
+    q = linear(x, params["wq"], lget("wq"), lora_scale).reshape(B, S, H, hd)
+    k = linear(kv_src, params["wk"], lget("wk"), lora_scale).reshape(B, T, KV, hd)
+    v = linear(kv_src, params["wv"], lget("wv"), lora_scale).reshape(B, T, KV, hd)
+    q, k = _maybe_qk_norm(params, q, k, cfg)
+    if positions is None:
+        positions = jnp.arange(S)
+    if kv_from is None:  # self-attention: rope on both
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd)
+    if causal and S >= cfg.chunked_attn_threshold:
+        # pin head-sharded layout through the q-chunk loop: otherwise the
+        # block-exit seq constraint propagates inward and XLA re-gathers the
+        # whole KV panel on every chunk iteration (measured: 1.8 TB/step on
+        # gemma prefill_32k).
+        q = constrain(q, ("batch", None, "heads", None))
+        k = constrain(k, ("batch", None, "kv_heads", None))
+        v = constrain(v, ("batch", None, "kv_heads", None))
+        out = chunked_attention(q, k, v, scale, causal=True, window=window,
+                                cq=cfg.attn_chunk_q, ckv=cfg.attn_chunk_kv)
+        out = constrain(out, ("batch", None, "heads", None))
+    else:
+        mask = causal_mask(positions, jnp.arange(T), window) if causal else None
+        out = full_attention(q, k, v, mask, scale)
+    y = linear(out.reshape(B, S, H * hd), params["wo"], lget("wo"), lora_scale)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode(params, x1, cache, pos, cfg: ModelConfig, *, lora=None,
+               lora_scale=1.0, window=None, update_cache=True):
+    """One-token decode. cache = (k, v) with k/v (B, T, KV, hd); for
+    sliding-window archs T == window (rolling buffer, slot = pos % window)."""
+    B, _, D = x1.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    lget = (lora or {}).get
+    k_cache, v_cache = cache
+    T = k_cache.shape[1]
+    q = linear(x1, params["wq"], lget("wq"), lora_scale).reshape(B, 1, H, hd)
+    k = linear(x1, params["wk"], lget("wk"), lora_scale).reshape(B, 1, KV, hd)
+    v = linear(x1, params["wv"], lget("wv"), lora_scale).reshape(B, 1, KV, hd)
+    q, k = _maybe_qk_norm(params, q, k, cfg)
+    q = apply_rope(q, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    k = apply_rope(k, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    if update_cache:
+        slot = (pos % T).astype(jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, 1)
+    scale = 1.0 / math.sqrt(hd)
+    out = decode_attention(q, k_cache, v_cache, scale,
+                           valid=cache_valid_mask(T, pos))
+    y = linear(out.reshape(B, 1, H * hd), params["wo"], lget("wo"), lora_scale)
+    return y, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def _mla_q(params, x, cfg, lget, lora_scale):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank > 0:
+        qc = linear(x, params["wq_a"], lget("wq_a"), lora_scale)
+        qc = rms_norm(qc, params["q_norm"], cfg.norm_eps)
+        # gather the compressed q over seq (cheap), keep heads sharded local
+        qc = constrain(qc, ("batch", None, None))
+        q = linear(qc, params["wq_b"], lget("wq_b"), lora_scale)
+    else:
+        q = linear(x, params["wq"], lget("wq"), lora_scale)
+    q = q.reshape(B, S, H, nope + rope_d)
+    return q[..., :nope], q[..., nope:]
+
+
+def mla_forward(params, x, cfg: ModelConfig, *, lora=None, lora_scale=1.0,
+                positions=None, window=None, return_kv=False):
+    """Training/prefill MLA. Cache entries are (c_kv, k_rope)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lget = (lora or {}).get
+    if positions is None:
+        positions = jnp.arange(S)
+
+    q_nope, q_rope = _mla_q(params, x, cfg, lget, lora_scale)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = linear(x, params["wkv_a"], lget("wkv_a"), lora_scale)
+    c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    # MLA's whole point: the seq-gather happens on the COMPRESSED kv
+    # (kv_lora_rank + rope dims), never on per-head K/V.
+    c_kv = constrain(c_kv, ("batch", None, None))
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta, head_axis=False)  # (B,S,rope_d) shared
+    k_rope = constrain(k_rope, ("batch", None, None))
+
+    k_nope = linear(c_kv, params["wk_b"], lget("wk_b"), lora_scale).reshape(B, S, H, nope)
+    v = linear(c_kv, params["wv_b"], lget("wv_b"), lora_scale).reshape(B, S, H, vd)
+
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    if S >= cfg.chunked_attn_threshold:
+        # fold shared k_rope into per-head keys for the chunked kernel
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, rope_d))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        q_full = constrain(q_full, ("batch", None, "heads", None))
+        k_full = constrain(k_full, ("batch", None, "heads", None))
+        v = constrain(v, ("batch", None, "heads", None))
+        out = chunked_attention(q_full, k_full, v, scale, causal=True,
+                                window=window, cq=cfg.attn_chunk_q,
+                                ckv=cfg.attn_chunk_kv)
+        out = constrain(out, ("batch", None, "heads", None))
+    else:
+        s = jnp.einsum("bshd,bthd->bhst", q_nope, k_nope,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bshd,btd->bhst", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+        s *= scale
+        s = jnp.where(causal_mask(positions, positions, window), s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)
+    y = linear(out.reshape(B, S, H * vd), params["wo"], lget("wo"), lora_scale)
+    if return_kv:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_decode(params, x1, cache, pos, cfg: ModelConfig, *, lora=None,
+               lora_scale=1.0, window=None, update_cache=True):
+    """Absorbed-matrix MLA decode: attends directly over the compressed
+    cache (c_kv, k_rope) without materializing per-head K/V for the past."""
+    B = x1.shape[0]
+    H = cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    R = cfg.kv_lora_rank
+    lget = (lora or {}).get
+    c_cache, r_cache = cache                       # (B,T,R), (B,T,rope_d)
+    T = c_cache.shape[1]
+
+    q_nope, q_rope = _mla_q(params, x1, cfg, lget, lora_scale)
+    q_rope = apply_rope(q_rope, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+
+    kv = linear(x1, params["wkv_a"], lget("wkv_a"), lora_scale)
+    c_new = rms_norm(kv[..., :R], params["kv_norm"], cfg.norm_eps)
+    r_new = apply_rope(kv[..., R:], pos[None] if pos.ndim == 0 else pos, cfg.rope_theta, head_axis=False)
+    if update_cache:
+        slot = (pos % T).astype(jnp.int32)
+        c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new.astype(c_cache.dtype), slot, 1)
+        r_cache = jax.lax.dynamic_update_slice_in_dim(r_cache, r_new.astype(r_cache.dtype), slot, 1)
+
+    wk_b = params["wk_b"].reshape(R, H, nope)
+    wv_b = params["wv_b"].reshape(R, H, vd)
+    # absorb W_uk into the query: q_c (B,1,H,R)
+    q_c = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b.astype(q_nope.dtype))
+    s = jnp.einsum("bshr,btr->bhst", q_c, c_cache,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bshd,btd->bhst", q_rope, r_cache,
+                    preferred_element_type=jnp.float32)
+    s *= 1.0 / math.sqrt(nope + rope_d)
+    s = jnp.where(cache_valid_mask(T, pos), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhst,btr->bshr", p.astype(c_cache.dtype), c_cache)
+    out = jnp.einsum("bshr,rhd->bshd", o_c, wv_b.astype(o_c.dtype))
+    y = linear(out.reshape(B, 1, H * vd), params["wo"], lget("wo"), lora_scale)
+    return y, (c_cache, r_cache)

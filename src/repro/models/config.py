@@ -1,0 +1,194 @@
+"""Model configuration for the repro model family.
+
+A single config dataclass drives every assigned architecture (dense / MoE /
+SSM / hybrid / VLM / audio).  Block layout is expressed as a *pattern*: a
+periodic sequence of block kinds that is scanned over (params stacked on a
+leading layer axis per kind-group), which keeps HLO size independent of depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+# Block kinds
+ATTN_MLP = "attn_mlp"        # standard transformer block (attention + MLP)
+ATTN_MOE = "attn_moe"        # attention + MoE FFN
+MLSTM = "mlstm"              # xLSTM matrix-LSTM block
+SLSTM = "slstm"              # xLSTM scalar-LSTM block (sequential)
+HYBRID = "hybrid"            # Hymba-style parallel attention + Mamba heads
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int                        # dense FFN width (0 for pure-SSM archs)
+    vocab_size: int
+
+    head_dim: Optional[int] = None   # default: d_model // num_heads
+    activation: str = "swiglu"       # swiglu | geglu | gelu
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # Sliding-window attention (enables long_500k decode for dense archs).
+    sliding_window: Optional[int] = None
+
+    # --- Multi-head Latent Attention (DeepSeek V2/V3) ---
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0             # 0 => direct q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                # per-expert FFN width
+    dense_d_ff: int = 0              # FFN width for the leading dense layers (MoE models)
+    first_k_dense: int = 0           # leading dense-FFN layers
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.001
+
+    # --- SSM / xLSTM / hybrid ---
+    ssm_state_size: int = 16
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    slstm_every: int = 0             # xLSTM: 1 sLSTM per `slstm_every` blocks
+    mlstm_chunk: int = 64            # chunk length for parallel mLSTM form
+
+    # --- encoder-decoder (whisper) ---
+    encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq: int = 1500          # fixed encoder length (audio frames)
+
+    # --- VLM ---
+    num_image_tokens: int = 0        # image-embedding positions (stub frontend)
+    vision_embed_dim: int = 0        # raw patch-embedding dim before projector
+
+    # --- Multi-token prediction (DeepSeek V3) ---
+    mtp_depth: int = 0
+
+    # --- paper-experiment models (ViT classifier / GPT2-style LM) ---
+    num_classes: int = 0             # >0 => encoder classifier head (ViT)
+    use_learned_pos: bool = False    # learned absolute positions (GPT2)
+    max_seq: int = 0                 # size of learned position table
+    embed_inputs: bool = False       # inputs are precomputed embeddings (stub frontends)
+
+    # --- attention compute policy ---
+    attn_chunk_q: int = 1024         # query-chunk size for chunked attention
+    attn_chunk_kv: int = 1024
+    chunked_attn_threshold: int = 8192  # use chunked (flash-style) attn at/after this seq
+
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0 or self.use_mla
+
+    # ---- derived ----
+    @property
+    def hd(self) -> int:
+        return self.head_dim
+
+    @property
+    def group_size(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def block_pattern(self) -> Tuple[str, ...]:
+        """Periodic block-kind pattern (one period)."""
+        if self.family in ("ssm",) and self.slstm_every:
+            return tuple([MLSTM] * (self.slstm_every - 1) + [SLSTM])
+        if self.family == "hybrid":
+            return (HYBRID,)
+        if self.num_experts > 0:
+            return (ATTN_MOE,)
+        return (ATTN_MLP,)
+
+    def layer_groups(self) -> Sequence[Tuple[str, int]]:
+        """(kind, count) groups that are each scanned. MoE models with
+        first_k_dense get a leading dense group."""
+        groups = []
+        if self.num_experts > 0 and self.first_k_dense > 0:
+            groups.append((ATTN_MLP, self.first_k_dense))
+            groups.append((ATTN_MOE, self.num_layers - self.first_k_dense))
+            return groups
+        pat = self.block_pattern()
+        if len(pat) == 1:
+            return [(pat[0], self.num_layers)]
+        # periodic pattern: scan over periods of super-blocks
+        assert self.num_layers % len(pat) == 0, (self.name, pat)
+        return [("period:" + ",".join(pat), self.num_layers // len(pat))]
+
+    def param_count(self) -> int:
+        """Approximate backbone parameter count (for roofline MODEL_FLOPS)."""
+        from repro.models.model import count_params  # lazy, avoids cycle
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params
+        return count_params(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 16
+    alpha: float = 32.0
+    # which linear maps get adapters; names match block param keys
+    targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo")
+    dtype: str = "float32"
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = InputShape("train_4k", 4096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524288, 1, "decode")
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedConfig:
+    """One FLASC round, as lowered by train_step."""
+    n_clients: int = 16
+    local_batch: int = 16
+    local_steps: int = 1
+    client_lr: float = 5e-4
+    client_momentum: float = 0.9
+    server_lr: float = 1e-3
+    server_opt: str = "adam"         # adam (FedAdam) | sgd (FedAvg rule, Appx A)
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    density_down: float = 0.25
+    density_up: float = 0.25
+    # differential privacy (0 => off)
+    dp_clip: float = 0.0
+    dp_noise: float = 0.0
+
+    def split_batch(self, global_batch: int):
+        n = min(self.n_clients, max(global_batch // self.local_batch, 1))
+        lb = global_batch // n
+        assert n * lb == global_batch, (global_batch, n, lb)
+        return n, lb

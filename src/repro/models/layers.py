@@ -1,0 +1,203 @@
+"""Parameter-spec machinery and basic layers (pure JAX, functional).
+
+Params are nested dicts of arrays. Every leaf is declared as a `P` spec
+carrying shape, logical axes and an init kind; from the same spec tree we
+derive (a) abstract ShapeDtypeStructs for the dry-run, (b) random inits for
+smoke tests/training, and (c) PartitionSpecs via the logical-axis rules in
+repro.launch.shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Declarative parameter spec."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis names, len == len(shape)
+    init: str = "normal"                  # normal | zeros | ones | embed
+    dtype: str = "bfloat16"
+    fan_in: Optional[int] = None          # override for scaled init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec_to_shape_dtype(spec_tree):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype)),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def init_param(p: P, key) -> jax.Array:
+    dt = jnp.dtype(p.dtype)
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dt)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dt)
+    if p.init == "embed":
+        return (jax.random.normal(key, p.shape, jnp.float32) * 0.02).astype(dt)
+    fan_in = p.fan_in if p.fan_in is not None else (p.shape[-2] if len(p.shape) >= 2 else p.shape[-1])
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(spec_tree, key):
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [init_param(p, k) for p, k in zip(leaves, keys)])
+
+
+def stack_spec(spec_tree, n: int, axis_name: str = "layer"):
+    """Prepend a stacked (scanned) layer axis to every leaf spec."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (axis_name,) + p.axes, p.init, p.dtype, p.fan_in),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def param_bytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    return sum(int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize for p in leaves)
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+# ---------------------------------------------------------------------------
+# basic ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def linear(x, w, lora=None, scale=1.0):
+    """y = x @ w (+ LoRA path). w: (d_in, d_out); lora: {'a': (d_in, r), 'b': (r, d_out)}."""
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    if lora is not None:
+        xa = jnp.einsum("...i,ir->...r", x.astype(lora["a"].dtype), lora["a"])
+        y = y + (scale * jnp.einsum("...r,ro->...o", xa, lora["b"])).astype(y.dtype)
+    return y
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {
+    "swiglu": jax.nn.silu,
+    "geglu": gelu,
+    "gelu": gelu,
+}
+
+
+def mlp_spec(d_model: int, d_ff: int, activation: str, dtype: str):
+    gated = activation in ("swiglu", "geglu")
+    spec = {
+        "w1": P((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "w2": P((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+    }
+    if gated:
+        spec["w3"] = P((d_model, d_ff), ("embed", "mlp"), dtype=dtype)
+    return spec
+
+
+def mlp_apply(params, x, activation: str, lora=None, lora_scale=1.0):
+    act = ACTIVATIONS[activation]
+    lget = (lora or {}).get
+    h = linear(x, params["w1"], lget("w1"), lora_scale)
+    if "w3" in params:
+        h = act(h) * linear(x, params["w3"], lget("w3"), lora_scale)
+    else:
+        h = act(h)
+    return linear(h, params["w2"], lget("w2"), lora_scale)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float, *, head_axis: Optional[bool] = None):
+    """x: (..., S, H, hd) (head_axis=True) or (..., S, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    positions = jnp.asarray(positions)
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    if head_axis is None:
+        head_axis = x.ndim >= angles.ndim + 1
+    if head_axis:                                            # insert head axis
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def chunked_softmax_ce(x, head, labels, mask=None, chunk: int = 1024):
+    """Mean token CE of `x @ head` without materializing (N, V) logits.
+
+    x (..., D) hidden states; head (D, V); labels (...) int32.  Tokens are
+    flattened and processed in `chunk`-sized slices under a rematerialized
+    scan, so peak memory is O(chunk * V) instead of O(N * V) — the standard
+    vocab-loss chunking every production framework applies (the f32 logits
+    of a 256k vocab otherwise dominate training memory).
+    """
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    lf = labels.reshape(-1)
+    mf = jnp.ones_like(lf, jnp.float32) if mask is None else mask.reshape(-1).astype(jnp.float32)
+    n = xf.shape[0]
+    if n <= chunk:
+        logits = jnp.einsum("nd,dv->nv", xf, head.astype(xf.dtype),
+                            preferred_element_type=jnp.float32)
+        return cross_entropy(logits, lf, mf)
+    pad = (-n) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        lf = jnp.pad(lf, (0, pad))
+        mf = jnp.pad(mf, (0, pad))
+    nc = xf.shape[0] // chunk
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = jnp.einsum("nd,dv->nv", xc, head.astype(xc.dtype),
+                            preferred_element_type=jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+        nll = (logz - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xf.reshape(nc, chunk, D), lf.reshape(nc, chunk), mf.reshape(nc, chunk)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy. logits (..., V) f32-upcast, labels int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

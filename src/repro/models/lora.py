@@ -1,0 +1,171 @@
+"""LoRA injection, mirrored pytrees, merge/unmerge, flatten utilities.
+
+The LoRA tree mirrors the backbone param tree but contains only targeted
+linear leaves, each replaced by {'a': (.., d_in, r), 'b': (.., r, d_out)}
+(stacked layer dims are preserved).  `b` inits to zero (ΔW = 0 at start).
+
+The flatten/unflatten pair gives the *global vector* view `P` used by the
+paper's Top-K sparsity (Algorithm 1 flattens and concatenates all adapters).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import LoRAConfig, ModelConfig
+from repro.models.layers import P
+from repro.models import model as mdl
+
+# generic target name -> per-attention-variant param keys
+_MLA_TARGET_MAP = {"wq": ("wq", "wq_b"), "wk": ("wkv_a",), "wv": ("wv_b",), "wo": ("wo",)}
+# recurrent cores (xLSTM / Mamba): map the generic q/k/v/o targets onto the
+# block's input/gate/output projections so FLASC applies to attention-free
+# archs too (DESIGN.md §4).
+_CORE_TARGET_MAP = {"wq": ("wq", "wx", "in_proj"), "wk": ("wk",),
+                    "wv": ("wv",), "wo": ("down", "out_proj")}
+
+
+def _targets_for(attn_spec: Dict[str, Any], targets, use_mla: bool):
+    keys = []
+    for t in targets:
+        if use_mla:
+            for k in _MLA_TARGET_MAP.get(t, (t,)):
+                if k in attn_spec:
+                    keys.append(k)
+        elif t in attn_spec:
+            keys.append(t)
+    return keys
+
+
+def _lora_pair(w: P, rank: int, dtype: str):
+    """w is a (possibly layer-stacked) 2D linear spec (..., d_in, d_out)."""
+    lead = w.shape[:-2]
+    lead_axes = w.axes[:-2]
+    d_in, d_out = w.shape[-2:]
+    return {
+        "a": P(lead + (d_in, rank), lead_axes + (None, None), init="normal",
+               dtype=dtype, fan_in=d_in),
+        "b": P(lead + (rank, d_out), lead_axes + (None, None), init="zeros",
+               dtype=dtype),
+    }
+
+
+def lora_spec(cfg: ModelConfig, lcfg: LoRAConfig):
+    """Mirrored spec tree with LoRA pairs for every targeted weight."""
+    spec = mdl.model_spec(cfg)
+    out: Dict[str, Any] = {}
+
+    def handle_block(bspec):
+        b_out = {}
+        for section in ("attn", "cross"):
+            if section not in bspec:
+                continue
+            keys = _targets_for(bspec[section], lcfg.targets, cfg.use_mla and section == "attn")
+            sec = {k: _lora_pair(bspec[section][k], lcfg.rank, lcfg.dtype) for k in keys}
+            if sec:
+                b_out[section] = sec
+        if "mlp" in bspec and any(t in ("w1", "w2", "w3") for t in lcfg.targets):
+            sec = {k: _lora_pair(bspec["mlp"][k], lcfg.rank, lcfg.dtype)
+                   for k in lcfg.targets if k in bspec["mlp"]}
+            if sec:
+                b_out["mlp"] = sec
+        for section in ("core", "mamba"):
+            if section not in bspec:
+                continue
+            keys = []
+            for t in lcfg.targets:
+                for k in _CORE_TARGET_MAP.get(t, ()):
+                    if k in bspec[section]:
+                        keys.append(k)
+            sec = {k: _lora_pair(bspec[section][k], lcfg.rank, lcfg.dtype)
+                   for k in keys}
+            if sec:
+                b_out[section] = sec
+        return b_out
+
+    import re
+    groups = {}
+    for g, gspec in spec["groups"].items():
+        if all(re.fullmatch(r"b\d+", k) for k in gspec):   # super-block (period) group
+            sub = {}
+            for bk, bspec in gspec.items():
+                h = handle_block(bspec)
+                if h:
+                    sub[bk] = h
+            if sub:
+                groups[g] = sub
+        else:
+            h = handle_block(gspec)
+            if h:
+                groups[g] = h
+    out = groups
+    if cfg.encoder_decoder and "encoder" in spec:
+        h = handle_block({k: v for k, v in spec["encoder"]["g0"].items()})
+        if h:
+            out["encoder"] = h
+    return out
+
+
+def init_lora(cfg: ModelConfig, lcfg: LoRAConfig, key):
+    from repro.models.layers import init_params
+    return init_params(lora_spec(cfg, lcfg), key)
+
+
+def merge_lora(params, lora, cfg: ModelConfig, lcfg: LoRAConfig):
+    """Fold ΔW = a @ b * scale into the backbone (for serving)."""
+    merged = jax.tree.map(lambda x: x, params)  # shallow copy tree
+
+    def fold(w, pair):
+        delta = jnp.einsum("...ir,...ro->...io", pair["a"], pair["b"]) * lcfg.scale
+        return (w.astype(jnp.float32) + delta).astype(w.dtype)
+
+    def walk(ptree, ltree):
+        for k, v in ltree.items():
+            if isinstance(v, dict) and set(v.keys()) == {"a", "b"}:
+                ptree[k] = fold(ptree[k], v)
+            else:
+                walk(ptree[k], v)
+
+    groups = dict(merged["groups"])
+    merged = dict(merged)
+    for g, gl in lora.items():
+        if g == "encoder":
+            enc = dict(merged["encoder"])
+            g0 = jax.tree.map(lambda x: x, enc["g0"])
+            walk(g0, gl)
+            enc["g0"] = g0
+            merged["encoder"] = enc
+        else:
+            gp = jax.tree.map(lambda x: x, groups[g])
+            walk(gp, gl)
+            groups[g] = gp
+    merged["groups"] = groups
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# flat global-vector view (Algorithm 1's `P`)
+# ---------------------------------------------------------------------------
+
+def flatten_lora(lora) -> Tuple[jax.Array, Any]:
+    leaves, treedef = jax.tree.flatten(lora)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    meta = (treedef, [(l.shape, l.dtype) for l in leaves])
+    return flat, meta
+
+
+def unflatten_lora(flat, meta):
+    treedef, shapes = meta
+    out, off = [], 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape))
+        out.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def lora_size(lora) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(lora))

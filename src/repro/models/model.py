@@ -1,0 +1,570 @@
+"""Model assembly: block specs, scanned stacks, train/prefill/decode.
+
+Every architecture is a composition of block kinds (config.block_pattern).
+Per-kind params are stacked on a leading layer axis and driven by `lax.scan`
+with per-layer remat — HLO size stays O(1) in depth, activation memory is
+O(layers) boundaries only.  LoRA adapters ride along as a mirrored pytree
+(possibly with an extra leading client axis added by vmap in the federated
+round).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import (ATTN_MLP, ATTN_MOE, HYBRID, MLSTM, SLSTM,
+                                 ModelConfig)
+from repro.models.layers import (P, chunked_softmax_ce, cross_entropy,
+                                 linear, mlp_apply, mlp_spec, rms_norm,
+                                 stack_spec)
+from repro.launch.shardings import constrain
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def _dense_ff(cfg: ModelConfig) -> int:
+    return cfg.dense_d_ff if getattr(cfg, "dense_d_ff", 0) else cfg.d_ff
+
+
+def block_spec(cfg: ModelConfig, kind: str, cross: bool = False):
+    D, dt = cfg.d_model, cfg.param_dtype
+    norm = lambda: P((D,), ("embed",), init="ones", dtype=dt)
+    if kind in (ATTN_MLP, ATTN_MOE):
+        spec = {"attn_norm": norm(),
+                "attn": A.mla_spec(cfg) if cfg.use_mla else A.gqa_spec(cfg)}
+        if cross:
+            spec["cross_norm"] = norm()
+            spec["cross"] = A.gqa_spec(cfg, cross=True)
+        spec["mlp_norm"] = norm()
+        if kind == ATTN_MOE:
+            spec["moe"] = M.moe_spec(cfg)
+        else:
+            spec["mlp"] = mlp_spec(D, _dense_ff(cfg), cfg.activation, dt)
+        return spec
+    if kind == MLSTM:
+        return {"norm": norm(), "core": S.mlstm_spec(cfg)}
+    if kind == SLSTM:
+        return {"norm": norm(), "core": S.slstm_spec(cfg)}
+    if kind == HYBRID:
+        return {"attn_norm": norm(),
+                "attn": A.gqa_spec(cfg),
+                "mamba": S.mamba_spec(cfg),
+                "comb_norm_a": norm(), "comb_norm_m": norm(),
+                "w_comb": P((2,), (None,), init="ones", dtype="float32"),
+                "mlp_norm": norm(),
+                "mlp": mlp_spec(D, cfg.d_ff, cfg.activation, dt)}
+    raise ValueError(kind)
+
+
+def _group_kinds(cfg: ModelConfig):
+    out = []
+    for kind, count in cfg.layer_groups():
+        if kind.startswith("period:"):
+            out.append((tuple(kind[len("period:"):].split(",")), count))
+        else:
+            out.append(((kind,), count))
+    return out
+
+
+def model_spec(cfg: ModelConfig):
+    D, V, dt = cfg.d_model, cfg.vocab_size, cfg.param_dtype
+    spec: Dict[str, Any] = {}
+    if not cfg.embed_inputs:
+        spec["embed"] = P((V, D), ("vocab", "embed"), init="embed", dtype=dt)
+    if cfg.use_learned_pos:
+        spec["pos_embed"] = P((cfg.max_seq, D), (None, "embed"), init="embed", dtype=dt)
+    if cfg.num_image_tokens > 0:
+        spec["projector"] = {
+            "w1": P((cfg.vision_embed_dim, D), (None, "embed"), dtype=dt),
+            "w2": P((D, D), ("embed", "embed2"), dtype=dt),
+        }
+    if cfg.encoder_decoder:
+        enc = {"g0": stack_spec(block_spec(cfg, ATTN_MLP), cfg.num_encoder_layers),
+               "norm": P((D,), ("embed",), init="ones", dtype=dt)}
+        spec["encoder"] = enc
+    groups = {}
+    for gi, (kinds, count) in enumerate(_group_kinds(cfg)):
+        if len(kinds) == 1:
+            gspec = block_spec(cfg, kinds[0], cross=cfg.encoder_decoder)
+        else:
+            gspec = {f"b{j}": block_spec(cfg, kj) for j, kj in enumerate(kinds)}
+        groups[f"g{gi}"] = stack_spec(gspec, count)
+    spec["groups"] = groups
+    spec["final_norm"] = P((D,), ("embed",), init="ones", dtype=dt)
+    if cfg.num_classes > 0:
+        spec["cls_head"] = P((D, cfg.num_classes), ("embed", None), dtype="float32")
+    elif not cfg.tie_embeddings:
+        spec["lm_head"] = P((D, V), ("embed", "vocab"), dtype=dt)
+    if cfg.mtp_depth > 0:
+        spec["mtp"] = {"norm": P((D,), ("embed",), init="ones", dtype=dt),
+                       "proj": P((2 * D, D), (None, "embed"), dtype=dt),
+                       "block": block_spec(cfg, ATTN_MLP)}
+    return spec
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    from repro.models.layers import param_count as pc
+    spec = model_spec(cfg)
+    total = pc(spec)
+    if active_only and cfg.num_experts > 0:
+        n_moe = cfg.num_layers - cfg.first_k_dense
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        inactive = (cfg.num_experts - cfg.moe_top_k) * per_expert * n_moe
+        total -= inactive
+    return total
+
+
+# ---------------------------------------------------------------------------
+# block forward / decode
+# ---------------------------------------------------------------------------
+
+def _sub(lora, key):
+    return (lora or {}).get(key) or None
+
+
+def _roll_window(t, window: int):
+    """Convert the last `window` cache entries (positions S-W..S-1 at
+    indices 0..W-1) into rolling-buffer layout where position p lives at
+    slot p % W.  No-op when the sequence is shorter than the window."""
+    S = t.shape[1]
+    if S < window:
+        return t
+    return jnp.roll(t[:, -window:], S % window, axis=1)
+
+
+def block_forward(lp, x, cfg: ModelConfig, kind: str, *, lora, ls,
+                  window=None, causal=True, cross_kv=None, want_cache=False):
+    """Returns (x, aux, cache_dict)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache: Dict[str, Any] = {}
+    if kind in (ATTN_MLP, ATTN_MOE):
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        fwd = A.mla_forward if cfg.use_mla else A.gqa_forward
+        y = fwd(lp["attn"], h, cfg, lora=_sub(lora, "attn"), lora_scale=ls,
+                window=window, return_kv=want_cache,
+                **({} if cfg.use_mla else {"causal": causal}))
+        if want_cache:
+            y, kv = y
+            if window is not None:
+                kv = tuple(_roll_window(t, window) for t in kv)
+            cache["self"] = kv
+        x = x + y
+        if cross_kv is not None:
+            h = rms_norm(x, lp["cross_norm"], cfg.norm_eps)
+            y = A.gqa_forward(lp["cross"], h, cfg, lora=_sub(lora, "cross"),
+                              lora_scale=ls, causal=False, kv_from=cross_kv,
+                              return_kv=want_cache)
+            if want_cache:
+                y, ckv = y
+                cache["cross"] = ckv
+            x = x + y
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if kind == ATTN_MOE:
+            y, aux = M.moe_apply(lp["moe"], h, cfg)
+        else:
+            y = mlp_apply(lp["mlp"], h, cfg.activation, _sub(lora, "mlp"), ls)
+        x = x + y
+    elif kind == MLSTM:
+        y, st = S.mlstm_forward_state(lp["core"], rms_norm(x, lp["norm"], cfg.norm_eps), cfg,
+                                      lora=_sub(lora, "core"), ls=ls)
+        if want_cache:
+            cache["state"] = st
+        x = x + y
+    elif kind == SLSTM:
+        y, st = S.slstm_forward_state(lp["core"], rms_norm(x, lp["norm"], cfg.norm_eps), cfg,
+                                      lora=_sub(lora, "core"), ls=ls)
+        if want_cache:
+            cache["state"] = st
+        x = x + y
+    elif kind == HYBRID:
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        w = window if window is not None else cfg.sliding_window
+        ya = A.gqa_forward(lp["attn"], h, cfg, lora=_sub(lora, "attn"),
+                           lora_scale=ls, window=w, return_kv=want_cache)
+        if want_cache:
+            ya, kv = ya
+            if w is not None:
+                kv = tuple(_roll_window(t, w) for t in kv)
+            cache["self"] = kv
+        ym, mst = S.mamba_forward_state(lp["mamba"], h, cfg,
+                                        lora=_sub(lora, "mamba"), ls=ls)
+        if want_cache:
+            cache["mamba"] = mst
+        wc = lp["w_comb"]
+        y = 0.5 * (wc[0] * rms_norm(ya, lp["comb_norm_a"], cfg.norm_eps)
+                   + wc[1] * rms_norm(ym, lp["comb_norm_m"], cfg.norm_eps))
+        x = x + y.astype(x.dtype)
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.activation, _sub(lora, "mlp"), ls)
+    else:
+        raise ValueError(kind)
+    x = constrain(x, ("batch", "seq", None))
+    return x, aux, cache
+
+
+def block_decode(lp, x1, cache, pos, cfg: ModelConfig, kind: str, *,
+                 lora, ls, window=None):
+    """Returns (x1, new_cache)."""
+    new_cache: Dict[str, Any] = {}
+    if kind in (ATTN_MLP, ATTN_MOE):
+        h = rms_norm(x1, lp["attn_norm"], cfg.norm_eps)
+        if cfg.use_mla:
+            y, kv = A.mla_decode(lp["attn"], h, cache["self"], pos, cfg,
+                                 lora=_sub(lora, "attn"), lora_scale=ls, window=window)
+        else:
+            y, kv = A.gqa_decode(lp["attn"], h, cache["self"], pos, cfg,
+                                 lora=_sub(lora, "attn"), lora_scale=ls, window=window)
+        new_cache["self"] = kv
+        x1 = x1 + y
+        if "cross" in cache:
+            h = rms_norm(x1, lp["cross_norm"], cfg.norm_eps)
+            y = _cross_decode(lp["cross"], h, cache["cross"], cfg,
+                              lora=_sub(lora, "cross"), ls=ls)
+            new_cache["cross"] = cache["cross"]
+            x1 = x1 + y
+        h = rms_norm(x1, lp["mlp_norm"], cfg.norm_eps)
+        if kind == ATTN_MOE:
+            y, _ = M.moe_apply(lp["moe"], h, cfg)
+        else:
+            y = mlp_apply(lp["mlp"], h, cfg.activation, _sub(lora, "mlp"), ls)
+        x1 = x1 + y
+    elif kind == MLSTM:
+        y, st = S.mlstm_decode(lp["core"], rms_norm(x1, lp["norm"], cfg.norm_eps), cache["state"], cfg,
+                               lora=_sub(lora, "core"), ls=ls)
+        new_cache["state"] = st
+        x1 = x1 + y
+    elif kind == SLSTM:
+        y, st = S.slstm_decode(lp["core"], rms_norm(x1, lp["norm"], cfg.norm_eps), cache["state"], cfg,
+                               lora=_sub(lora, "core"), ls=ls)
+        new_cache["state"] = st
+        x1 = x1 + y
+    elif kind == HYBRID:
+        h = rms_norm(x1, lp["attn_norm"], cfg.norm_eps)
+        w = window if window is not None else cfg.sliding_window
+        ya, kv = A.gqa_decode(lp["attn"], h, cache["self"], pos, cfg,
+                              lora=_sub(lora, "attn"), lora_scale=ls, window=w)
+        new_cache["self"] = kv
+        ym, mst = S.mamba_decode(lp["mamba"], h, cache["mamba"], cfg,
+                                 lora=_sub(lora, "mamba"), ls=ls)
+        new_cache["mamba"] = mst
+        wc = lp["w_comb"]
+        y = 0.5 * (wc[0] * rms_norm(ya, lp["comb_norm_a"], cfg.norm_eps)
+                   + wc[1] * rms_norm(ym, lp["comb_norm_m"], cfg.norm_eps))
+        x1 = x1 + y.astype(x1.dtype)
+        h = rms_norm(x1, lp["mlp_norm"], cfg.norm_eps)
+        x1 = x1 + mlp_apply(lp["mlp"], h, cfg.activation, _sub(lora, "mlp"), ls)
+    else:
+        raise ValueError(kind)
+    return x1, new_cache
+
+
+def _cross_decode(params, x1, cross_kv, cfg, *, lora, ls):
+    import math as _m
+    B = x1.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    lget = (lora or {}).get
+    q = linear(x1, params["wq"], lget("wq"), ls).reshape(B, 1, H, hd)
+    k, v = cross_kv
+    out = A.decode_attention(q, k, v, 1.0 / _m.sqrt(hd))
+    return linear(out.reshape(B, 1, H * hd), params["wo"], lget("wo"), ls)
+
+
+# ---------------------------------------------------------------------------
+# scanned group drivers
+# ---------------------------------------------------------------------------
+
+def _scan_group(gparams, glora, x, per_layer, collect=False):
+    """per_layer(lp, ll, x) -> (x, aux, cache)."""
+    def body(carry, xs):
+        x, aux = carry
+        lp, ll = xs
+        y, aux_i, cache = per_layer(lp, ll, x)
+        return (y, aux + aux_i), (cache if collect else None)
+
+    (x, aux), caches = jax.lax.scan(jax.checkpoint(body), (x, jnp.zeros((), jnp.float32)),
+                                    (gparams, glora if glora else {}))
+    return x, aux, caches
+
+
+def _scan_group_decode(gparams, glora, gcache, x1, per_layer):
+    """per_layer(lp, ll, x1, cache) -> (x1, cache)."""
+    def body(x, xs):
+        lp, ll, c = xs
+        y, c2 = per_layer(lp, ll, x, c)
+        return y, c2
+
+    x1, caches = jax.lax.scan(body, x1, (gparams, glora if glora else {}, gcache))
+    return x1, caches
+
+
+def _lora_group(lora, g):
+    if not lora:
+        return {}
+    return lora.get(g, {}) or {}
+
+
+# ---------------------------------------------------------------------------
+# top-level forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens, pos_offset: int = 0):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.use_learned_pos:
+        Spos = tokens.shape[-1]
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos_offset, Spos, 0)
+    return x
+
+
+def _encode(params, cfg: ModelConfig, frames, lora, ls):
+    enc = params["encoder"]
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+
+    def per_layer(lp, ll, x):
+        return block_forward(lp, x, cfg, ATTN_MLP, lora=ll, ls=ls, causal=False)
+
+    x, _, _ = _scan_group(enc["g0"], _lora_group(lora, "encoder"), x, per_layer)
+    return rms_norm(x, enc["norm"], cfg.norm_eps)
+
+
+def _merge_image(params, cfg, x, image_embeds):
+    proj = params["projector"]
+    v = jax.nn.gelu(linear(image_embeds.astype(x.dtype), proj["w1"]))
+    v = linear(v, proj["w2"])
+    n = v.shape[-2]
+    return jnp.concatenate([v, x[..., n:, :]], axis=-2)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, lora=None,
+            lora_scale: float = 1.0, window=None, want_cache: bool = False,
+            want_logits: bool = True):
+    """Full-sequence forward.  Returns dict(hidden, logits, aux, cache, ...).
+    want_logits=False skips materializing the (N, V) logits (the loss path
+    uses the chunked vocab CE on `hidden` instead)."""
+    causal = cfg.num_classes == 0
+    cross_kv = None
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"], lora, lora_scale)
+        cross_kv = enc_out
+        x = embed_tokens(params, cfg, batch["tokens"])
+    elif cfg.embed_inputs:
+        x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+        if cfg.use_learned_pos:
+            x = x + params["pos_embed"][: x.shape[-2]]
+    else:
+        x = embed_tokens(params, cfg, batch["tokens"])
+        if cfg.num_image_tokens > 0 and "image_embeds" in batch:
+            x = _merge_image(params, cfg, x, batch["image_embeds"])
+    x = constrain(x, ("batch", None, None))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {}
+    for gi, (kinds, count) in enumerate(_group_kinds(cfg)):
+        g = f"g{gi}"
+        gl = _lora_group(lora, g)
+
+        if len(kinds) == 1:
+            def per_layer(lp, ll, x, _k=kinds[0]):
+                return block_forward(lp, x, cfg, _k, lora=ll, ls=lora_scale,
+                                     window=window, causal=causal,
+                                     cross_kv=cross_kv, want_cache=want_cache)
+        else:
+            def per_layer(lp, ll, x, _ks=kinds):
+                aux = jnp.zeros((), jnp.float32)
+                cache = {}
+                for j, kj in enumerate(_ks):
+                    # checkpoint each sub-block: the remat unit must be one
+                    # layer, not the whole period super-block.
+                    def sub(lp_j, ll_j, x, _kj=kj):
+                        return block_forward(lp_j, x, cfg, _kj, lora=ll_j,
+                                             ls=lora_scale, window=window,
+                                             causal=causal,
+                                             want_cache=want_cache)
+                    x, a, c = jax.checkpoint(sub)(
+                        lp[f"b{j}"], (ll or {}).get(f"b{j}") or {}, x)
+                    aux += a
+                    cache[f"b{j}"] = c
+                return x, aux, cache
+
+        x, aux, gcache = _scan_group(params["groups"][g], gl, x, per_layer,
+                                     collect=want_cache)
+        aux_total += aux
+        if want_cache:
+            caches[g] = gcache
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out: Dict[str, Any] = {"aux": aux_total, "enc_out": enc_out, "hidden": x}
+    if cfg.num_classes > 0:
+        pooled = jnp.mean(x, axis=-2)
+        out["logits"] = jnp.einsum("...d,dc->...c", pooled.astype(jnp.float32),
+                                   params["cls_head"])
+    elif want_logits:
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        out["logits"] = linear(x, head)
+    if cfg.mtp_depth > 0 and "tokens" in batch:
+        out["mtp_hidden"] = _mtp_hidden(params, cfg, x, batch["tokens"], lora, lora_scale)
+        if want_logits:
+            head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+            out["mtp_logits"] = linear(out["mtp_hidden"], head)
+    if want_cache:
+        out["cache"] = caches
+    return out
+
+
+def _mtp_hidden(params, cfg, h_final, tokens, lora, ls):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from the
+    final hidden state at t combined with the embedding of token t+1."""
+    mtp = params["mtp"]
+    nxt = embed_tokens(params, cfg, jnp.roll(tokens, -1, axis=-1))
+    z = jnp.concatenate(
+        [rms_norm(h_final, mtp["norm"], cfg.norm_eps), nxt.astype(h_final.dtype)], axis=-1)
+    z = linear(z, mtp["proj"])
+    z, _, _ = block_forward(mtp["block"], z, cfg, ATTN_MLP, lora=None, ls=ls)
+    return z
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, lora=None, lora_scale=1.0,
+            window=None, loss_chunk: int = 1024):
+    out = forward(params, cfg, batch, lora=lora, lora_scale=lora_scale,
+                  window=window, want_logits=False)
+    if cfg.num_classes > 0:
+        loss = cross_entropy(out["logits"], batch["labels"])
+    else:
+        tokens = batch["tokens"]
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        mask = batch.get("loss_mask", None)
+        loss = chunked_softmax_ce(out["hidden"][..., :-1, :], head,
+                                  tokens[..., 1:],
+                                  None if mask is None else mask[..., 1:],
+                                  chunk=loss_chunk)
+        if "mtp_hidden" in out:
+            loss = loss + 0.3 * chunked_softmax_ce(
+                out["mtp_hidden"][..., :-2, :], head, tokens[..., 2:],
+                chunk=loss_chunk)
+    return loss + out["aux"]
+
+
+def prefill(params, cfg: ModelConfig, batch, *, lora=None, lora_scale=1.0,
+            window=None, max_len: Optional[int] = None):
+    """max_len pads the attention caches to serving capacity (slots beyond
+    the prefilled length are masked out by decode's validity mask)."""
+    out = forward(params, cfg, batch, lora=lora, lora_scale=lora_scale,
+                  window=window, want_cache=True)
+    cache = out["cache"]
+    if max_len is not None:
+        eff_window = window if window is not None else cfg.sliding_window
+        target = min(max_len, eff_window) if eff_window else max_len
+        def pad(path, leaf):
+            names = [getattr(p, "key", None) for p in path]
+            if "self" in names and leaf.ndim >= 3:
+                cur = leaf.shape[2]   # (layer, B, T, ...)
+                if cur < target:
+                    pad_width = [(0, 0)] * leaf.ndim
+                    pad_width[2] = (0, target - cur)
+                    return jnp.pad(leaf, pad_width)
+            return leaf
+        cache = jax.tree_util.tree_map_with_path(pad, cache)
+    return out["logits"][..., -1:, :], cache
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache, *, lora=None,
+                lora_scale: float = 1.0, window=None):
+    """token (B,) int32; pos () int32; cache as returned by prefill or
+    cache_spec. Returns (logits (B,1,V), new_cache)."""
+    x1 = embed_tokens(params, cfg, token[:, None])
+    x1 = constrain(x1, ("batch", None, None))
+    new_caches = {}
+    for gi, (kinds, count) in enumerate(_group_kinds(cfg)):
+        g = f"g{gi}"
+        gl = _lora_group(lora, g)
+        if len(kinds) == 1:
+            def per_layer(lp, ll, x, c, _k=kinds[0]):
+                return block_decode(lp, x, c, pos, cfg, _k, lora=ll,
+                                    ls=lora_scale, window=window)
+        else:
+            def per_layer(lp, ll, x, c, _ks=kinds):
+                nc = {}
+                for j, kj in enumerate(_ks):
+                    x, cj = block_decode(lp[f"b{j}"], x, c[f"b{j}"], pos, cfg, kj,
+                                         lora=(ll or {}).get(f"b{j}") or {},
+                                         ls=lora_scale, window=window)
+                    nc[f"b{j}"] = cj
+                return x, nc
+
+        def body(x, xs):
+            lp, ll, c = xs
+            return per_layer(lp, ll, x, c)  # noqa: B023
+
+        x1, gcache = jax.lax.scan(body, x1, (params["groups"][g], gl or {}, cache[g]))
+        new_caches[g] = gcache
+    x1 = rms_norm(x1, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = linear(x1, head)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache specs (for abstract dry-run inputs)
+# ---------------------------------------------------------------------------
+
+def _kind_cache_spec(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     window: Optional[int], cross: bool):
+    dt = cfg.param_dtype
+    T = min(window, cache_len) if window is not None else cache_len
+    spec: Dict[str, Any] = {}
+    if kind in (ATTN_MLP, ATTN_MOE):
+        if cfg.use_mla:
+            spec["self"] = (P((batch, T, cfg.kv_lora_rank), ("batch", "kv_seq", None), dtype=dt),
+                            P((batch, T, cfg.qk_rope_head_dim), ("batch", "kv_seq", None), dtype=dt))
+        else:
+            kv = P((batch, T, cfg.num_kv_heads, cfg.hd),
+                   ("batch", "kv_seq", None, None), dtype=dt)
+            spec["self"] = (kv, kv)
+        if cross:
+            ckv = P((batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.hd),
+                    ("batch", None, None, None), dtype=dt)
+            spec["cross"] = (ckv, ckv)
+    elif kind == MLSTM:
+        H = cfg.num_heads
+        _, hd = S.mlstm_inner(cfg)
+        spec["state"] = {"C": P((batch, H, hd, hd), ("batch", None, None, None), dtype="float32"),
+                         "n": P((batch, H, hd), ("batch", None, None), dtype="float32"),
+                         "m": P((batch, H), ("batch", None), dtype="float32")}
+    elif kind == SLSTM:
+        H, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+        st = P((batch, H, hd), ("batch", None, None), dtype="float32")
+        spec["state"] = {"h": st, "c": st, "n": st, "m": st}
+    elif kind == HYBRID:
+        w = window if window is not None else cfg.sliding_window
+        T = min(w, cache_len) if w else cache_len
+        kv = P((batch, T, cfg.num_kv_heads, cfg.hd),
+               ("batch", "kv_seq", None, None), dtype=dt)
+        spec["self"] = (kv, kv)
+        di = S.mamba_inner_dim(cfg)
+        spec["mamba"] = {
+            "conv": P((batch, cfg.ssm_conv_width - 1, di), ("batch", None, None), dtype="float32"),
+            "h": P((batch, di, cfg.ssm_state_size), ("batch", None, None), dtype="float32"),
+        }
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int, window=None):
+    caches = {}
+    for gi, (kinds, count) in enumerate(_group_kinds(cfg)):
+        if len(kinds) == 1:
+            kspec = _kind_cache_spec(cfg, kinds[0], batch, cache_len, window,
+                                     cross=cfg.encoder_decoder)
+        else:
+            kspec = {f"b{j}": _kind_cache_spec(cfg, kj, batch, cache_len, window, False)
+                     for j, kj in enumerate(kinds)}
+        caches[f"g{gi}"] = stack_spec(kspec, count)
+    return caches

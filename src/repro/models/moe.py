@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN (DeepSeek-style: shared + routed top-k).
+
+Dispatch uses the grouped GShard/MaxText dense-dispatch formulation: tokens
+are split into groups of `group_tokens`; each group has a local expert
+capacity C = ceil(group_tokens * top_k * capacity_factor / E).  The dispatch
+one-hot (g, t, E, C) is materialized in bf16 per layer (bounded by the group
+size) and contracted with token activations; under SPMD the expert dimension
+is sharded over `model`, so the two dispatch einsums lower to the expected
+all-to-all/reduce collectives instead of a full gather.
+
+Experts are frozen under LoRA finetuning (adapters attach to attention), but
+gradients still flow *through* the MoE, so both dispatch directions appear in
+the backward pass of the dry-run — exactly the traffic the roofline needs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import P, ACTIVATIONS, linear, mlp_apply, mlp_spec
+from repro.launch.shardings import constrain
+
+GROUP_TOKENS = 256  # dispatch group size (tokens); memory ~ group * k^2 * cf
+
+
+def moe_spec(cfg: ModelConfig):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    dt = cfg.param_dtype
+    spec = {
+        "router": P((D, E), ("embed", None), dtype="float32"),
+        "we1": P((E, D, F), ("experts", "embed", "expert_mlp"), dtype=dt, fan_in=D),
+        "we2": P((E, F, D), ("experts", "expert_mlp", "embed"), dtype=dt, fan_in=F),
+        "we3": P((E, D, F), ("experts", "embed", "expert_mlp"), dtype=dt, fan_in=D),
+    }
+    if cfg.num_shared_experts > 0:
+        spec["shared"] = mlp_spec(D, F * cfg.num_shared_experts, cfg.activation, dt)
+    return spec
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(n_tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(c, 1)
+
+
+def moe_apply(params, x, cfg: ModelConfig, *, group_tokens: int = GROUP_TOKENS):
+    """x (B, S, D) -> (y (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.moe_top_k
+    act = ACTIVATIONS[cfg.activation]
+    n = B * S
+    g_tok = min(group_tokens, n)
+    assert n % g_tok == 0, (n, g_tok)
+    G = n // g_tok
+    C = _capacity(g_tok, cfg)
+
+    xt = x.reshape(G, g_tok, D)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                  # (G,t,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)     # renormalize
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = cfg.router_aux_loss * E * jnp.sum(me * ce)
+
+    # slot-major ordering: first choices claim capacity first
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)             # (G,t,K,E)
+    oh_slot = oh.transpose(0, 2, 1, 3).reshape(G, K * g_tok, E)
+    pos = jnp.cumsum(oh_slot, axis=1) * oh_slot - 1.0          # position in expert
+    keep = (pos >= 0) & (pos < C)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=x.dtype) \
+        * keep.astype(x.dtype)[..., None]                      # (G,KT,E,C)
+    # the one-hot derives from discrete top-k indices: no gradient flows
+    # through it (the gates carry the differentiable path) — stop_gradient
+    # kills an otherwise-materialized (G,KT,E,C) f32 cotangent per layer.
+    pos_oh = jax.lax.stop_gradient(
+        pos_oh.reshape(G, K, g_tok, E, C))                     # (G,K,t,E,C)
+
+    # dispatch: contract (k,t) directly — never materialize the K-times
+    # duplicated token tensor.  Expert-parallel layout pinned so the
+    # dispatch einsums lower to token<->expert collectives.
+    pos_oh = constrain(pos_oh, (None, None, None, "experts", None))
+    xe = jnp.einsum("gktec,gtd->gecd", pos_oh, xt)
+    xe = constrain(xe, (None, "experts", None, None))
+    h = jnp.einsum("gecd,edf->gecf", xe, params["we1"].astype(xe.dtype))
+    h = constrain(h, (None, "experts", None, None))
+    h = act(h) * jnp.einsum("gecd,edf->gecf", xe, params["we3"].astype(xe.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, params["we2"].astype(h.dtype))
+    ye = constrain(ye, (None, "experts", None, None))
+    # combine back, weighted by renormalized gates (G,t,K)->(G,K,t)
+    combine = pos_oh * gate_vals.transpose(0, 2, 1)[..., None, None].astype(x.dtype)
+    y = jnp.einsum("gktec,gecd->gtd", combine, ye).reshape(B, S, D)
+
+    if cfg.num_shared_experts > 0:
+        y = y + mlp_apply(params["shared"], x, cfg.activation)
+    return y, aux

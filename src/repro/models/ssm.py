@@ -1,0 +1,424 @@
+"""Recurrent blocks: Mamba-style selective SSM (Hymba hybrid heads) and
+xLSTM's mLSTM / sLSTM.
+
+TPU adaptation: training-time recurrences use *chunked* forms — a
+`lax.scan` over sequence chunks carrying the recurrent state, with a
+log-depth `associative_scan` (Mamba) or a stabilized quadratic intra-chunk
+form (mLSTM) inside each chunk.  This bounds memory to O(B * chunk * d * n)
+and keeps the MXU busy, instead of a 500k-step sequential loop.  sLSTM has
+true sequential memory mixing and stays a `lax.scan` (that is its semantics).
+
+Decode is the O(1)-state single-step recurrence — this is what makes the
+`long_500k` shape native for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import P, linear, rms_norm
+from repro.launch.shardings import constrain
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM
+# ---------------------------------------------------------------------------
+
+
+def mamba_inner_dim(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.num_heads * cfg.hd
+
+
+def mamba_spec(cfg: ModelConfig):
+    D = cfg.d_model
+    di = mamba_inner_dim(cfg)
+    N = cfg.ssm_state_size
+    dt = cfg.param_dtype
+    return {
+        "in_proj": P((D, 2 * di), ("embed", "mlp"), dtype=dt),
+        "conv_w": P((cfg.ssm_conv_width, di), (None, "mlp"), dtype=dt, fan_in=cfg.ssm_conv_width),
+        "conv_b": P((di,), ("mlp",), init="zeros", dtype=dt),
+        "w_dt": P((di, 1), ("mlp", None), dtype="float32", fan_in=di),
+        "dt_bias": P((di,), ("mlp",), init="zeros", dtype="float32"),
+        "w_B": P((di, N), ("mlp", None), dtype=dt, fan_in=di),
+        "w_C": P((di, N), ("mlp", None), dtype=dt, fan_in=di),
+        "A_log": P((di, N), ("mlp", None), init="zeros", dtype="float32"),
+        "D_skip": P((di,), ("mlp",), init="ones", dtype="float32"),
+        "out_proj": P((di, D), ("mlp", "embed"), dtype=dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,di), w (W,di)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def _ssm_coeffs(params, u):
+    """u (B,S,di) post-conv activations -> decay a, drive bu, readout c."""
+    A = -jnp.exp(params["A_log"])                               # (di,N) negative
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dk->bsd", u.astype(jnp.float32),
+                   params["w_dt"]) + params["dt_bias"])          # (B,S,di)
+    a = jnp.exp(dt[..., None] * A)                              # (B,S,di,N)
+    Bc = jnp.einsum("bsd,dn->bsn", u.astype(jnp.float32), params["w_B"].astype(jnp.float32))
+    Cc = jnp.einsum("bsd,dn->bsn", u.astype(jnp.float32), params["w_C"].astype(jnp.float32))
+    bu = (dt * u.astype(jnp.float32))[..., None] * Bc[..., None, :]  # (B,S,di,N)
+    return a, bu, Cc
+
+
+def _chunk_scan(a, bu, h0):
+    """Associative scan within a chunk. a,bu (B,L,di,N); h0 (B,di,N)."""
+    def comb(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, by + ay * bx
+    a_, s_ = jax.lax.associative_scan(comb, (a, bu), axis=1)
+    h = s_ + a_ * h0[:, None]
+    return h, h[:, -1]
+
+
+def mamba_forward_state(params, x, cfg: ModelConfig, *, chunk: int = 256,
+                        lora=None, ls=1.0):
+    """x (B,S,D) -> (y (B,S,D), decode_state). Chunked parallel scan."""
+    lget = (lora or {}).get
+    B, S, D = x.shape
+    x = constrain(x, ("batch", None, None))   # full seq for the scan
+    di = mamba_inner_dim(cfg)
+    N = cfg.ssm_state_size
+    W = cfg.ssm_conv_width
+    xz = linear(x, params["in_proj"], lget("in_proj"), ls)
+    u_pre, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(_causal_conv(u_pre, params["conv_w"], params["conv_b"]))
+    a, bu, Cc = _ssm_coeffs(params, u)
+
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    a_c = a.reshape(B, nc, L, di, N).swapaxes(0, 1)
+    bu_c = bu.reshape(B, nc, L, di, N).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(h, inp):
+        ai, bui = inp
+        hs, h_last = _chunk_scan(ai, bui, h)
+        return h_last, hs
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_last, hs = jax.lax.scan(step, h0, (a_c, bu_c))
+    h = hs.swapaxes(0, 1).reshape(B, S, di, N)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cc) + params["D_skip"] * u.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    conv_state = jnp.pad(u_pre, ((0, 0), (max(W - 1 - S, 0), 0), (0, 0)))[:, -(W - 1):]
+    state = {"conv": conv_state.astype(jnp.float32), "h": h_last}
+    return linear(y, params["out_proj"], lget("out_proj"), ls), state
+
+
+def mamba_forward(params, x, cfg: ModelConfig, *, chunk: int = 256, lora=None, ls=1.0):
+    return mamba_forward_state(params, x, cfg, chunk=chunk, lora=lora, ls=ls)[0]
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di = mamba_inner_dim(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_state_size), jnp.float32),
+    }
+
+
+def mamba_decode(params, x1, state, cfg: ModelConfig, *, lora=None, ls=1.0):
+    """Single-step recurrence. x1 (B,1,D)."""
+    lget = (lora or {}).get
+    B = x1.shape[0]
+    xz = linear(x1, params["in_proj"], lget("in_proj"), ls)
+    u, z = jnp.split(xz, 2, axis=-1)                     # (B,1,di)
+    window = jnp.concatenate([state["conv"], u.astype(state["conv"].dtype)], axis=1)
+    u = jnp.einsum("bwd,wd->bd", window, params["conv_w"].astype(window.dtype))
+    u = jax.nn.silu(u + params["conv_b"])[:, None]       # (B,1,di)
+    a, bu, Cc = _ssm_coeffs(params, u)
+    h = a[:, 0] * state["h"] + bu[:, 0]                  # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0]) + params["D_skip"] * u[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x1.dtype) * jax.nn.silu(z)
+    out = linear(y, params["out_proj"], lget("out_proj"), ls)
+    new_state = {"conv": window[:, 1:], "h": h}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunked parallel) and sLSTM (sequential)
+# ---------------------------------------------------------------------------
+
+def mlstm_inner(cfg: ModelConfig) -> Tuple[int, int]:
+    di = 2 * cfg.d_model                                  # proj factor 2
+    return di, di // cfg.num_heads
+
+
+def _headwise(u_heads, w, lora=None, ls=1.0):
+    """Block-diagonal linear: u (..., H, hd) @ w (H, hd, hd)."""
+    y = jnp.einsum("...hd,hde->...he", u_heads, w.astype(u_heads.dtype))
+    if lora is not None:
+        xa = jnp.einsum("...hd,hdr->...hr", u_heads.astype(lora["a"].dtype), lora["a"])
+        y = y + (ls * jnp.einsum("...hr,hre->...he", xa, lora["b"])).astype(y.dtype)
+    return y
+
+
+def mlstm_spec(cfg: ModelConfig):
+    D = cfg.d_model
+    di, hd = mlstm_inner(cfg)
+    H = cfg.num_heads
+    dt = cfg.param_dtype
+    return {
+        "up": P((D, 2 * di), ("embed", None), dtype=dt),       # (u | gate z)
+        # block-diagonal per-head projections (xLSTM "linear_headwise");
+        # output head-dims shard over `model` (Ulysses-style: the recurrence
+        # is elementwise in the projected dims, so the otherwise-idle model
+        # axis absorbs the giant (hd x hd) matrix memory).
+        # only the VALUE head-dim shards: C = k (x) v then has exactly one
+        # sharded dim, so the scan carries shard cleanly with no per-chunk
+        # k/q gathers (q,k stay replicated — their products are small).
+        "wq": P((H, hd, hd), (None, None, None), dtype=dt, fan_in=hd),
+        "wk": P((H, hd, hd), (None, None, None), dtype=dt, fan_in=hd),
+        "wv": P((H, hd, hd), (None, None, "heads"), dtype=dt, fan_in=hd),
+        "w_if": P((di, 2 * H), (None, None), dtype="float32"),  # input/forget gates
+        "b_if": P((2 * H,), (None,), init="zeros", dtype="float32"),
+        "out_norm": P((di,), (None,), init="ones", dtype=dt),
+        "down": P((di, D), (None, "embed"), dtype=dt),
+    }
+
+
+def _mlstm_chunk(q, k, v, logf, logi, carry):
+    """Stabilized quadratic intra-chunk mLSTM.
+    q,k,v (B,L,H,hd); logf/logi (B,L,H); carry = (C (B,H,hd,hd), n (B,H,hd), m (B,H))."""
+    B, L, H, hd = q.shape
+    C0, n0, m0 = carry
+    F = jnp.cumsum(logf, axis=1)                          # inclusive (B,L,H)
+    # intra-chunk log-decay matrix: D[t,s] = F_t - F_s + logi_s  (s <= t)
+    Dm = F[:, :, None] - F[:, None, :] + logi[:, None, :]   # (B,L,L,H) via broadcast
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Dm = jnp.where(tri[None, :, :, None], Dm, -jnp.inf)
+    m_intra = jnp.max(Dm, axis=2)                          # (B,L,H)
+    m_inter = F + m0[:, None]                              # carry-in stabilizer
+    m = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("blhd,bshd->blsh", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    w = s * jnp.exp(Dm - m[:, :, None])                    # (B,L,L,H)
+    w = jnp.where(tri[None, :, :, None], w, 0.0)
+    inter_w = jnp.exp(m_inter - m)                         # (B,L,H)
+    h_intra = jnp.einsum("blsh,bshd->blhd", w, v.astype(jnp.float32))
+    h_inter = jnp.einsum("blhd,bhde->blhe", q.astype(jnp.float32) * scale, C0) \
+        * inter_w[..., None]
+    n_t = jnp.sum(w, axis=2) + inter_w * jnp.einsum(
+        "blhd,bhd->blh", q.astype(jnp.float32) * scale, n0)
+    denom = jnp.maximum(jnp.abs(n_t), jnp.exp(-m))         # xLSTM normalizer
+    h = (h_intra + h_inter) / denom[..., None]
+
+    # carry update to chunk end
+    FL = F[:, -1]                                          # (B,H)
+    m_new = jnp.maximum(FL + m0, jnp.max(F[:, -1:, :] - F + logi, axis=1))
+    decay_k = jnp.exp(FL[:, None] - F + logi - m_new[:, None])   # (B,L,H)
+    C_new = jnp.exp(FL + m0 - m_new)[..., None, None] * C0 + jnp.einsum(
+        "blh,blhd,blhe->bhde", decay_k, k.astype(jnp.float32), v.astype(jnp.float32))
+    n_new = jnp.exp(FL + m0 - m_new)[..., None] * n0 + jnp.einsum(
+        "blh,blhd->bhd", decay_k, k.astype(jnp.float32))
+    # keep the value head-dim sharded through the scan (see mlstm_spec)
+    h = constrain(h, ("batch", None, None, "heads"))
+    C_new = constrain(C_new, ("batch", None, None, "heads"))
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_forward_state(params, x, cfg: ModelConfig, *, lora=None, ls=1.0):
+    lget = (lora or {}).get
+    B, S, D = x.shape
+    # time recurrence needs the full sequence: gather once at the (cheap)
+    # D-dim entry instead of per-projection on the 2x/4x wider tensors.
+    x = constrain(x, ("batch", None, None))
+    H = cfg.num_heads
+    di, hd = mlstm_inner(cfg)
+    uz = linear(x, params["up"])
+    u, z = jnp.split(uz, 2, axis=-1)                       # (B,S,di)
+    uh = u.reshape(B, S, H, hd)
+    q = _headwise(uh, params["wq"], lget("wq"), ls)
+    k = _headwise(uh, params["wk"], lget("wk"), ls)
+    v = constrain(_headwise(uh, params["wv"], lget("wv"), ls),
+                  ("batch", None, None, "heads"))
+    gif = jnp.einsum("bsd,dg->bsg", u.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    logi, logf = gif[..., :H], jax.nn.log_sigmoid(gif[..., H:])
+
+    L = min(cfg.mlstm_chunk, S)
+    pad = (-S) % L
+    if pad:
+        # pad the recurrence with identity gates: f=1 (logf=0) carries the
+        # state through, i=0 (logi=-inf) contributes nothing — padded
+        # positions produce garbage outputs that are sliced off below.
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-1e30)
+    Sp = S + pad
+    nc = Sp // L
+
+    @jax.checkpoint
+    def step(carry, inp):
+        # rematerialized: the (B,H,hd,hd) matrix state per chunk would
+        # otherwise be saved for backward at every chunk boundary.
+        qi, ki, vi, lfi, lii = inp
+        h, carry = _mlstm_chunk(qi, ki, vi, lfi, lii, carry)
+        return carry, h
+
+    def chunked(t):
+        return t.reshape(B, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+    carry0 = (jnp.zeros((B, H, hd, hd), jnp.float32),
+              jnp.zeros((B, H, hd), jnp.float32),
+              jnp.zeros((B, H), jnp.float32))
+    (Cf, nf, mf), hs = jax.lax.scan(step, carry0,
+                                    (chunked(q), chunked(k), chunked(v),
+                                     chunked(logf), chunked(logi)))
+    h = hs.swapaxes(0, 1).reshape(B, Sp, H, hd)[:, :S].astype(x.dtype)
+    # per-head RMS norm (xLSTM MultiHeadNorm) + gate, staying head-sharded
+    h = rms_norm(h, params["out_norm"].reshape(H, hd), cfg.norm_eps)
+    h = h * jax.nn.silu(z).reshape(B, S, H, hd)
+    y = jnp.einsum("bshd,hde->bse", h,
+                   params["down"].reshape(H, hd, D).astype(h.dtype))
+    la = lget("down")
+    if la is not None:
+        xa = jnp.einsum("bsi,ir->bsr", h.reshape(B, S, di).astype(la["a"].dtype), la["a"])
+        y = y + (ls * jnp.einsum("bsr,re->bse", xa, la["b"])).astype(y.dtype)
+    return y, {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_forward(params, x, cfg: ModelConfig, *, lora=None, ls=1.0):
+    return mlstm_forward_state(params, x, cfg, lora=lora, ls=ls)[0]
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    _, hd = mlstm_inner(cfg)
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+def mlstm_decode(params, x1, state, cfg: ModelConfig, *, lora=None, ls=1.0):
+    lget = (lora or {}).get
+    B = x1.shape[0]
+    H = cfg.num_heads
+    di, hd = mlstm_inner(cfg)
+    uz = linear(x1, params["up"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    uh = u.reshape(B, 1, H, hd)
+    q = _headwise(uh, params["wq"], lget("wq"), ls)[:, 0]
+    k = _headwise(uh, params["wk"], lget("wk"), ls)[:, 0]
+    v = _headwise(uh, params["wv"], lget("wv"), ls)[:, 0]
+    gif = jnp.einsum("bod,dg->bg", u.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    logi, logf = gif[..., :H], jax.nn.log_sigmoid(gif[..., H:])
+    m_new = jnp.maximum(logf + state["m"], logi)
+    fw = jnp.exp(logf + state["m"] - m_new)
+    iw = jnp.exp(logi - m_new)
+    kf = k.astype(jnp.float32)
+    C = fw[..., None, None] * state["C"] + iw[..., None, None] * kf[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    n = fw[..., None] * state["n"] + iw[..., None] * kf
+    qs = q.astype(jnp.float32) / math.sqrt(hd)
+    num = jnp.einsum("bhd,bhde->bhe", qs, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)), jnp.exp(-m_new))
+    h = (num / den[..., None])[:, None].astype(x1.dtype)        # (B,1,H,hd)
+    D = params["down"].shape[-1]
+    h = rms_norm(h, params["out_norm"].reshape(H, hd), cfg.norm_eps)
+    h = h * jax.nn.silu(z).reshape(B, 1, H, hd)
+    y = jnp.einsum("bshd,hde->bse", h,
+                   params["down"].reshape(H, hd, D).astype(h.dtype))
+    la = lget("down")
+    if la is not None:
+        xa = jnp.einsum("bsi,ir->bsr", h.reshape(B, 1, di).astype(la["a"].dtype), la["a"])
+        y = y + (ls * jnp.einsum("bsr,re->bse", xa, la["b"])).astype(y.dtype)
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg: ModelConfig):
+    D = cfg.d_model
+    H, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    dt = cfg.param_dtype
+    ff = int(round(cfg.d_model * 4 / 3 / 64) * 64)
+    return {
+        "wx": P((D, 4 * D), ("embed", None), dtype=dt),          # z,i,f,o pre-acts
+        "r": P((H, hd, 4 * hd), (None, None, None), dtype=dt, fan_in=hd),
+        "b": P((4 * D,), (None,), init="zeros", dtype="float32"),
+        "out_norm": P((D,), ("embed",), init="ones", dtype=dt),
+        "up1": P((D, ff), ("embed", "mlp"), dtype=dt),
+        "up2": P((D, ff), ("embed", "mlp"), dtype=dt),
+        "down": P((ff, D), ("mlp", "embed"), dtype=dt),
+    }
+
+
+def _slstm_cell(params, gx, hcnm, cfg):
+    """One step. gx (B,4D) input pre-activations; state tuple of (B,H,hd)."""
+    h, c, n, m = hcnm
+    B = gx.shape[0]
+    H, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    rec = jnp.einsum("bhd,hdg->bhg", h.astype(params["r"].dtype), params["r"])
+    g = gx.reshape(B, H, 4 * hd).astype(jnp.float32) + rec.astype(jnp.float32) \
+        + params["b"].reshape(H, 4 * hd)
+    z, i_t, f_t, o = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(i_t - m_new)
+    c_new = fw * c + iw * z
+    n_new = fw * n + iw
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_forward_state(params, x, cfg: ModelConfig, *, lora=None, ls=1.0):
+    lget = (lora or {}).get
+    B, S, D = x.shape
+    x = constrain(x, ("batch", None, None))   # full seq for the recurrence
+    H, hd = cfg.num_heads, D // cfg.num_heads
+    gx = linear(x, params["wx"], lget("wx"), ls)            # (B,S,4D)
+
+    def step(state, g):
+        state = _slstm_cell(params, g, state, cfg)
+        return state, state[0]
+
+    z0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H, hd), -1e30, jnp.float32)
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, (z0, z0, z0, m0), gx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    up = jax.nn.gelu(linear(h, params["up1"])) * linear(h, params["up2"])
+    return linear(up, params["down"], lget("down"), ls), {"h": hf, "c": cf, "n": nf, "m": mf}
+
+
+def slstm_forward(params, x, cfg: ModelConfig, *, lora=None, ls=1.0):
+    return slstm_forward_state(params, x, cfg, lora=lora, ls=ls)[0]
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def slstm_decode(params, x1, state, cfg: ModelConfig, *, lora=None, ls=1.0):
+    lget = (lora or {}).get
+    B, _, D = x1.shape
+    gx = linear(x1, params["wx"], lget("wx"), ls)[:, 0]
+    h, c, n, m = _slstm_cell(params, gx, (state["h"], state["c"], state["n"], state["m"]), cfg)
+    out = h.reshape(B, 1, D).astype(x1.dtype)
+    out = rms_norm(out, params["out_norm"], cfg.norm_eps)
+    up = jax.nn.gelu(linear(out, params["up1"])) * linear(out, params["up2"])
+    return linear(up, params["down"], lget("down"), ls), {"h": h, "c": c, "n": n, "m": m}

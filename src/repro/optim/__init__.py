@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (adam_init, adam_update, sgd_init,
+                                    sgd_update, clip_by_global_norm,
+                                    cosine_schedule, linear_warmup_cosine,
+                                    global_norm)
+
+__all__ = ["adam_init", "adam_update", "sgd_init", "sgd_update",
+           "clip_by_global_norm", "cosine_schedule", "linear_warmup_cosine",
+           "global_norm"]

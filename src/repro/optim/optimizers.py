@@ -1,0 +1,90 @@
+"""Pure-JAX pytree optimizers (no optax in this environment).
+
+SGD(+momentum) is the client optimizer (paper Appx B.3: SGD, momentum 0.9);
+Adam is the FedAdam server optimizer (Reddi et al., betas 0.9/0.999).
+All functions are jit-safe and work on arbitrary pytrees (including the flat
+global LoRA vector view used by the FLASC round).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return _tmap(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum)
+# ---------------------------------------------------------------------------
+
+def sgd_init(params):
+    return {"mu": _tmap(lambda x: jnp.zeros_like(x, jnp.float32), params)}
+
+
+def sgd_update(params, grads, state, lr, momentum: float = 0.0):
+    if momentum:
+        mu = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32),
+                   state["mu"], grads)
+        step = mu
+        state = {"mu": mu}
+    else:
+        step = grads
+    new = _tmap(lambda p, s: (p.astype(jnp.float32) - lr * s.astype(jnp.float32)).astype(p.dtype),
+                params, step)
+    return new, state
+
+
+# ---------------------------------------------------------------------------
+# Adam (server-side FedAdam)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = lambda x: jnp.zeros_like(x, jnp.float32)
+    return {"m": _tmap(z, params), "v": _tmap(z, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+    v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+              state["v"], grads)
+    mh = _tmap(lambda m_: m_ / (1 - b1 ** cf), m)
+    vh = _tmap(lambda v_: v_ / (1 - b2 ** cf), v)
+    new = _tmap(lambda p, m_, v_: (p.astype(jnp.float32)
+                                   - lr * m_ / (jnp.sqrt(v_) + eps)).astype(p.dtype),
+                params, mh, vh)
+    return new, {"m": m, "v": v, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr, total_steps, final_frac=0.1):
+    def sched(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return sched
+
+
+def linear_warmup_cosine(base_lr, warmup, total_steps, final_frac=0.0):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+    def sched(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return sched

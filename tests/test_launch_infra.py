@@ -1,0 +1,111 @@
+"""Launch-layer infrastructure: sharding rules, hloprof, roofline math,
+comm-time model — pure unit tests (no multi-device lowering here)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.launch import hloprof
+from repro.launch.shardings import (DEFAULT_RULES, fsdp_rules,
+                                    logical_to_pspec)
+from jax.sharding import PartitionSpec
+
+
+class FakeMesh:
+    """Duck-typed mesh for rule tests (shape mapping only)."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_logical_to_pspec_divisibility_guard():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # divisible head dim shards; whisper's 20-head dim stays replicated
+    assert logical_to_pspec((4096, 4096), ("embed", "heads"), mesh) == \
+        PartitionSpec(None, "model")
+    assert logical_to_pspec((1280, 1280), ("embed", "heads"), mesh) == \
+        PartitionSpec(None, "model")
+    assert logical_to_pspec((1280, 1290), ("embed", "heads"), mesh) == \
+        PartitionSpec(None, None)
+
+
+def test_logical_to_pspec_multi_axis_batch():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = logical_to_pspec((256, 4096), ("batch", None), mesh)
+    assert spec == PartitionSpec(("pod", "data"), None)
+    # 16 can't shard over pod*data=32 -> replicated
+    spec = logical_to_pspec((16, 4096), ("batch", None), mesh)
+    assert spec == PartitionSpec(None, None)
+
+
+def test_fsdp_rules_overlay():
+    rules = fsdp_rules()
+    assert rules["embed"] == ("pod", "data")
+    assert DEFAULT_RULES["embed"] == ()
+
+
+def test_hloprof_counts_scan_trips():
+    def g(x):
+        def body(c, _):
+            return c @ x, None
+        y, _ = jax.lax.scan(body, jnp.eye(128), None, length=5)
+        return y
+    c = jax.jit(g).lower(jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
+    p = hloprof.profile(c.as_text(), 1)
+    assert p["dot_flops"] == pytest.approx(5 * 2 * 128 ** 3, rel=0.01)
+
+
+def test_hloprof_nested_loops():
+    def g(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ x, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, jnp.eye(64), None, length=4)
+        return y
+    c = jax.jit(g).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    p = hloprof.profile(c.as_text(), 1)
+    assert p["dot_flops"] == pytest.approx(12 * 2 * 64 ** 3, rel=0.01)
+
+
+def test_hloprof_sort_accounting():
+    c = jax.jit(jnp.sort).lower(jax.ShapeDtypeStruct((4096,), jnp.float32)).compile()
+    p = hloprof.profile(c.as_text(), 1)
+    assert p["sort_ops"] >= 1
+    assert p["sort_bytes"] >= 4096 * 4
+
+
+def test_roofline_model_flops_sanity():
+    from repro.launch.roofline import model_flops
+    # train: 6*N*D within 2x of the closed form for a dense arch
+    mf = model_flops("minitron-8b", "train_4k")
+    from repro.configs.registry import get_config
+    from repro.models.model import count_params
+    n = count_params(get_config("minitron-8b"))
+    assert mf == pytest.approx(6 * n * 256 * 4096, rel=1e-6)
+    # MoE uses active params only
+    mf3 = model_flops("deepseek-v3-671b", "train_4k")
+    assert mf3 < 6 * count_params(get_config("deepseek-v3-671b")) * 256 * 4096 * 0.2
+
+
+@settings(deadline=None, max_examples=20)
+@given(hst.integers(2, 512))
+def test_collective_factors(n):
+    assert 0 < hloprof._coll_factor("all-gather", n) < 1
+    assert hloprof._coll_factor("all-reduce", n) == pytest.approx(
+        2 * (n - 1) / n)
+    assert hloprof._coll_factor("collective-permute", n) == 1.0
+    assert hloprof._coll_factor("all-gather", 1) == 0.0
+
+
+def test_fed_for_mesh():
+    from repro.launch.steps import fed_for_mesh
+    from repro.models.config import INPUT_SHAPES
+    mesh1 = FakeMesh({"data": 16, "model": 16})
+    fed = fed_for_mesh(mesh1, INPUT_SHAPES["train_4k"])
+    assert fed.n_clients * fed.local_batch == 256
+    assert fed.n_clients == 16
+    mesh2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    fed2 = fed_for_mesh(mesh2, INPUT_SHAPES["train_4k"])
+    assert fed2.n_clients == 32 and fed2.local_batch == 8

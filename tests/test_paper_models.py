@@ -1,0 +1,30 @@
+"""The paper's own backbone shapes (ViT-B/16 85M, GPT2-Small 124M) build
+and run a forward pass with LoRA attached."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.paper_models import GPT2_SMALL, VIT_B16
+from repro.models import lora as lora_mod
+from repro.models import model as mdl
+from repro.models.config import LoRAConfig
+from repro.models.layers import init_params, param_count
+
+
+def test_paper_model_sizes():
+    assert 80e6 < param_count(mdl.model_spec(VIT_B16)) < 95e6
+    assert 115e6 < param_count(mdl.model_spec(GPT2_SMALL)) < 135e6
+
+
+@pytest.mark.parametrize("cfg,batch_fn", [
+    (VIT_B16, lambda k: {"embeds": jax.random.normal(k, (2, 16, 768)) * 0.1,
+                         "labels": jnp.zeros((2,), jnp.int32)}),
+    (GPT2_SMALL, lambda k: {"tokens": jax.random.randint(k, (2, 16), 0, 50257)}),
+])
+def test_paper_model_forward(cfg, batch_fn):
+    params = init_params(mdl.model_spec(cfg), jax.random.key(0))
+    lcfg = LoRAConfig(rank=16)
+    lora = lora_mod.init_lora(cfg, lcfg, jax.random.key(1))
+    batch = batch_fn(jax.random.key(2))
+    loss = mdl.loss_fn(params, cfg, batch, lora=lora, lora_scale=lcfg.scale)
+    assert jnp.isfinite(loss)

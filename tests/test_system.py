@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the FLASC system: the paper's headline
+claims must hold qualitatively on the synthetic federated tasks."""
+import jax
+import pytest
+
+from repro.core.strategies import StrategySpec
+from repro.data.datasets import make_synth_image
+from repro.federated.runtime import run_experiment
+from repro.models.config import FederatedConfig
+
+MODEL = dict(d_model=32, num_layers=2, num_heads=2, d_ff=64)
+
+
+@pytest.fixture(scope="module")
+def task():
+    return make_synth_image(n_examples=512, n_clients=24, n_patches=8, dim=32,
+                            alpha=0.5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def fed():
+    # server lr tuned per the paper's Appx B.3 sweep discipline (the tiny
+    # saturated task oscillates at 5e-3)
+    return FederatedConfig(n_clients=6, local_batch=8, local_steps=1,
+                           client_lr=5e-3, server_lr=1e-3)
+
+
+@pytest.fixture(scope="module")
+def results(task, fed):
+    out = {}
+    # FLASC moves ~4x fewer bytes per round; comparing utility at (less
+    # than) equal communication means giving it more rounds (paper Fig. 2
+    # compares along the communication axis, not the round axis).
+    for name, spec, rounds in (
+            ("lora", StrategySpec(kind="lora"), 25),
+            ("flasc", StrategySpec(kind="flasc", density_down=0.25,
+                                   density_up=0.25), 50)):
+        out[name] = run_experiment(task, spec=spec, fed=fed, rounds=rounds,
+                                   lora_rank=8, model_kw=MODEL,
+                                   pretrain_steps=30, eval_every=5, seed=0)
+    return out
+
+
+def test_federated_lora_learns(results):
+    assert results["lora"].best_acc() > 0.5          # >> 10% chance
+
+
+def test_flasc_matches_lora_with_less_communication(results):
+    """The paper's headline claim, qualitatively: comparable utility at a
+    fraction of the communication."""
+    lora, flasc = results["lora"], results["flasc"]
+    assert flasc.best_acc() >= lora.best_acc() - 0.05
+    assert flasc.ledger.total_bytes < 0.70 * lora.ledger.total_bytes
+
+
+def test_comm_accounting_consistency(results):
+    led = results["flasc"].ledger
+    # download = 25% of entries to each of 6 clients per round
+    per_round_down = led.down_values / led.rounds
+    assert per_round_down == pytest.approx(0.25 * led.total_params * 6, rel=0.05)
+    # upload <= 25% per client
+    assert led.up_values / led.rounds <= 0.26 * led.total_params * 6
+
+
+def test_dp_round_runs_and_degrades_gracefully(task, fed):
+    import dataclasses
+    fed_dp = dataclasses.replace(fed, dp_clip=0.05, dp_noise=0.02,
+                                 server_lr=2e-2)
+    res = run_experiment(task, spec=StrategySpec(kind="flasc",
+                                                 density_down=0.5,
+                                                 density_up=0.5),
+                         fed=fed_dp, rounds=15, lora_rank=8, model_kw=MODEL,
+                         pretrain_steps=30, eval_every=15, seed=0)
+    assert res.final_acc > 0.15                      # learns despite noise
+
+
+def test_upload_density_can_be_asymmetric(task, fed):
+    res = run_experiment(task, spec=StrategySpec(kind="flasc",
+                                                 density_down=0.5,
+                                                 density_up=1 / 16),
+                         fed=fed, rounds=15, lora_rank=8, model_kw=MODEL,
+                         pretrain_steps=30, eval_every=15, seed=0)
+    led = res.ledger
+    assert led.up_values < 0.15 * led.down_values    # uploads much sparser
+    assert res.final_acc > 0.3
