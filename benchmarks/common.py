@@ -12,9 +12,9 @@ import sys
 import time
 from typing import Dict, List, Optional
 
-from repro.core.strategies import StrategySpec
+from repro.core.strategies import StrategyLike
 from repro.data import datasets as ds
-from repro.federated.runtime import run_experiment
+from repro.federated.api import Experiment
 from repro.models.config import FederatedConfig
 
 QUICK = os.environ.get("BENCH_QUICK", "1") != "0"
@@ -47,14 +47,20 @@ def default_fed(**kw) -> FederatedConfig:
     return FederatedConfig(**base)
 
 
-def run(task, spec: StrategySpec, fed: Optional[FederatedConfig] = None,
-        rounds: int = None, lora_rank: int = 16, seed: int = 0, **kw):
+def run(task, spec: StrategyLike, fed: Optional[FederatedConfig] = None,
+        rounds: int = None, lora_rank: int = 16, seed: int = 0,
+        model_kw: Optional[dict] = None, pretrain_steps: Optional[int] = None,
+        full_finetune: bool = False, **train_kw):
     t0 = time.time()
-    kw.setdefault("model_kw", MODEL_KW)
-    kw.setdefault("pretrain_steps", 40 if QUICK else 150)
-    res = run_experiment(task, spec=spec, fed=fed or default_fed(),
-                         rounds=rounds or ROUNDS, lora_rank=lora_rank,
-                         eval_every=EVAL_EVERY, seed=seed, **kw)
+    exp = (Experiment(task, strategy=spec, federation=fed or default_fed())
+           .with_model(**(model_kw or MODEL_KW))
+           .with_lora(rank=lora_rank)
+           .with_training(
+               rounds=rounds or ROUNDS, eval_every=EVAL_EVERY, seed=seed,
+               pretrain_steps=(40 if QUICK else 150) if pretrain_steps is None
+               else pretrain_steps,
+               full_finetune=full_finetune, **train_kw))
+    res = exp.run()
     res.elapsed = time.time() - t0
     return res
 

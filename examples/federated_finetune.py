@@ -12,9 +12,8 @@ import argparse
 import os
 
 from repro.checkpoint.io import save_pytree
-from repro.core.strategies import StrategySpec
 from repro.data.datasets import make_synth_reddit
-from repro.federated.runtime import run_experiment
+from repro.federated.api import Experiment
 from repro.models.config import FederatedConfig
 
 PRESETS = {
@@ -42,12 +41,14 @@ def main():
     task = make_synth_reddit(n_users=256, vocab=min(p["vocab"], 4096), length=24)
     fed = FederatedConfig(n_clients=10, local_batch=8, local_steps=1,
                           client_lr=5e-4, server_lr=1e-3)
-    spec = StrategySpec(kind="flasc", density_down=args.density,
-                        density_up=args.up_density or args.density)
-    res = run_experiment(task, spec=spec, fed=fed,
-                         rounds=args.rounds or p["rounds"],
-                         lora_rank=args.rank, model_kw=p["model_kw"],
-                         eval_every=10, verbose=True)
+    res = (Experiment(task, federation=fed)
+           .with_strategy("flasc", density_down=args.density,
+                          density_up=args.up_density or args.density)
+           .with_model(**p["model_kw"])
+           .with_lora(rank=args.rank)
+           .with_training(rounds=args.rounds or p["rounds"], eval_every=10,
+                          verbose=True)
+           .run())
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     save_pytree({"history_final_acc": res.final_acc}, args.out)
     print(f"final token-acc {res.final_acc:.4f}; "

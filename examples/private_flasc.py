@@ -5,7 +5,7 @@ comparing full finetuning / LoRA / FLASC / FFA-LoRA.
 """
 from repro.core.strategies import StrategySpec
 from repro.data.datasets import make_synth_reddit
-from repro.federated.runtime import run_experiment
+from repro.federated.api import Experiment
 from repro.models.config import FederatedConfig
 from repro.core.dp import simulated_noise_multiplier
 
@@ -27,9 +27,11 @@ def main():
                 ("flasc d=1/2", StrategySpec(kind="flasc", density_down=0.5,
                                              density_up=0.5), {}),
                 ("ffa-lora", StrategySpec(kind="ffa"), {})):
-            res = run_experiment(task, spec=spec, fed=fed, rounds=30,
-                                 lora_rank=16, model_kw=MODEL, eval_every=30,
-                                 **kw)
+            res = (Experiment(task, strategy=spec, federation=fed)
+                   .with_model(**MODEL)
+                   .with_lora(rank=16)
+                   .with_training(rounds=30, eval_every=30, **kw)
+                   .run())
             print(f"  {name:12s} acc={res.final_acc:.3f} "
                   f"comm={res.ledger.total_bytes/1e6:6.2f}MB")
 

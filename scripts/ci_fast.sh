@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Fast CI signal: the sub-minute tier-1 subset (strategy-registry
+# equivalence, sparsity selectors, communication ledger) — everything
+# tagged @pytest.mark.fast.  The full tier-1 suite (ROADMAP.md) still
+# covers the slow model-training paths.
+#
+#   scripts/ci_fast.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -q -m fast "$@"

@@ -27,7 +27,7 @@ def _path_str(path) -> str:
 
 def save_pytree(tree: Any, path: str) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat, _ = jax.tree.flatten_with_path(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     payload = {_path_str(p): np.asarray(v) for p, v in flat}
     manifest = {"keys": sorted(payload.keys())}
     np.savez(path, __manifest__=json.dumps(manifest), **payload)
@@ -37,7 +37,7 @@ def load_pytree(path: str, like: Optional[Any] = None) -> Any:
     with np.load(path, allow_pickle=False) as z:
         payload = {k: z[k] for k in z.files if k != "__manifest__"}
     if like is not None:
-        flat, treedef = jax.tree.flatten_with_path(like)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         leaves = []
         for p, ref in flat:
             key = _path_str(p)

@@ -1,8 +1,22 @@
-from repro.core.sparsity import topk_mask, sparsify, threshold_exact, threshold_histogram
-from repro.core.strategies import StrategySpec, init_strategy_state
+from repro.core.sparsity import (topk_mask, topk_mask_by_count, sparsify,
+                                 sparsify_by_count, threshold_exact,
+                                 threshold_histogram)
+from repro.core.strategies import (Strategy, StrategySpec, RoundPlan,
+                                   UploadRule, PlanContext, register_strategy,
+                                   registered_kinds, resolve,
+                                   init_strategy_state)
+from repro.core.transport import (Message, Pipeline, MaskSparsify,
+                                  TopKSparsify, Quantize, download_pipeline,
+                                  upload_pipeline)
 from repro.core.fedround import FlatMeta, federated_round, make_round_fn, init_server
-from repro.core.comm import CommLedger
+from repro.core.comm import CommLedger, coded_message_bytes
 
-__all__ = ["topk_mask", "sparsify", "threshold_exact", "threshold_histogram",
-           "StrategySpec", "init_strategy_state", "FlatMeta",
-           "federated_round", "make_round_fn", "init_server", "CommLedger"]
+__all__ = ["topk_mask", "topk_mask_by_count", "sparsify", "sparsify_by_count",
+           "threshold_exact", "threshold_histogram",
+           "Strategy", "StrategySpec", "RoundPlan", "UploadRule",
+           "PlanContext", "register_strategy", "registered_kinds", "resolve",
+           "init_strategy_state",
+           "Message", "Pipeline", "MaskSparsify", "TopKSparsify", "Quantize",
+           "download_pipeline", "upload_pipeline",
+           "FlatMeta", "federated_round", "make_round_fn", "init_server",
+           "CommLedger", "coded_message_bytes"]

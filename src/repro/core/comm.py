@@ -6,12 +6,29 @@ asymmetric up/down bandwidth.  We track both the paper-faithful value-only
 bytes and a practical values+indices estimate (4B value + 4B index; a
 bitmap-coded mask costs n/8 bytes and is cheaper below d≈0.97 — we report
 min(index, bitmap) as the practical coding).
+
+The practical coding is *live* accounting: `record_round` accumulates
+`coded_message_bytes` per direction alongside the value-only totals, so
+every experiment reports both `total_bytes` (paper-faithful) and
+`total_coded_bytes` (what a real index/bitmap wire format would move).
 """
 from __future__ import annotations
 
 import dataclasses
 
 VALUE_BYTES = 4
+INDEX_BYTES = 4
+
+
+def coded_message_bytes(values: int, per_message_params: int, messages: int,
+                        value_bytes: float = VALUE_BYTES) -> int:
+    """Wire bytes for `values` transmitted entries spread over `messages`
+    sparse messages of `per_message_params` entries each: the cheaper of
+    index coding (value + 4B index each) and bitmap coding (value + one
+    n/8-byte bitmap per message)."""
+    idx = values * (value_bytes + INDEX_BYTES)
+    bitmap = values * value_bytes + (per_message_params // 8) * messages
+    return int(min(idx, bitmap))
 
 
 @dataclasses.dataclass
@@ -22,12 +39,31 @@ class CommLedger:
     rounds: int = 0
     down_value_bytes: float = VALUE_BYTES   # 4.0 f32, 1.0 int8, 0.5 int4...
     up_value_bytes: float = VALUE_BYTES
+    down_coded: int = 0                 # cumulative practical wire bytes
+    up_coded: int = 0
 
-    def record_round(self, n_clients: int, down_nnz: float, up_nnz_total: float):
-        """down_nnz: entries sent per client on download (same global mask);
-        up_nnz_total: sum of entries uploaded across clients."""
-        self.down_values += int(down_nnz) * n_clients
-        self.up_values += int(up_nnz_total)
+    def record_round(self, n_clients: int, down_nnz: float, up_nnz_total: float,
+                     *, down_per_message=None, up_per_message=None):
+        """down_nnz: average entries sent per client on download;
+        up_nnz_total: sum of entries uploaded across clients.  The optional
+        per-message sequences carry each client's actual message size so the
+        index-vs-bitmap minimum is taken per message (heterogeneous cohorts
+        mix coding choices); without them every message is billed at the
+        per-client average."""
+        down = int(down_nnz) * n_clients
+        up = int(up_nnz_total)
+        self.down_values += down
+        self.up_values += up
+        dpm = (down_per_message if down_per_message is not None
+               else [down_nnz] * n_clients)
+        upm = (up_per_message if up_per_message is not None
+               else [up_nnz_total / max(n_clients, 1)] * n_clients)
+        self.down_coded += sum(
+            coded_message_bytes(int(v), self.total_params, 1,
+                                self.down_value_bytes) for v in dpm)
+        self.up_coded += sum(
+            coded_message_bytes(int(v), self.total_params, 1,
+                                self.up_value_bytes) for v in upm)
         self.rounds += 1
 
     # --- paper-faithful (values only) ---
@@ -44,10 +80,22 @@ class CommLedger:
         return self.down_bytes + self.up_bytes
 
     # --- practical coding (indices or bitmap, whichever is smaller) ---
-    def coded_bytes(self, values: int, per_message_params: int, messages: int) -> int:
-        idx = values * (VALUE_BYTES + 4)
-        bitmap = values * VALUE_BYTES + (per_message_params // 8) * messages
-        return min(idx, bitmap)
+    @property
+    def down_coded_bytes(self) -> int:
+        return int(self.down_coded)
+
+    @property
+    def up_coded_bytes(self) -> int:
+        return int(self.up_coded)
+
+    @property
+    def total_coded_bytes(self) -> int:
+        return int(self.down_coded + self.up_coded)
+
+    def coded_bytes(self, values: int, per_message_params: int,
+                    messages: int) -> int:
+        """Legacy form of `coded_message_bytes` (f32 values)."""
+        return coded_message_bytes(values, per_message_params, messages)
 
     def dense_equivalent_bytes(self, n_clients_per_round: int) -> int:
         """What dense LoRA would have cost over the same rounds."""

@@ -1,12 +1,21 @@
 """The federated round — FLASC Algorithm 1 (and every baseline) as a single
-jit-able function.
+jit-able, strategy-agnostic function.
 
-One call = one FL round: download-mask the dense server vector P, run n
-clients' local SGD(+momentum) epochs in parallel (vmap over the client
-axis — sharded over `data`/`pod` in the production mesh), mask each dense
-local delta for upload, (optionally DP clip+noise), aggregate, and apply
-the FedAdam server update.  All strategy logic lives in the flat global
-vector space; the model only ever sees the unflattened LoRA pytree.
+One call = one FL round: ask the `Strategy` (resolved through the registry
+in `core.strategies`) for a global download mask and one `RoundPlan` per
+client, stack the plans onto the vmapped client axis (sharded over
+`data`/`pod` in the production mesh), run every client's local SGD(
++momentum) epochs in parallel, route both message directions through the
+`core.transport` pipeline (mask -> quantize), (optionally DP clip+noise),
+aggregate, apply the FedAdam server update, and hand the round back to the
+strategy's `post_round` hook.  All strategy logic lives behind the hook
+protocol — this module contains no per-strategy branches.
+
+Homogeneous and heterogeneous cohorts share one code path: per-client plan
+fields that are identical objects collapse to broadcast operands
+(`in_axes=None`), anything client-varying rides the vmapped axis — which
+is also what guarantees heterogeneous runs get the same quantization
+treatment as homogeneous ones.
 
 This function *is* the object lowered by the multi-pod dry-run for the
 `train_4k` shape.
@@ -14,7 +23,6 @@ This function *is* the object lowered by the multi-pod dry-run for the
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -22,9 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dp as dp_mod
-from repro.core import quantization as qz
-from repro.core import sparsity as sp
 from repro.core import strategies as st
+from repro.core import transport as tp
 from repro.models.config import FederatedConfig
 from repro.optim import adam_init, adam_update
 
@@ -63,16 +70,19 @@ class FlatMeta:
             off += n
         return jax.tree.unflatten(self.treedef, out)
 
+    def plan_context(self, n_clients: int) -> st.PlanContext:
+        return st.PlanContext(p_len=self.p_len, n_clients=n_clients,
+                              rank_idx=self.rank_idx, is_b=self.is_b)
+
 
 def init_server(flatP: jax.Array):
     return {"opt": adam_init(flatP), "round": jnp.zeros((), jnp.int32)}
 
 
-def _client_update(flat0, cbatch, m_train, up_mode, *, loss_of, meta: FlatMeta,
-                   fed: FederatedConfig, exact_topk: bool,
-                   quant_bits_up: int = 0, quant_key=None):
+def _client_update(flat0, cbatch, m_train, up_pipe: tp.Pipeline, *,
+                   loss_of, meta: FlatMeta, fed: FederatedConfig, up_key=None):
     """One client's local epoch(s). cbatch leaves: (local_steps, local_bs, ...).
-    Returns (masked[, quantized] flat delta, up_nnz, mean loss)."""
+    Returns (upload message values, up_nnz, mean loss)."""
 
     def grad_step(carry, mb):
         flat, mu = carry
@@ -86,77 +96,105 @@ def _client_update(flat0, cbatch, m_train, up_mode, *, loss_of, meta: FlatMeta,
     mu0 = jnp.zeros_like(flat0)
     (flatT, _), losses = jax.lax.scan(grad_step, (flat0, mu0), cbatch)
     delta = flat0 - flatT                                     # pseudo-gradient sign
-    mode, arg = up_mode
-    if mode == "topk":
-        delta, nnz = sp.sparsify(delta, arg, exact=exact_topk)
-    else:
-        delta = delta * arg
-        nnz = jnp.sum((delta != 0).astype(jnp.float32))
-    if quant_bits_up:
-        delta = qz.quantize_roundtrip(delta, quant_bits_up, quant_key)
-    return delta, nnz, jnp.mean(losses)
+    msg = up_pipe(delta, key=up_key)
+    return msg.values, msg.nnz, jnp.mean(losses)
+
+
+def _share_or_stack(items):
+    """(value, vmap in_axis): identical plan fields become a broadcast
+    operand; client-varying fields are stacked on the vmapped axis."""
+    if all(it is items[0] for it in items):
+        return items[0], None
+    return jnp.stack(items), 0
+
+
+def _keep_count(p_len: int, density: float) -> int:
+    if density >= 1.0:
+        return p_len
+    return max(int(round(p_len * density)), 1)
 
 
 def federated_round(flatP, server_state, sstate, client_batches, rng, *,
                     loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
-                    spec: st.StrategySpec, spmd_axis_name=None):
+                    strategy: Optional[st.StrategyLike] = None,
+                    spec: Optional[st.StrategySpec] = None,
+                    spmd_axis_name=None):
     """One round. client_batches leaves: (n_clients, local_steps, local_bs, ...).
 
-    `spmd_axis_name` (e.g. ('data',) or ('pod','data')) shards the vmapped
-    client axis across the mesh in the production lowering.
+    `strategy` accepts a `Strategy` instance, a `StrategySpec`, or a kind
+    string (`spec` is the legacy alias).  `spmd_axis_name` (e.g. ('data',)
+    or ('pod','data')) shards the vmapped client axis across the mesh in
+    the production lowering.
     Returns (flatP', server_state', sstate', metrics).
     """
+    strat = st.resolve(strategy if strategy is not None else spec)
+    s = strat.spec
     round_idx = server_state["round"]
     n_clients = jax.tree.leaves(client_batches)[0].shape[0]
 
-    m_down_global = st.download_mask(spec, flatP, sstate, round_idx)
-    # server-side error feedback (flasc_ef): clients start from the
-    # residual-corrected masked weights; the unsent part feeds next round.
-    P_base = flatP + sstate["e"] if spec.kind == "flasc_ef" else flatP
+    m_down_global = strat.download_mask(flatP, sstate, round_idx)
+    P_base = strat.download_base(flatP, sstate)
+    ctx = meta.plan_context(n_clients)
+    plans = [strat.client_plan(m_down_global, c, ctx) for c in range(n_clients)]
 
-    per_client_masks = []
-    for c in range(n_clients):
-        m_dn, m_tr, up = st.client_masks(spec, m_down_global, c, meta.p_len,
-                                         meta.rank_idx, meta.is_b)
-        per_client_masks.append((m_dn, m_tr, up))
-
-    homogeneous = spec.kind not in ("hetlora",) and not spec.client_densities
-
-    qkeys = (jax.random.split(rng, n_clients + 1)
-             if (rng is not None and (spec.quant_bits_up or spec.quant_bits_down))
-             else None)
-    if homogeneous:
-        m_dn, m_tr, up = per_client_masks[0]
-        P_c = P_base * m_dn
-        if spec.quant_bits_down:
-            P_c = qz.quantize_roundtrip(P_c, spec.quant_bits_down,
-                                        qkeys[-1] if qkeys is not None else None)
-        run = functools.partial(_client_update, loss_of=loss_of, meta=meta,
-                                fed=fed, exact_topk=spec.exact_topk,
-                                quant_bits_up=spec.quant_bits_up)
-        if qkeys is not None:
-            deltas, nnzs, losses = jax.vmap(
-                lambda cb, k: run(P_c, cb, m_tr, up, quant_key=k),
-                spmd_axis_name=spmd_axis_name)(client_batches, qkeys[:-1])
-        else:
-            deltas, nnzs, losses = jax.vmap(
-                lambda cb: run(P_c, cb, m_tr, up),
-                spmd_axis_name=spmd_axis_name)(client_batches)
-        down_nnz = jnp.sum(m_dn.astype(jnp.float32))
+    # --- stack the plans onto the client axis -----------------------------
+    m_down_cs, ax_down = _share_or_stack([p.m_down for p in plans])
+    trains = [p.m_train for p in plans]
+    if all(t is None for t in trains):
+        m_train_cs, ax_train = None, None
     else:
-        outs = []
-        for c in range(n_clients):
-            m_dn, m_tr, up = per_client_masks[c]
-            cb = jax.tree.map(lambda x: x[c], client_batches)
-            outs.append(_client_update(P_base * m_dn, cb, m_tr, up,
-                                       loss_of=loss_of, meta=meta, fed=fed,
-                                       exact_topk=spec.exact_topk))
-        deltas = jnp.stack([o[0] for o in outs])
-        nnzs = jnp.stack([o[1] for o in outs])
-        losses = jnp.stack([o[2] for o in outs])
-        down_nnz = jnp.mean(jnp.stack(
-            [jnp.sum(m[0].astype(jnp.float32)) for m in per_client_masks]))
+        trains = [jnp.ones((meta.p_len,), bool) if t is None else t
+                  for t in trains]
+        m_train_cs, ax_train = _share_or_stack(trains)
 
+    up_modes = {p.upload.mode for p in plans}
+    assert len(up_modes) == 1, f"mixed upload modes unsupported: {up_modes}"
+    up_mode = up_modes.pop()
+    up_counts = None
+    if up_mode == "fixed":
+        up_cs, ax_up = _share_or_stack([p.upload.mask for p in plans])
+    else:
+        densities = [p.upload.density for p in plans]
+        if len(set(densities)) == 1:            # uniform density: static Top-K
+            up_cs, ax_up = None, None
+        else:                                   # per-client keep-counts
+            up_counts = jnp.asarray(
+                [_keep_count(meta.p_len, d) for d in densities], jnp.int32)
+            up_cs, ax_up = up_counts, 0
+
+    # --- per-message quantization keys (stochastic rounding) --------------
+    use_keys = rng is not None and (s.quant_bits_up or s.quant_bits_down)
+    qkeys = jax.random.split(rng, n_clients + 1) if use_keys else None
+    kdown = qkeys[-1] if use_keys else None     # shared: one broadcast message
+    upkeys, ax_key = (qkeys[:-1], 0) if use_keys else (None, None)
+
+    def one_client(m_dn, m_tr, up_arg, cb, kup):
+        down = tp.download_pipeline(m_dn, s.quant_bits_down)(P_base, key=kdown)
+        if up_mode == "fixed":
+            rule = st.UploadRule.fixed(up_arg)
+            pipe = tp.upload_pipeline(rule, s.quant_bits_up, exact=s.exact_topk)
+        elif up_counts is None:
+            pipe = tp.upload_pipeline(plans[0].upload, s.quant_bits_up,
+                                      exact=s.exact_topk)
+        else:
+            pipe = tp.upload_pipeline(plans[0].upload, s.quant_bits_up,
+                                      exact=s.exact_topk, count=up_arg)
+        values, nnz, loss = _client_update(down.values, cb, m_tr, pipe,
+                                           loss_of=loss_of, meta=meta, fed=fed,
+                                           up_key=kup)
+        return values, nnz, loss, down.nnz
+
+    deltas, nnzs, losses, down_nnzs = jax.vmap(
+        one_client, in_axes=(ax_down, ax_train, ax_up, 0, ax_key),
+        spmd_axis_name=spmd_axis_name)(
+        m_down_cs, m_train_cs, up_cs, client_batches, upkeys)
+
+    if ax_down is None:     # shared mask: bill the global mask support
+        down_nnz = jnp.sum(jnp.asarray(m_down_cs).astype(jnp.float32))
+    else:                   # per-client masks: average per-client size
+        down_nnz = jnp.mean(down_nnzs)
+
+    # --- aggregate + server update ----------------------------------------
     if fed.dp_clip > 0.0:
         key = rng if rng is not None else jax.random.key(0)
         pseudo_grad, _ = dp_mod.dp_aggregate(deltas, fed.dp_clip, fed.dp_noise, key)
@@ -170,9 +208,9 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
     else:   # FedAvg/FedSGD rule (paper Appendix A): W <- W - lr * mean(delta)
         flatP = flatP - fed.server_lr * pseudo_grad
         opt = server_state["opt"]
-    if spec.kind == "flasc_ef":
-        sstate = {"e": P_base * (1.0 - m_down_global)}   # unsent residual
-    sstate, flatP = st.update_strategy_state(spec, sstate, flatP, round_idx)
+
+    sstate, flatP = strat.post_round(sstate, flatP, P_base=P_base,
+                                     m_down=m_down_global, round_idx=round_idx)
     server_state = {"opt": opt, "round": round_idx + 1}
 
     metrics = {
@@ -180,15 +218,21 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
         "down_nnz": down_nnz,
         "up_nnz": jnp.sum(nnzs),
         "grad_norm": jnp.linalg.norm(pseudo_grad),
+        # per-message sizes for the ledger's per-message index/bitmap coding
+        "down_nnz_clients": down_nnzs,
+        "up_nnz_clients": nnzs,
     }
     return flatP, server_state, sstate, metrics
 
 
 def make_round_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
-                  spec: st.StrategySpec, spmd_axis_name=None):
-    """jit-ready closure over the static pieces."""
+                  strategy: st.StrategyLike, spmd_axis_name=None):
+    """jit-ready closure over the static pieces; `strategy` may be a
+    Strategy, StrategySpec, or kind string."""
+    strat = st.resolve(strategy)
+
     def fn(flatP, server_state, sstate, client_batches, rng):
         return federated_round(flatP, server_state, sstate, client_batches,
                                rng, loss_of=loss_of, meta=meta, fed=fed,
-                               spec=spec, spmd_axis_name=spmd_axis_name)
+                               strategy=strat, spmd_axis_name=spmd_axis_name)
     return fn

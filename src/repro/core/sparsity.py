@@ -46,6 +46,14 @@ def threshold_histogram(flat_abs: jax.Array, density: float,
     """Bisection threshold: keep-fraction(|x| >= t) ~= density."""
     n = flat_abs.shape[-1]
     k = jnp.asarray(max(int(round(n * density)), 1), jnp.float32)
+    return threshold_histogram_count(flat_abs, k, iters)
+
+
+def threshold_histogram_count(flat_abs: jax.Array, k, iters: int = 24
+                              ) -> jax.Array:
+    """Bisection threshold keeping ~k entries; `k` may be a traced scalar
+    (the per-client-count form used by the vmapped heterogeneous path)."""
+    k = jnp.asarray(k, jnp.float32)
     hi = jnp.max(flat_abs, axis=-1)
     lo = jnp.zeros_like(hi)
 
@@ -85,9 +93,38 @@ def topk_mask(flat: jax.Array, density: float, *, exact: bool = True,
     return a >= jnp.maximum(thr[..., None], 1e-38)
 
 
+def topk_mask_by_count(flat: jax.Array, k, *, exact: bool = True,
+                       iters: int = 24) -> jax.Array:
+    """`topk_mask` with a *traced* keep-count `k` (scalar int array).
+
+    Used inside the vmapped client axis when clients carry different upload
+    densities (flasc-het): the count varies per client, so the static-`k`
+    selection of `topk_mask` cannot be used.  The exact form reproduces
+    `topk_mask(exact=True)` bit-for-bit when `k` equals the static count:
+    same `argsort(-|x|)` order, same first-k selection, same tie-breaking.
+    """
+    a = jnp.abs(flat.astype(jnp.float32))
+    n = a.shape[-1]
+    k = jnp.asarray(k, jnp.int32)
+    if exact:
+        order = jnp.argsort(-a, axis=-1)                # descending by |x|
+        k_b = k[..., None] if k.ndim else k             # per-batch counts
+        keep = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32) < k_b, a.shape)
+        mask = jnp.zeros(a.shape, bool)
+        return jnp.put_along_axis(mask, order, keep, axis=-1, inplace=False)
+    thr = threshold_histogram_count(a, k, iters)
+    return a >= jnp.maximum(thr[..., None], 1e-38)
+
+
 def sparsify(flat: jax.Array, density: float, *, exact: bool = True) -> Tuple[jax.Array, jax.Array]:
     """Returns (masked vector, nnz count)."""
     m = topk_mask(flat, density, exact=exact)
+    return flat * m, jnp.sum(m, axis=-1)
+
+
+def sparsify_by_count(flat: jax.Array, k, *, exact: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """`sparsify` with a traced keep-count (see `topk_mask_by_count`)."""
+    m = topk_mask_by_count(flat, k, exact=exact)
     return flat * m, jnp.sum(m, axis=-1)
 
 

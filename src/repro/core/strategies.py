@@ -1,31 +1,30 @@
-"""Federated finetuning strategies: FLASC and every baseline in the paper.
+"""First-class federated strategies: a `Strategy` protocol + registry.
 
-All strategies are expressed over the *flat global vector* `P` (Algorithm 1)
-as three mask channels per round:
+A strategy answers three orthogonal questions about one FL round over the
+flat global vector `P` (Algorithm 1): which entries move *down*, which
+gradients *train*, and which entries move *up*.  Each answer is expressed
+through four hooks on the `Strategy` base class:
 
-  m_down  — applied to server weights before download
-  m_train — applied to client gradients (None = dense local finetuning)
-  m_up    — applied to the client delta before upload
+  init_state(p_len)                  -> persistent server-side pytree
+  download_mask(flatP, sstate, r)    -> global (p_len,) bool download mask
+  client_plan(m_down, slot, ctx)     -> per-client `RoundPlan`
+  post_round(sstate, flatP, ...)     -> end-of-round state transition
 
-| strategy       | m_down              | m_train        | m_up            |
-|----------------|---------------------|----------------|-----------------|
-| lora (dense)   | 1                   | 1              | 1               |
-| flasc          | TopK(P, d_down)     | 1 (dense!)     | TopK(Δ, d_up)   |
-| flasc_ef       | TopK(P+e, d_down)   | 1              | TopK(Δ, d_up)   |
-| sparse_adapter | fixed M (after r=1) | M              | M               |
-| fedselect      | TopK(P, d) (fresh)  | m_down         | m_down          |
-| adapter_lth    | LTH mask M_t        | M_t            | M_t             |
-| ffa            | 1                   | [is B entry]   | [is B entry]    |
-| hetlora        | rank<r_c (struct.)  | m_down(c)      | m_down(c)       |
+plus `download_base(flatP, sstate)` for strategies that correct the
+downloaded weights before masking (error feedback).  `core.fedround` is
+strategy-agnostic: it only ever calls these hooks, stacks the returned
+`RoundPlan`s onto the vmapped client axis, and routes messages through the
+`core.transport` pipeline.
 
-`full_ft` reuses `lora` over the backbone vector.  The only strategy with
-dense local training *and* independent up/down sparsity is FLASC — exactly
-the paper's point.
+Register a new strategy with `@register_strategy("name")`; it is then
+reachable from `StrategySpec(kind="name")`, the `Experiment` builder, and
+every benchmark.  See `docs/strategies.md` for the per-strategy mask table
+(formerly in this docstring) and a how-to-add-a-strategy recipe.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, ClassVar, Dict, Optional, Tuple, Type, Union
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +38,7 @@ KINDS = ("lora", "flasc", "flasc_ef", "sparse_adapter", "fedselect",
 
 @dataclasses.dataclass(frozen=True)
 class StrategySpec:
+    """Declarative strategy config; resolved to a `Strategy` via `resolve`."""
     kind: str = "flasc"
     density_down: float = 0.25
     density_up: float = 0.25
@@ -54,8 +54,149 @@ class StrategySpec:
     quant_bits_up: int = 0
 
     def __post_init__(self):
-        assert self.kind in KINDS, self.kind
+        # user strategies enter the registry after import time, so accept
+        # any registered kind, not just the eight built-ins
+        if self.kind not in KINDS and self.kind not in _REGISTRY:
+            raise ValueError(
+                f"unknown strategy kind {self.kind!r}; known: "
+                f"{tuple(sorted(set(KINDS) | set(_REGISTRY)))}")
 
+
+# ---------------------------------------------------------------------------
+# per-client round plans
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UploadRule:
+    """How one client turns its dense local delta into the upload message.
+
+    mode "topk":  Top-K of the delta at `density` (FLASC — the only rule
+                  compatible with dense local training).
+    mode "fixed": multiply by `mask`; nnz accounting counts actual nonzero
+                  values (the mask may cover entries the delta never touched).
+    """
+    mode: str                                   # "topk" | "fixed"
+    density: float = 1.0
+    mask: Optional[jax.Array] = None
+
+    def __post_init__(self):
+        assert self.mode in ("topk", "fixed"), self.mode
+
+    @classmethod
+    def topk(cls, density: float) -> "UploadRule":
+        return cls(mode="topk", density=float(density))
+
+    @classmethod
+    def fixed(cls, mask) -> "UploadRule":
+        return cls(mode="fixed", mask=mask)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """One client's plan for one round, in flat-vector space.
+
+    m_down  — (p_len,) bool: entries downloaded to this client
+    m_train — (p_len,) bool mask on local gradients, or None = dense local
+              finetuning (FLASC's distinguishing feature)
+    upload  — `UploadRule` for the delta upload
+    """
+    m_down: jax.Array
+    m_train: Optional[jax.Array]
+    upload: UploadRule
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanContext:
+    """Static per-round facts available to `client_plan`."""
+    p_len: int
+    n_clients: int
+    rank_idx: Optional[np.ndarray] = None       # per-entry LoRA rank component
+    is_b: Optional[np.ndarray] = None           # per-entry "is a B-matrix entry"
+
+
+# ---------------------------------------------------------------------------
+# the protocol + registry
+# ---------------------------------------------------------------------------
+
+class Strategy:
+    """Base strategy: dense download, dense training, upload = download mask.
+
+    Subclasses override any subset of the hooks.  Instances are lightweight,
+    stateless wrappers around a `StrategySpec`; all persistent state lives in
+    the `sstate` pytree threaded through the round function (so strategies
+    stay jit/scan-compatible).
+    """
+    kind: ClassVar[str] = "base"
+
+    def __init__(self, spec: Optional[StrategySpec] = None):
+        self.spec = spec if spec is not None else StrategySpec(kind=self.kind)
+        assert self.spec.kind == self.kind, (self.spec.kind, self.kind)
+
+    # --- hooks -------------------------------------------------------------
+    def init_state(self, p_len: int) -> Dict[str, Any]:
+        return {}
+
+    def download_mask(self, flatP, sstate, round_idx) -> jax.Array:
+        """Global (non-per-client) download mask. (p_len,) bool."""
+        return jnp.ones_like(flatP, bool)
+
+    def download_base(self, flatP, sstate) -> jax.Array:
+        """Vector the download mask is applied to (default: the raw server
+        weights; error-feedback strategies add their residual here)."""
+        return flatP
+
+    def client_plan(self, m_down, slot: int, ctx: PlanContext) -> RoundPlan:
+        return RoundPlan(m_down, None, UploadRule.fixed(m_down))
+
+    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
+        """End-of-round transition; returns (sstate', flatP') — strategies
+        may permanently zero pruned weights."""
+        return sstate, flatP
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.spec})"
+
+
+_REGISTRY: Dict[str, Type[Strategy]] = {}
+
+
+def register_strategy(kind: str):
+    """Class decorator: `@register_strategy("flasc")` makes the class
+    constructible from `StrategySpec(kind="flasc")` / the string "flasc"."""
+    def deco(cls: Type[Strategy]) -> Type[Strategy]:
+        assert issubclass(cls, Strategy), cls
+        cls.kind = kind
+        _REGISTRY[kind] = cls
+        return cls
+    return deco
+
+
+def registered_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+StrategyLike = Union[Strategy, StrategySpec, str]
+
+
+def resolve(obj: StrategyLike) -> Strategy:
+    """StrategySpec / kind-string / Strategy instance -> Strategy instance."""
+    if isinstance(obj, Strategy):
+        return obj
+    if isinstance(obj, StrategySpec):
+        try:
+            cls = _REGISTRY[obj.kind]
+        except KeyError:
+            raise KeyError(f"no strategy registered for kind={obj.kind!r}; "
+                           f"known: {registered_kinds()}") from None
+        return cls(obj)
+    if isinstance(obj, str):
+        return resolve(StrategySpec(kind=obj))
+    raise TypeError(f"cannot resolve {obj!r} to a Strategy")
+
+
+# ---------------------------------------------------------------------------
+# static flat-view metadata (shared by ffa / hetlora)
+# ---------------------------------------------------------------------------
 
 def rank_index_map(lora_tree) -> Tuple[np.ndarray, np.ndarray]:
     """Static per-entry metadata for the flat view: (rank_idx, is_b).
@@ -63,7 +204,7 @@ def rank_index_map(lora_tree) -> Tuple[np.ndarray, np.ndarray]:
     For a leaf 'a' (..., d_in, r): rank component = position % r.
     For a leaf 'b' (..., r, d_out): rank component = (position // d_out) % r.
     """
-    leaves, _ = jax.tree.flatten_with_path(lora_tree)
+    leaves, _ = jax.tree_util.tree_flatten_with_path(lora_tree)
     rank_idx, is_b = [], []
     for path, leaf in leaves:
         name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
@@ -83,82 +224,164 @@ def rank_index_map(lora_tree) -> Tuple[np.ndarray, np.ndarray]:
     return np.concatenate(rank_idx), np.concatenate(is_b)
 
 
-def init_strategy_state(spec: StrategySpec, p_len: int):
-    if spec.kind == "flasc_ef":
-        # beyond-paper: server-side error feedback for download sparsity —
-        # the Top-K residual accumulates and is re-offered next round
-        # (EF14/EF21-style; upload-side EF is infeasible cross-device
-        # because clients are stateless across rounds).
+# ---------------------------------------------------------------------------
+# the eight paper strategies
+# ---------------------------------------------------------------------------
+
+@register_strategy("lora")
+class DenseLoRA(Strategy):
+    """Dense LoRA (FedIT): everything moves, everything trains.  `full_ft`
+    reuses this over the backbone vector."""
+
+
+@register_strategy("flasc")
+class Flasc(Strategy):
+    """FLASC: Top-K download of P, *dense* local training, independent Top-K
+    upload of the delta — the paper's method."""
+
+    def download_mask(self, flatP, sstate, round_idx):
+        return sp.topk_mask(flatP, self.spec.density_down,
+                            exact=self.spec.exact_topk)
+
+    def client_plan(self, m_down, slot, ctx):
+        s = self.spec
+        d_up = s.client_densities[slot] if s.client_densities else s.density_up
+        return RoundPlan(m_down, None, UploadRule.topk(d_up))
+
+
+@register_strategy("flasc_ef")
+class FlascEF(Flasc):
+    """FLASC + server-side error feedback for download sparsity (beyond-
+    paper, EF14/EF21-style): the Top-K residual accumulates and is re-offered
+    next round.  Upload-side EF is infeasible cross-device because clients
+    are stateless across rounds."""
+
+    def init_state(self, p_len):
         return {"e": jnp.zeros((p_len,), jnp.float32)}
-    if spec.kind == "sparse_adapter":
+
+    def download_mask(self, flatP, sstate, round_idx):
+        return sp.topk_mask(flatP + sstate["e"], self.spec.density_down,
+                            exact=self.spec.exact_topk)
+
+    def download_base(self, flatP, sstate):
+        return flatP + sstate["e"]
+
+    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
+        return {"e": P_base * (1.0 - m_down)}, flatP     # unsent residual
+
+
+@register_strategy("sparse_adapter")
+class SparseAdapter(Strategy):
+    """Fixed sparse adapter (paper Appx A): one dense round, then magnitude-
+    prune once and freeze the mask for download, training, and upload."""
+
+    def init_state(self, p_len):
         return {"mask": jnp.ones((p_len,), jnp.bool_),
                 "initialized": jnp.zeros((), jnp.bool_)}
-    if spec.kind == "adapter_lth":
-        return {"mask": jnp.ones((p_len,), jnp.bool_),
-                "density": jnp.ones((), jnp.float32)}
-    return {}
 
-
-def download_mask(spec: StrategySpec, flatP, sstate, round_idx):
-    """Global (non-per-client) download mask. (p_len,) bool."""
-    if spec.kind == "flasc":
-        return sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk)
-    if spec.kind == "flasc_ef":
-        return sp.topk_mask(flatP + sstate["e"], spec.density_down,
-                            exact=spec.exact_topk)
-    if spec.kind == "fedselect":
-        return sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk)
-    if spec.kind == "sparse_adapter":
+    def download_mask(self, flatP, sstate, round_idx):
         return sstate["mask"]
-    if spec.kind == "adapter_lth":
-        return sstate["mask"]
-    return jnp.ones_like(flatP, bool)       # lora, ffa, (hetlora handled per client)
 
+    def client_plan(self, m_down, slot, ctx):
+        return RoundPlan(m_down, m_down, UploadRule.fixed(m_down))
 
-def client_masks(spec: StrategySpec, m_down, client_slot: int, p_len: int,
-                 rank_idx=None, is_b=None):
-    """(m_down_c, m_train_c, m_up_mode) for one client slot.
-    m_up_mode: None => TopK of delta at upload density (FLASC); otherwise a
-    fixed mask array."""
-    if spec.kind in ("flasc", "flasc_ef"):
-        d_up = spec.client_densities[client_slot] if spec.client_densities else spec.density_up
-        return m_down, None, ("topk", d_up)
-    if spec.kind == "lora":
-        return m_down, None, ("fixed", m_down)
-    if spec.kind in ("sparse_adapter", "fedselect", "adapter_lth"):
-        return m_down, m_down, ("fixed", m_down)
-    if spec.kind == "ffa":
-        m_train = jnp.asarray(is_b == 1)
-        return m_down, m_train, ("fixed", m_train)
-    if spec.kind == "hetlora":
-        r_c = spec.hetlora_ranks[client_slot]
-        m = jnp.asarray(rank_idx < r_c)
-        return m, m, ("fixed", m)
-    raise ValueError(spec.kind)
+    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
+        spec = self.spec
 
-
-def update_strategy_state(spec: StrategySpec, sstate, flatP, round_idx):
-    """End-of-round state transition. Returns (sstate, flatP) — Adapter-LTH
-    permanently zeroes pruned weights."""
-    if spec.kind == "sparse_adapter":
-        # paper Appx A: one dense round, then magnitude-prune once, freeze.
         def first(_):
-            return {"mask": sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk),
+            return {"mask": sp.topk_mask(flatP, spec.density_down,
+                                         exact=spec.exact_topk),
                     "initialized": jnp.ones((), jnp.bool_)}
+
         def rest(_):
             return sstate
-        sstate = jax.lax.cond(sstate["initialized"], rest, first, None)
-        return sstate, flatP
-    if spec.kind == "adapter_lth":
+
+        return jax.lax.cond(sstate["initialized"], rest, first, None), flatP
+
+
+@register_strategy("fedselect")
+class FedSelect(Strategy):
+    """Federated Select: a fresh Top-K mask of P each round, shared by
+    download, training, and upload."""
+
+    def download_mask(self, flatP, sstate, round_idx):
+        return sp.topk_mask(flatP, self.spec.density_down,
+                            exact=self.spec.exact_topk)
+
+    def client_plan(self, m_down, slot, ctx):
+        return RoundPlan(m_down, m_down, UploadRule.fixed(m_down))
+
+
+@register_strategy("adapter_lth")
+class AdapterLTH(Strategy):
+    """Lottery-ticket adapter: multiplicative density decay with permanent
+    pruning every `lth_prune_every` rounds."""
+
+    def init_state(self, p_len):
+        return {"mask": jnp.ones((p_len,), jnp.bool_),
+                "density": jnp.ones((), jnp.float32)}
+
+    def download_mask(self, flatP, sstate, round_idx):
+        return sstate["mask"]
+
+    def client_plan(self, m_down, slot, ctx):
+        return RoundPlan(m_down, m_down, UploadRule.fixed(m_down))
+
+    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
+        spec = self.spec
+
         def prune(_):
             dens = jnp.maximum(sstate["density"] * spec.lth_keep, 1e-4)
             masked = jnp.where(sstate["mask"], jnp.abs(flatP), 0.0)
             thr = sp.threshold_exact_dynamic(masked, dens)
             mask = masked >= jnp.maximum(thr, 1e-38)
             return {"mask": mask, "density": dens}
+
         def keep(_):
             return sstate
+
         do = (round_idx % spec.lth_prune_every == 0) & (round_idx > 0)
-        sstate = jax.lax.cond(do, prune, keep, None)
-        return sstate, flatP * sstate["mask"]
-    return sstate, flatP
+        sstate2 = jax.lax.cond(do, prune, keep, None)
+        return sstate2, flatP * sstate2["mask"]
+
+
+@register_strategy("ffa")
+class FFALoRA(Strategy):
+    """FFA-LoRA: download everything, but train and upload only the B
+    matrices (A frozen at init) — halves upload and fixes DP aggregation
+    bias."""
+
+    _mask_cache = None
+
+    def client_plan(self, m_down, slot, ctx):
+        assert ctx.is_b is not None, "ffa needs FlatMeta rank metadata"
+        # slot-independent within one round's PlanContext: hand every client
+        # the same array so the round function broadcasts it over the client
+        # axis instead of stacking copies.  Keyed on the context object, so
+        # reusing the Strategy instance across models stays correct.
+        if self._mask_cache is None or self._mask_cache[0] is not ctx:
+            self._mask_cache = (ctx, jnp.asarray(ctx.is_b == 1))
+        m_train = self._mask_cache[1]
+        return RoundPlan(m_down, m_train, UploadRule.fixed(m_train))
+
+
+@register_strategy("hetlora")
+class HetLoRA(Strategy):
+    """Heterogeneous LoRA: client c sees only the leading `hetlora_ranks[c]`
+    rank components (structured nested masks) for download, training, and
+    upload."""
+
+    def client_plan(self, m_down, slot, ctx):
+        assert ctx.rank_idx is not None, "hetlora needs FlatMeta rank metadata"
+        r_c = self.spec.hetlora_ranks[slot]
+        m = jnp.asarray(ctx.rank_idx < r_c)
+        return RoundPlan(m, m, UploadRule.fixed(m))
+
+
+# ---------------------------------------------------------------------------
+# legacy functional surface (kept for callers that predate the registry)
+# ---------------------------------------------------------------------------
+
+def init_strategy_state(spec: StrategyLike, p_len: int):
+    """Legacy alias for `resolve(spec).init_state(p_len)`."""
+    return resolve(spec).init_state(p_len)

@@ -1,0 +1,150 @@
+"""Composable client<->server message transport.
+
+A message is a dense-embedded sparse vector plus its accounting metadata;
+a `Pipeline` is an ordered tuple of stages applied inside the (possibly
+vmapped) round function:
+
+    topk-mask / fixed-mask  ->  quantize  ->  [index/bitmap coding]
+
+The first two stages transform values on-device; coding never changes
+values — it determines the *wire* size of the message, which
+`CommLedger.record_round` accumulates via `comm.coded_message_bytes`
+(min of index-coded and bitmap-coded forms).
+
+Stages are tiny dataclasses so they can close over traced per-client
+arrays (a client's download mask, its Top-K keep-count) when constructed
+inside `jax.vmap`.  Build pipelines directly, or from a strategy's
+`UploadRule` via `upload_pipeline` / from a download mask via
+`download_pipeline`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qz
+from repro.core import sparsity as sp
+from repro.core.strategies import UploadRule
+
+
+@dataclasses.dataclass
+class Message:
+    """One transmitted vector: dense-embedded values + accounting."""
+    values: jax.Array                   # (p_len,) f32, zeros off-support
+    nnz: jax.Array                      # scalar: transmitted entry count
+    value_bits: float = 32.0            # per-value wire width after coding
+
+    @classmethod
+    def dense(cls, values) -> "Message":
+        return cls(values, jnp.asarray(values.shape[-1], jnp.float32))
+
+
+class Stage:
+    """Transport stage protocol: Message -> Message."""
+
+    def __call__(self, msg: Message, *, key=None) -> Message:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class MaskSparsify(Stage):
+    """Multiply by a fixed mask.  `count_mask=True` bills the mask support
+    (download: the server sends every selected entry, zero or not);
+    `count_mask=False` bills actual nonzero values (upload: a fixed-mask
+    delta only transmits entries local training moved)."""
+    mask: Any
+    count_mask: bool = False
+
+    def __call__(self, msg: Message, *, key=None) -> Message:
+        values = msg.values * self.mask
+        if self.count_mask:
+            nnz = jnp.sum(jnp.asarray(self.mask).astype(jnp.float32))
+        else:
+            nnz = jnp.sum((values != 0).astype(jnp.float32))
+        return dataclasses.replace(msg, values=values, nnz=nnz)
+
+
+@dataclasses.dataclass
+class TopKSparsify(Stage):
+    """Magnitude Top-K.  Exactly one of `density` (static) or `count`
+    (possibly traced, per-client) must be set."""
+    density: Optional[float] = None
+    count: Any = None
+    exact: bool = True
+
+    def __call__(self, msg: Message, *, key=None) -> Message:
+        assert (self.density is None) != (self.count is None)
+        if self.density is not None:
+            values, nnz = sp.sparsify(msg.values, self.density, exact=self.exact)
+        else:
+            values, nnz = sp.sparsify_by_count(msg.values, self.count,
+                                               exact=self.exact)
+        return dataclasses.replace(msg, values=values, nnz=nnz)
+
+
+@dataclasses.dataclass
+class Quantize(Stage):
+    """Uniform symmetric b-bit quantization of the surviving values
+    (stochastic rounding when a key is supplied — unbiased)."""
+    bits: int
+
+    def __call__(self, msg: Message, *, key=None) -> Message:
+        if not self.bits:
+            return msg
+        values = qz.quantize_roundtrip(msg.values, self.bits, key)
+        return dataclasses.replace(msg, values=values,
+                                   value_bits=float(self.bits))
+
+
+@dataclasses.dataclass
+class Pipeline:
+    """Ordered stage composition.  Call with a dense vector; returns the
+    receiver-side `Message`."""
+    stages: Tuple[Stage, ...] = ()
+
+    def __call__(self, values: jax.Array, *, key=None) -> Message:
+        msg = Message.dense(values)
+        for stage in self.stages:
+            msg = stage(msg, key=key)
+        return msg
+
+    @property
+    def value_bits(self) -> float:
+        """Wire width per value after all stages (32 unless quantized)."""
+        bits = 32.0
+        for stage in self.stages:
+            if isinstance(stage, Quantize) and stage.bits:
+                bits = float(stage.bits)
+        return bits
+
+    @property
+    def value_bytes(self) -> float:
+        return self.value_bits / 8.0
+
+
+def download_pipeline(mask, quant_bits: int = 0) -> Pipeline:
+    """Server -> client: mask the weight vector, optionally quantize."""
+    stages: Tuple[Stage, ...] = (MaskSparsify(mask, count_mask=True),)
+    if quant_bits:
+        stages += (Quantize(quant_bits),)
+    return Pipeline(stages)
+
+
+def upload_pipeline(rule: UploadRule, quant_bits: int = 0, *,
+                    exact: bool = True, count=None) -> Pipeline:
+    """Client -> server from a strategy's `UploadRule`.  Pass `count` to
+    override a topk rule's static density with a (traced) keep-count."""
+    if rule.mode == "topk":
+        if count is not None:
+            stage: Stage = TopKSparsify(count=count, exact=exact)
+        else:
+            stage = TopKSparsify(density=rule.density, exact=exact)
+    else:
+        stage = MaskSparsify(rule.mask)
+    stages: Tuple[Stage, ...] = (stage,)
+    if quant_bits:
+        stages += (Quantize(quant_bits),)
+    return Pipeline(stages)

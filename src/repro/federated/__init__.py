@@ -1,1 +1,6 @@
-from repro.federated.runtime import run_experiment, ExperimentResult, model_for_task, pretrain, evaluate
+from repro.federated.api import Experiment, ModelOptions, TrainOptions
+from repro.federated.runtime import (run_experiment, ExperimentResult,
+                                     model_for_task, pretrain, evaluate)
+
+__all__ = ["Experiment", "ModelOptions", "TrainOptions", "run_experiment",
+           "ExperimentResult", "model_for_task", "pretrain", "evaluate"]

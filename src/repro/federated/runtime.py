@@ -1,5 +1,6 @@
-"""End-to-end federated finetuning runtime: the experiment driver used by
-benchmarks/ and examples/.
+"""Federated finetuning runtime helpers: task-model construction, central
+pretraining, and evaluation — shared by the `Experiment` builder in
+`federated.api` (the experiment driver) and by benchmarks/examples.
 
 Flow (mirrors the paper's setup):
   1. build a backbone for the task (ViT-encoder classifier for image tasks,
@@ -7,13 +8,15 @@ Flow (mirrors the paper's setup):
   2. "pretrain" it centrally on pooled data for a few steps (the paper's
      premise of a good frozen initialization),
   3. inject LoRA, freeze the backbone,
-  4. run R federated rounds under a StrategySpec (FLASC / baselines),
+  4. run R federated rounds under a registered Strategy (FLASC / baselines),
      tracking the communication ledger and eval utility.
+
+`run_experiment` below is the legacy entry point, kept as a thin shim over
+`federated.api.Experiment`.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -24,11 +27,9 @@ from repro.core import comm as comm_mod
 from repro.core import fedround
 from repro.core import strategies as st
 from repro.data.datasets import TASKS, FederatedTask
-from repro.data.pipeline import eval_batches, sample_round
-from repro.models import lora as lora_mod
+from repro.data.pipeline import eval_batches
 from repro.models import model as mdl
-from repro.models.config import FederatedConfig, LoRAConfig, ModelConfig
-from repro.models.layers import init_params
+from repro.models.config import FederatedConfig, ModelConfig
 from repro.optim import adam_init, adam_update
 
 
@@ -140,69 +141,23 @@ class ExperimentResult:
         return None
 
 
-def run_experiment(task: FederatedTask, *, spec: st.StrategySpec,
+def run_experiment(task: FederatedTask, *, spec: st.StrategyLike,
                    fed: FederatedConfig, rounds: int, lora_rank: int = 16,
                    lora_alpha: float = 32.0, model_kw: Optional[dict] = None,
                    pretrain_steps: int = 100, train_head: bool = True,
                    eval_every: int = 10, seed: int = 0,
                    full_finetune: bool = False,
                    params_and_cfg=None, verbose: bool = False) -> ExperimentResult:
-    cfg = model_for_task(task, **(model_kw or {}))
+    """Legacy entry point: thin shim over `federated.api.Experiment`."""
+    from repro.federated.api import Experiment, TrainOptions
+
+    exp = (Experiment(task, strategy=spec, federation=fed)
+           .with_model(**(model_kw or {}))
+           .with_lora(rank=lora_rank, alpha=lora_alpha)
+           .with_training(TrainOptions(
+               rounds=rounds, pretrain_steps=pretrain_steps,
+               train_head=train_head, eval_every=eval_every, seed=seed,
+               full_finetune=full_finetune, verbose=verbose)))
     if params_and_cfg is not None:
-        params, cfg = params_and_cfg
-    else:
-        params = init_params(mdl.model_spec(cfg), jax.random.key(seed))
-        if pretrain_steps:
-            params, _ = pretrain(params, cfg, task, pretrain_steps, seed=seed)
-
-    lcfg = LoRAConfig(rank=lora_rank, alpha=lora_alpha)
-    if full_finetune:
-        trainable = {"lora": {}, "head": {}, "backbone": params}
-        meta = fedround.FlatMeta.of(trainable)
-        scale = 1.0
-    else:
-        lora0 = lora_mod.init_lora(cfg, lcfg, jax.random.key(seed + 1))
-        trainable: Dict[str, Any] = {"lora": lora0}
-        if train_head and cfg.num_classes > 0:
-            trainable["head"] = {"cls_head": params["cls_head"],
-                                 "final_norm": params["final_norm"]}
-        meta = fedround.FlatMeta.of(trainable)
-        scale = lcfg.scale
-
-    def loss_of(tree, mb):
-        if full_finetune:
-            return task_loss(tree["backbone"], cfg, mb)
-        p = dict(params)
-        if "head" in tree:
-            p.update(tree["head"])
-        return mdl.loss_fn(p, cfg, _task_batch(cfg, mb), lora=tree["lora"],
-                           lora_scale=scale)
-
-    flatP = meta.flatten(trainable)
-    server = fedround.init_server(flatP)
-    sstate = st.init_strategy_state(spec, meta.p_len)
-    round_fn = jax.jit(fedround.make_round_fn(loss_of, meta, fed, spec))
-    ledger = comm_mod.CommLedger(
-        total_params=meta.p_len,
-        down_value_bytes=(spec.quant_bits_down / 8.0) if spec.quant_bits_down else 4.0,
-        up_value_bytes=(spec.quant_bits_up / 8.0) if spec.quant_bits_up else 4.0)
-
-    history: List[Dict[str, float]] = []
-    acc = 0.0
-    for r in range(rounds):
-        batch_np = sample_round(task, fed, r, seed=seed)
-        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        key = jax.random.fold_in(jax.random.key(seed + 2), r)
-        flatP, server, sstate, m = round_fn(flatP, server, sstate, batch, key)
-        ledger.record_round(fed.n_clients, float(m["down_nnz"]), float(m["up_nnz"]))
-        rec = {"round": r, "loss": float(m["loss"]),
-               "down_bytes": ledger.down_bytes, "up_bytes": ledger.up_bytes,
-               "total_bytes": ledger.total_bytes}
-        if (r + 1) % eval_every == 0 or r == rounds - 1:
-            acc = evaluate(params, cfg, trainable, meta, task, scale, flatP)
-            rec["acc"] = acc
-            if verbose:
-                print(f"  round {r+1:4d} loss={rec['loss']:.4f} acc={acc:.4f} "
-                      f"comm={ledger.total_bytes/1e6:.2f}MB")
-        history.append(rec)
-    return ExperimentResult(history, ledger, acc)
+        exp.with_params(*params_and_cfg)
+    return exp.run()

@@ -125,6 +125,8 @@ def lower_combo(arch: str, shape_name: str, mesh, *, lora_rank: int = 16,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # older jax: per-device dict list
+        cost = cost[0] if cost else {}
     chips = mesh_chip_count(mesh)
     hlo = compiled.as_text()
     coll = hloprof.profile(hlo, default_group=chips)  # trip-count aware

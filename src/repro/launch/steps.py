@@ -112,8 +112,10 @@ def specs_to_shardings(spec_tree, mesh):
 # ---------------------------------------------------------------------------
 
 def build_train_step(cfg: ModelConfig, lcfg: LoRAConfig, fed: FederatedConfig,
-                     spec: st.StrategySpec, meta: fedround.FlatMeta,
+                     strategy: st.StrategyLike, meta: fedround.FlatMeta,
                      window=None, spmd_axis_name=None):
+    strat = st.resolve(strategy)
+
     def loss_of_factory(params):
         def loss_of(lora_tree, mb):
             return mdl.loss_fn(params, cfg, mb, lora=lora_tree,
@@ -124,7 +126,7 @@ def build_train_step(cfg: ModelConfig, lcfg: LoRAConfig, fed: FederatedConfig,
         loss_of = loss_of_factory(params)
         return fedround.federated_round(flatP, server, sstate, batches, rng,
                                         loss_of=loss_of, meta=meta, fed=fed,
-                                        spec=spec,
+                                        strategy=strat,
                                         spmd_axis_name=spmd_axis_name)
     return train_step
 

@@ -55,8 +55,9 @@ def main():
     meta = fedround.FlatMeta.of(lora0)
     fed = FederatedConfig(n_clients=4, local_batch=4, local_steps=1,
                           client_lr=1e-3, server_lr=2e-3)
-    spec = st.StrategySpec(kind=args.strategy, density_down=args.density,
-                           density_up=args.density)
+    strategy = st.resolve(st.StrategySpec(kind=args.strategy,
+                                          density_down=args.density,
+                                          density_up=args.density))
 
     S = 32
     rng = np.random.default_rng(0)
@@ -79,8 +80,8 @@ def main():
 
     flatP = meta.flatten(lora0)
     server = fedround.init_server(flatP)
-    sstate = st.init_strategy_state(spec, meta.p_len)
-    fn = jax.jit(fedround.make_round_fn(loss_of, meta, fed, spec))
+    sstate = strategy.init_state(meta.p_len)
+    fn = jax.jit(fedround.make_round_fn(loss_of, meta, fed, strategy))
     ledger = CommLedger(total_params=meta.p_len)
     for r in range(args.rounds):
         flatP, server, sstate, m = fn(flatP, server, sstate, batch_for_round(r),

@@ -1,0 +1,205 @@
+"""Frozen copy of the SEED strategy dispatch + federated round (pre-registry
+if/elif implementation), kept verbatim as the equivalence reference for
+`test_strategy_registry.py`.  Do not modernize this file: its whole value is
+that it reproduces the seed semantics bit-for-bit.
+
+Two mechanical deviations from the seed, neither affecting numerics:
+  * imports are routed through the current `sparsity`/`quantization`
+    modules (whose seed entry points are unchanged),
+  * the seed's `jax.tree.flatten_with_path` call lived in
+    `rank_index_map`, which this file reuses from `repro.core.strategies`
+    (the function is unchanged apart from that API-spelling fix).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qz
+from repro.core import sparsity as sp
+from repro.core.fedround import FlatMeta  # unchanged flatten metadata
+from repro.core.strategies import StrategySpec
+
+
+# --- seed strategies.py dispatch -------------------------------------------
+
+def init_strategy_state(spec: StrategySpec, p_len: int):
+    if spec.kind == "flasc_ef":
+        return {"e": jnp.zeros((p_len,), jnp.float32)}
+    if spec.kind == "sparse_adapter":
+        return {"mask": jnp.ones((p_len,), jnp.bool_),
+                "initialized": jnp.zeros((), jnp.bool_)}
+    if spec.kind == "adapter_lth":
+        return {"mask": jnp.ones((p_len,), jnp.bool_),
+                "density": jnp.ones((), jnp.float32)}
+    return {}
+
+
+def download_mask(spec: StrategySpec, flatP, sstate, round_idx):
+    if spec.kind == "flasc":
+        return sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk)
+    if spec.kind == "flasc_ef":
+        return sp.topk_mask(flatP + sstate["e"], spec.density_down,
+                            exact=spec.exact_topk)
+    if spec.kind == "fedselect":
+        return sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk)
+    if spec.kind == "sparse_adapter":
+        return sstate["mask"]
+    if spec.kind == "adapter_lth":
+        return sstate["mask"]
+    return jnp.ones_like(flatP, bool)
+
+
+def client_masks(spec: StrategySpec, m_down, client_slot: int, p_len: int,
+                 rank_idx=None, is_b=None):
+    if spec.kind in ("flasc", "flasc_ef"):
+        d_up = (spec.client_densities[client_slot]
+                if spec.client_densities else spec.density_up)
+        return m_down, None, ("topk", d_up)
+    if spec.kind == "lora":
+        return m_down, None, ("fixed", m_down)
+    if spec.kind in ("sparse_adapter", "fedselect", "adapter_lth"):
+        return m_down, m_down, ("fixed", m_down)
+    if spec.kind == "ffa":
+        m_train = jnp.asarray(is_b == 1)
+        return m_down, m_train, ("fixed", m_train)
+    if spec.kind == "hetlora":
+        r_c = spec.hetlora_ranks[client_slot]
+        m = jnp.asarray(rank_idx < r_c)
+        return m, m, ("fixed", m)
+    raise ValueError(spec.kind)
+
+
+def update_strategy_state(spec: StrategySpec, sstate, flatP, round_idx):
+    if spec.kind == "sparse_adapter":
+        def first(_):
+            return {"mask": sp.topk_mask(flatP, spec.density_down,
+                                         exact=spec.exact_topk),
+                    "initialized": jnp.ones((), jnp.bool_)}
+
+        def rest(_):
+            return sstate
+        sstate = jax.lax.cond(sstate["initialized"], rest, first, None)
+        return sstate, flatP
+    if spec.kind == "adapter_lth":
+        def prune(_):
+            dens = jnp.maximum(sstate["density"] * spec.lth_keep, 1e-4)
+            masked = jnp.where(sstate["mask"], jnp.abs(flatP), 0.0)
+            thr = sp.threshold_exact_dynamic(masked, dens)
+            mask = masked >= jnp.maximum(thr, 1e-38)
+            return {"mask": mask, "density": dens}
+
+        def keep(_):
+            return sstate
+        do = (round_idx % spec.lth_prune_every == 0) & (round_idx > 0)
+        sstate = jax.lax.cond(do, prune, keep, None)
+        return sstate, flatP * sstate["mask"]
+    return sstate, flatP
+
+
+# --- seed fedround.py round function ---------------------------------------
+
+def _client_update(flat0, cbatch, m_train, up_mode, *, loss_of, meta,
+                   fed, exact_topk, quant_bits_up=0, quant_key=None):
+    def grad_step(carry, mb):
+        flat, mu = carry
+        loss, g = jax.value_and_grad(lambda f: loss_of(meta.unflatten(f), mb))(flat)
+        if m_train is not None:
+            g = g * m_train
+        mu = fed.client_momentum * mu + g
+        flat = flat - fed.client_lr * mu
+        return (flat, mu), loss
+
+    mu0 = jnp.zeros_like(flat0)
+    (flatT, _), losses = jax.lax.scan(grad_step, (flat0, mu0), cbatch)
+    delta = flat0 - flatT
+    mode, arg = up_mode
+    if mode == "topk":
+        delta, nnz = sp.sparsify(delta, arg, exact=exact_topk)
+    else:
+        delta = delta * arg
+        nnz = jnp.sum((delta != 0).astype(jnp.float32))
+    if quant_bits_up:
+        delta = qz.quantize_roundtrip(delta, quant_bits_up, quant_key)
+    return delta, nnz, jnp.mean(losses)
+
+
+def federated_round(flatP, server_state, sstate, client_batches, rng, *,
+                    loss_of, meta, fed, spec, spmd_axis_name=None):
+    from repro.core import dp as dp_mod
+    from repro.optim import adam_update
+
+    round_idx = server_state["round"]
+    n_clients = jax.tree.leaves(client_batches)[0].shape[0]
+
+    m_down_global = download_mask(spec, flatP, sstate, round_idx)
+    P_base = flatP + sstate["e"] if spec.kind == "flasc_ef" else flatP
+
+    per_client_masks = []
+    for c in range(n_clients):
+        m_dn, m_tr, up = client_masks(spec, m_down_global, c, meta.p_len,
+                                      meta.rank_idx, meta.is_b)
+        per_client_masks.append((m_dn, m_tr, up))
+
+    homogeneous = spec.kind not in ("hetlora",) and not spec.client_densities
+
+    qkeys = (jax.random.split(rng, n_clients + 1)
+             if (rng is not None and (spec.quant_bits_up or spec.quant_bits_down))
+             else None)
+    if homogeneous:
+        m_dn, m_tr, up = per_client_masks[0]
+        P_c = P_base * m_dn
+        if spec.quant_bits_down:
+            P_c = qz.quantize_roundtrip(P_c, spec.quant_bits_down,
+                                        qkeys[-1] if qkeys is not None else None)
+        run = functools.partial(_client_update, loss_of=loss_of, meta=meta,
+                                fed=fed, exact_topk=spec.exact_topk,
+                                quant_bits_up=spec.quant_bits_up)
+        if qkeys is not None:
+            deltas, nnzs, losses = jax.vmap(
+                lambda cb, k: run(P_c, cb, m_tr, up, quant_key=k),
+                spmd_axis_name=spmd_axis_name)(client_batches, qkeys[:-1])
+        else:
+            deltas, nnzs, losses = jax.vmap(
+                lambda cb: run(P_c, cb, m_tr, up),
+                spmd_axis_name=spmd_axis_name)(client_batches)
+        down_nnz = jnp.sum(m_dn.astype(jnp.float32))
+    else:
+        outs = []
+        for c in range(n_clients):
+            m_dn, m_tr, up = per_client_masks[c]
+            cb = jax.tree.map(lambda x: x[c], client_batches)
+            outs.append(_client_update(P_base * m_dn, cb, m_tr, up,
+                                       loss_of=loss_of, meta=meta, fed=fed,
+                                       exact_topk=spec.exact_topk))
+        deltas = jnp.stack([o[0] for o in outs])
+        nnzs = jnp.stack([o[1] for o in outs])
+        losses = jnp.stack([o[2] for o in outs])
+        down_nnz = jnp.mean(jnp.stack(
+            [jnp.sum(m[0].astype(jnp.float32)) for m in per_client_masks]))
+
+    if fed.dp_clip > 0.0:
+        key = rng if rng is not None else jax.random.key(0)
+        pseudo_grad, _ = dp_mod.dp_aggregate(deltas, fed.dp_clip, fed.dp_noise, key)
+    else:
+        pseudo_grad = jnp.mean(deltas, axis=0)
+
+    if fed.server_opt == "adam":
+        flatP, opt = adam_update(flatP, pseudo_grad, server_state["opt"],
+                                 fed.server_lr, fed.adam_b1, fed.adam_b2,
+                                 fed.adam_eps)
+    else:
+        flatP = flatP - fed.server_lr * pseudo_grad
+        opt = server_state["opt"]
+    if spec.kind == "flasc_ef":
+        sstate = {"e": P_base * (1.0 - m_down_global)}
+    sstate, flatP = update_strategy_state(spec, sstate, flatP, round_idx)
+    server_state = {"opt": opt, "round": round_idx + 1}
+
+    metrics = {
+        "loss": jnp.mean(losses),
+        "down_nnz": down_nnz,
+        "up_nnz": jnp.sum(nnzs),
+        "grad_norm": jnp.linalg.norm(pseudo_grad),
+    }
+    return flatP, server_state, sstate, metrics

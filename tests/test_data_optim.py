@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypcompat import given, settings, hst
 
 from repro.checkpoint.io import load_pytree, save_pytree
 from repro.data import datasets as ds

@@ -44,7 +44,10 @@ shardings = (sh(ins["params"]), sh(ins["flatP"]), sh(ins["server"]), {},
              sh(ins["batches"]), NamedSharding(mesh, PartitionSpec(None)))
 with activation_sharding(mesh, steps_mod.TRAIN_RULES):
     compiled = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
-out["train_flops"] = compiled.cost_analysis().get("flops", 0.0)
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):       # older jax: list of per-device dicts
+    ca = ca[0] if ca else {}
+out["train_flops"] = ca.get("flops", 0.0)
 
 # --- decode ---
 shape = InputShape("d", 64, 8, "decode")

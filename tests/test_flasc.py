@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypcompat import given, settings, hst
 
 from repro.core import comm as comm_mod
 from repro.core import dp as dp_mod
@@ -18,6 +18,7 @@ from repro.models.config import FederatedConfig
 # sparsity selectors
 # ---------------------------------------------------------------------------
 
+@pytest.mark.fast
 @settings(deadline=None, max_examples=25)
 @given(hst.integers(64, 4096), hst.sampled_from([0.01, 0.1, 0.25, 0.5, 0.9]),
        hst.integers(0, 2 ** 31 - 1))
@@ -35,6 +36,7 @@ def test_topk_mask_density(n, density, seed):
     assert kept_min >= dropped_max
 
 
+@pytest.mark.fast
 @settings(deadline=None, max_examples=15)
 @given(hst.integers(256, 8192), hst.sampled_from([0.05, 0.25, 0.5]),
        hst.integers(0, 2 ** 31 - 1))
@@ -47,6 +49,7 @@ def test_histogram_matches_exact(n, density, seed):
     assert abs(ke - kh) <= max(2, int(0.02 * n))
 
 
+@pytest.mark.fast
 def test_sparsify_counts():
     x = jnp.arange(1, 101, dtype=jnp.float32)
     masked, nnz = sp.sparsify(x, 0.25)
@@ -65,6 +68,7 @@ def _tiny_setup(kind="flasc", **kw):
     return trainable, meta, spec
 
 
+@pytest.mark.fast
 def test_rank_index_map():
     tree = {"x": {"a": jnp.zeros((6, 3)), "b": jnp.zeros((3, 5))}}
     rk, ib = st.rank_index_map(tree)
@@ -76,47 +80,65 @@ def test_rank_index_map():
     assert list(rk[18:28]) == [0] * 5 + [1] * 5
 
 
+@pytest.mark.fast
+def test_registry_covers_all_kinds():
+    for kind in st.KINDS:
+        strat = st.resolve(kind)
+        assert isinstance(strat, st.Strategy) and strat.kind == kind
+    with pytest.raises(ValueError, match="no_such_strategy"):
+        st.resolve("no_such_strategy")
+
+
+@pytest.mark.fast
 def test_ffa_mask_trains_only_b():
     _, meta, spec = _tiny_setup("ffa")
     m_down = jnp.ones((meta.p_len,), bool)
-    _, m_train, (mode, arg) = st.client_masks(spec, m_down, 0, meta.p_len,
-                                              meta.rank_idx, meta.is_b)
-    assert mode == "fixed"
-    assert int(jnp.sum(m_train)) == 4 * 8      # only b entries
+    plan = st.resolve(spec).client_plan(m_down, 0, meta.plan_context(1))
+    assert plan.upload.mode == "fixed"
+    assert int(jnp.sum(plan.m_train)) == 4 * 8      # only b entries
 
 
+@pytest.mark.fast
 def test_hetlora_rank_mask():
     _, meta, spec = _tiny_setup("hetlora", hetlora_ranks=(2, 4))
-    m0, _, _ = st.client_masks(spec, None, 0, meta.p_len, meta.rank_idx, meta.is_b)
-    m1, _, _ = st.client_masks(spec, None, 1, meta.p_len, meta.rank_idx, meta.is_b)
+    strat = st.resolve(spec)
+    ctx = meta.plan_context(2)
+    m0 = strat.client_plan(None, 0, ctx).m_down
+    m1 = strat.client_plan(None, 1, ctx).m_down
     assert int(jnp.sum(m0)) == 8 * 2 + 2 * 8   # rank-2 slice of a and b
     assert int(jnp.sum(m1)) == meta.p_len
     assert bool(jnp.all(m1 | ~m0))             # nested
 
 
+@pytest.mark.fast
 def test_adapter_lth_density_decays():
     p_len = 1000
-    spec = st.StrategySpec(kind="adapter_lth", lth_prune_every=1, lth_keep=0.9)
-    sstate = st.init_strategy_state(spec, p_len)
+    strat = st.resolve(st.StrategySpec(kind="adapter_lth", lth_prune_every=1,
+                                       lth_keep=0.9))
+    sstate = strat.init_state(p_len)
     flatP = jax.random.normal(jax.random.key(0), (p_len,))
     for r in range(1, 4):
-        sstate, flatP = st.update_strategy_state(spec, sstate, flatP, jnp.asarray(r))
+        sstate, flatP = strat.post_round(sstate, flatP, P_base=None,
+                                         m_down=None, round_idx=jnp.asarray(r))
         nnz = int(jnp.sum(sstate["mask"]))
         assert nnz == pytest.approx(p_len * 0.9 ** r, rel=0.05)
         # pruned weights are permanently zeroed
         assert int(jnp.sum(flatP != 0)) <= nnz
 
 
+@pytest.mark.fast
 def test_sparse_adapter_freezes_after_first_round():
     p_len = 200
-    spec = st.StrategySpec(kind="sparse_adapter", density_down=0.25)
-    sstate = st.init_strategy_state(spec, p_len)
+    strat = st.resolve(st.StrategySpec(kind="sparse_adapter", density_down=0.25))
+    sstate = strat.init_state(p_len)
     flatP = jax.random.normal(jax.random.key(0), (p_len,))
-    assert int(jnp.sum(st.download_mask(spec, flatP, sstate, 0))) == p_len
-    sstate, _ = st.update_strategy_state(spec, sstate, flatP, jnp.asarray(0))
-    m1 = st.download_mask(spec, flatP, sstate, 1)
+    assert int(jnp.sum(strat.download_mask(flatP, sstate, 0))) == p_len
+    sstate, _ = strat.post_round(sstate, flatP, P_base=None, m_down=None,
+                                 round_idx=jnp.asarray(0))
+    m1 = strat.download_mask(flatP, sstate, 1)
     assert int(jnp.sum(m1)) == 50
-    sstate2, _ = st.update_strategy_state(spec, sstate, flatP * 2, jnp.asarray(1))
+    sstate2, _ = strat.post_round(sstate, flatP * 2, P_base=None, m_down=None,
+                                  round_idx=jnp.asarray(1))
     assert bool(jnp.all(sstate2["mask"] == sstate["mask"]))  # frozen
 
 
@@ -217,6 +239,7 @@ def test_simulated_noise_multiplier():
 # communication accounting
 # ---------------------------------------------------------------------------
 
+@pytest.mark.fast
 def test_comm_ledger_math():
     led = comm_mod.CommLedger(total_params=1000)
     for _ in range(10):
@@ -231,6 +254,7 @@ def test_comm_ledger_math():
     assert t_slow_up > t_sym * 4  # upload-dominated
 
 
+@pytest.mark.fast
 def test_flasc_ef_residual_invariant():
     """flasc_ef (beyond-paper): the EF residual is exactly the unsent part
     of the corrected weights, and uploads stay at the nominal density."""
@@ -258,11 +282,33 @@ def test_flasc_ef_residual_invariant():
     assert jnp.isfinite(m2["loss"])
 
 
+@pytest.mark.fast
 def test_exact_topk_is_exactly_k_under_ties():
     x = jnp.concatenate([jnp.zeros(90), jnp.ones(10)])
     assert int(jnp.sum(sp.topk_mask(x, 0.25))) == 25
 
 
+@pytest.mark.fast
+def test_topk_by_count_matches_static_and_handles_batches():
+    x = jax.random.normal(jax.random.key(0), (257,))
+    for d in (0.1, 0.25, 0.5):
+        k = max(int(round(257 * d)), 1)
+        np.testing.assert_array_equal(
+            np.asarray(sp.topk_mask_by_count(x, k)),
+            np.asarray(sp.topk_mask(x, d)))
+    # batched input selects per row along the last axis
+    xb = jnp.asarray([[1., 9., 2., 8., 3., 7., 4., 6.],
+                      [9., 1., 8., 2., 7., 3., 6., 4.]])
+    mb = sp.topk_mask_by_count(xb, 4)
+    np.testing.assert_array_equal(np.asarray(mb),
+                                  np.asarray(sp.topk_mask(xb, 0.5)))
+    # traced count under vmap (the heterogeneous-upload path)
+    ks = jnp.asarray([2, 4])
+    mv = jax.vmap(lambda row, k: sp.topk_mask_by_count(row, k))(xb, ks)
+    assert [int(r.sum()) for r in mv] == [2, 4]
+
+
+@pytest.mark.fast
 def test_fedavg_server_rule():
     """server_opt='sgd' applies the plain FedAvg update W <- W - lr*mean(d)."""
     trainable = {"w": {"a": jnp.ones((4, 4)), "b": jnp.ones((4, 4))}}

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypcompat import given, settings, hst
 
 from repro.launch import hloprof
 from repro.launch.shardings import (DEFAULT_RULES, fsdp_rules,

@@ -4,12 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypcompat import given, settings, hst
 
 from repro.core import quantization as qz
 from repro.core.comm import CommLedger
 
 
+@pytest.mark.fast
 @settings(deadline=None, max_examples=20)
 @given(hst.integers(2, 8), hst.integers(0, 2 ** 31 - 1))
 def test_quantize_error_bound(bits, seed):
@@ -28,12 +29,14 @@ def test_stochastic_rounding_unbiased():
     assert bias < 0.15 * step        # ~sqrt(400) shrinkage of a U(step) err
 
 
+@pytest.mark.fast
 def test_quantize_preserves_zeros():
     x = jnp.asarray([0.0, 1.0, -1.0, 0.0])
     y = qz.quantize_roundtrip(x, 8)
     assert float(y[0]) == 0.0 and float(y[3]) == 0.0
 
 
+@pytest.mark.fast
 def test_ledger_quantized_widths():
     led = CommLedger(total_params=1000, down_value_bytes=1.0, up_value_bytes=0.5)
     led.record_round(n_clients=4, down_nnz=250, up_nnz_total=400)
