@@ -3,6 +3,11 @@
 Every harness prints CSV rows `figure,setting,metric,value` (plus a
 human-readable table) and returns the rows so benchmarks/run.py can
 aggregate everything into bench_output.txt.
+
+Engine selection: `BENCH_ENGINE=sharded` (or `run(..., engine=...)`)
+routes every harness through that registered engine backend instead of
+the default single-device sim path.  `BENCH_ENGINE=sharded:4` adds a
+rounds_per_call scan chunk.
 """
 from __future__ import annotations
 
@@ -15,9 +20,11 @@ from typing import Dict, List, Optional
 from repro.core.strategies import StrategyLike
 from repro.data import datasets as ds
 from repro.federated.api import Experiment
+from repro.federated.engine import resolve_engine
 from repro.models.config import FederatedConfig
 
 QUICK = os.environ.get("BENCH_QUICK", "1") != "0"
+ENGINE = os.environ.get("BENCH_ENGINE", "sim")
 
 # tiny model shared across figures (paper: ViT-B/GPT2 — reduced for 1 CPU core)
 MODEL_KW = dict(d_model=48, num_layers=2, num_heads=4, d_ff=96)
@@ -47,18 +54,55 @@ def default_fed(**kw) -> FederatedConfig:
     return FederatedConfig(**base)
 
 
+def _engine_for(name: str):
+    """'sim' | 'sharded' | 'sharded:<rounds_per_call>' -> Engine."""
+    if ":" in name:
+        name, k = name.split(":", 1)
+        try:
+            return resolve_engine(name, rounds_per_call=int(k))
+        except TypeError:
+            raise ValueError(
+                f"engine {name!r} does not support a rounds_per_call chunk "
+                f"(BENCH_ENGINE={name}:{k}); only 'sharded' scans rounds"
+            ) from None
+    return resolve_engine(name)
+
+
+# pretrained (params, cfg) per backbone identity — figure harnesses sweep
+# strategies over the SAME task/model/seed, so pretraining once per
+# combination instead of once per run cuts harness wall-clock.  Keyed on the
+# task object id; the task itself is stored in the entry, which keeps it
+# alive and so guarantees the id is never reused by a different task.
+_BACKBONES: Dict[tuple, tuple] = {}
+
+
+def pretrained_backbone(task, model_kw: dict, pretrain_steps: int, seed: int):
+    key = (id(task), tuple(sorted(model_kw.items())), pretrain_steps, seed)
+    if key not in _BACKBONES:
+        exp = (Experiment(task)
+               .with_model(**model_kw)
+               .with_training(pretrain_steps=pretrain_steps, seed=seed))
+        _BACKBONES[key] = (task, exp.build_backbone())
+    return _BACKBONES[key][1]
+
+
 def run(task, spec: StrategyLike, fed: Optional[FederatedConfig] = None,
         rounds: int = None, lora_rank: int = 16, seed: int = 0,
         model_kw: Optional[dict] = None, pretrain_steps: Optional[int] = None,
-        full_finetune: bool = False, **train_kw):
+        full_finetune: bool = False, engine: Optional[str] = None, **train_kw):
     t0 = time.time()
+    model_kw = model_kw or MODEL_KW
+    pretrain_steps = ((40 if QUICK else 150) if pretrain_steps is None
+                      else pretrain_steps)
+    params, cfg = pretrained_backbone(task, model_kw, pretrain_steps, seed)
     exp = (Experiment(task, strategy=spec, federation=fed or default_fed())
-           .with_model(**(model_kw or MODEL_KW))
+           .with_model(**model_kw)
            .with_lora(rank=lora_rank)
+           .with_params(params, cfg)
+           .with_engine(_engine_for(engine or ENGINE))
            .with_training(
                rounds=rounds or ROUNDS, eval_every=EVAL_EVERY, seed=seed,
-               pretrain_steps=(40 if QUICK else 150) if pretrain_steps is None
-               else pretrain_steps,
+               pretrain_steps=pretrain_steps,
                full_finetune=full_finetune, **train_kw))
     res = exp.run()
     res.elapsed = time.time() - t0

@@ -33,9 +33,14 @@ def main(tasks=("synth_image", "synth_text")):
             rows.append(row("fig2", key, "best_acc", res.best_acc()))
             rows.append(row("fig2", key, "final_acc", res.final_acc))
             rows.append(row("fig2", key, "total_MB", res.ledger.total_bytes / 1e6))
+            # practical wire format: values + min(index, bitmap) coding
+            rows.append(row("fig2", key, "coded_MB",
+                            res.ledger.total_coded_bytes / 1e6))
             dense = res.ledger.dense_equivalent_bytes(8)
             rows.append(row("fig2", key, "comm_vs_dense",
                             res.ledger.total_bytes / max(dense, 1)))
+            rows.append(row("fig2", key, "coded_vs_dense",
+                            res.ledger.total_coded_bytes / max(dense, 1)))
     return emit(rows, "Figure 2: utility vs communication")
 
 

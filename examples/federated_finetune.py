@@ -4,14 +4,17 @@
   PYTHONPATH=src python examples/federated_finetune.py --preset paper \
       --rounds 200        # GPT2-Small-scale backbone (124M) — hours on CPU
 
+  # continue an interrupted run from its latest snapshot:
+  PYTHONPATH=src python examples/federated_finetune.py --resume checkpoints/flasc
+
 The `paper` preset reproduces the paper's text setup (GPT2-style backbone,
 LoRA r=16, FedAdam, 10 clients/round); `tiny` runs the same pipeline at CPU
-scale in ~1 minute.
+scale in ~1 minute.  `--ckpt-every` snapshots the run through the engine's
+CheckpointCallback, and `--engine sharded` routes it through the SPMD
+backend (`docs/engines.md`).
 """
 import argparse
-import os
 
-from repro.checkpoint.io import save_pytree
 from repro.data.datasets import make_synth_reddit
 from repro.federated.api import Experiment
 from repro.models.config import FederatedConfig
@@ -35,26 +38,42 @@ def main():
     ap.add_argument("--density", type=float, default=0.25)
     ap.add_argument("--up-density", type=float, default=0.0)
     ap.add_argument("--rank", type=int, default=16)
-    ap.add_argument("--out", default="checkpoints/flasc_run.npz")
+    ap.add_argument("--engine", default=None,
+                    help="sim | sharded (resume keeps the saved engine "
+                         "unless overridden)")
+    ap.add_argument("--ckpt", default="checkpoints/flasc")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", default="",
+                    help="checkpoint dir to continue from (ignores presets)")
     args = ap.parse_args()
-    p = PRESETS[args.preset]
-    task = make_synth_reddit(n_users=256, vocab=min(p["vocab"], 4096), length=24)
-    fed = FederatedConfig(n_clients=10, local_batch=8, local_steps=1,
-                          client_lr=5e-4, server_lr=1e-3)
-    res = (Experiment(task, federation=fed)
-           .with_strategy("flasc", density_down=args.density,
-                          density_up=args.up_density or args.density)
-           .with_model(**p["model_kw"])
-           .with_lora(rank=args.rank)
-           .with_training(rounds=args.rounds or p["rounds"], eval_every=10,
-                          verbose=True)
-           .run())
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
-    save_pytree({"history_final_acc": res.final_acc}, args.out)
+
+    if args.resume:
+        exp = Experiment.resume(args.resume)
+        args.ckpt = args.resume
+        if args.rounds:
+            exp.with_training(rounds=args.rounds)
+    else:
+        p = PRESETS[args.preset]
+        task = make_synth_reddit(n_users=256, vocab=min(p["vocab"], 4096),
+                                 length=24)
+        fed = FederatedConfig(n_clients=10, local_batch=8, local_steps=1,
+                              client_lr=5e-4, server_lr=1e-3)
+        exp = (Experiment(task, federation=fed)
+               .with_strategy("flasc", density_down=args.density,
+                              density_up=args.up_density or args.density)
+               .with_model(**p["model_kw"])
+               .with_lora(rank=args.rank)
+               .with_training(rounds=args.rounds or p["rounds"], eval_every=10,
+                              verbose=True)
+               .with_checkpoint(args.ckpt, every=args.ckpt_every))
+    if args.engine:
+        exp.with_engine(args.engine)
+    res = exp.run()
     print(f"final token-acc {res.final_acc:.4f}; "
           f"comm {res.ledger.total_bytes/1e6:.1f}MB "
-          f"(dense-equivalent {res.ledger.dense_equivalent_bytes(10)/1e6:.1f}MB); "
-          f"checkpoint -> {args.out}")
+          f"(coded wire {res.ledger.total_coded_bytes/1e6:.1f}MB, "
+          f"dense-equivalent {res.ledger.dense_equivalent_bytes(10)/1e6:.1f}MB); "
+          f"checkpoints -> {args.ckpt}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Fast CI signal: the sub-minute tier-1 subset (strategy-registry
-# equivalence, sparsity selectors, communication ledger) — everything
-# tagged @pytest.mark.fast.  The full tier-1 suite (ROADMAP.md) still
-# covers the slow model-training paths.
+# equivalence, sparsity selectors, communication ledger, engine
+# registry/callback/chunking units from tests/test_engine.py) —
+# everything tagged @pytest.mark.fast.  The full tier-1 suite
+# (ROADMAP.md) still covers the slow model-training paths.
 #
 #   scripts/ci_fast.sh [extra pytest args]
 set -euo pipefail

@@ -66,3 +66,78 @@ def save_server_round(flatP, server_state, sstate, path: str) -> None:
 def load_server_round(path: str, like=None):
     tree = load_pytree(path, like)
     return tree["P"], tree["server"], tree["strategy"]
+
+
+# ---------------------------------------------------------------------------
+# experiment checkpoints (engine CheckpointCallback / Experiment.resume)
+# ---------------------------------------------------------------------------
+
+FROZEN_FILE = "frozen.npz"
+META_FILE = "meta.json"
+
+
+def _atomic_save_pytree(tree: Any, path: str) -> None:
+    """save_pytree through a same-directory temp + rename, so a crash
+    mid-write never leaves a torn payload."""
+    tmp = path[:-len(".npz")] + ".tmp.npz"      # np.savez keeps .npz suffixes
+    save_pytree(tree, tmp)
+    os.replace(tmp, path)
+
+
+def save_experiment_checkpoint(directory: str, arrays: Any,
+                               meta: Dict[str, Any],
+                               frozen: Any = None,
+                               overwrite_frozen: bool = False) -> str:
+    """One resumable snapshot: a round-stamped npz payload (weights,
+    server/strategy state) plus a JSON sidecar with everything non-array
+    (configs, history, ledger counters, next round).
+
+    Crash consistency: the payload lands under a per-round filename, the
+    sidecar (which names it under "state_file") is renamed into place
+    last, and only then are stale payloads pruned — a kill at any point
+    leaves the directory resuming from a complete, mutually consistent
+    (payload, sidecar) pair.  `frozen` holds run-constant arrays (backbone
+    params, task data), written only once per run so periodic saves cost
+    O(state), not O(model+dataset) — callers pass `overwrite_frozen=True`
+    on their first save so a fresh run never pairs its state with a stale
+    frozen payload left by a previous run in the same directory.  Returns
+    the payload path."""
+    os.makedirs(directory, exist_ok=True)
+    frozen_path = os.path.join(directory, FROZEN_FILE)
+    if frozen is not None and (overwrite_frozen
+                               or not os.path.exists(frozen_path)):
+        if overwrite_frozen:
+            # invalidate any previous run's sidecar before replacing its
+            # frozen payload: a crash mid-save must never leave the old
+            # meta/state paired with the new frozen arrays
+            meta_path = os.path.join(directory, META_FILE)
+            if os.path.exists(meta_path):
+                os.remove(meta_path)
+        _atomic_save_pytree(frozen, frozen_path)
+    state_file = f"state-r{int(meta['round'])}.npz"
+    _atomic_save_pytree(arrays, os.path.join(directory, state_file))
+    meta = dict(meta, state_file=state_file)
+    tmp = os.path.join(directory, META_FILE + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, os.path.join(directory, META_FILE))
+    for name in os.listdir(directory):          # prune superseded payloads
+        if (name.startswith("state-") and name.endswith(".npz")
+                and name != state_file):
+            os.remove(os.path.join(directory, name))
+    return os.path.join(directory, state_file)
+
+
+def load_experiment_checkpoint(directory: str):
+    """-> (arrays pytree as nested dicts, incl. the frozen payload, meta
+    dict)."""
+    meta_path = os.path.join(directory, META_FILE)
+    if not os.path.exists(meta_path):
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    arrays = load_pytree(os.path.join(directory, meta["state_file"]))
+    frozen_path = os.path.join(directory, FROZEN_FILE)
+    if os.path.exists(frozen_path):
+        arrays.update(load_pytree(frozen_path))
+    return arrays, meta

@@ -196,10 +196,16 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
 
     # --- aggregate + server update ----------------------------------------
     if fed.dp_clip > 0.0:
+        # DP noise calibration assumes uniform averaging; refuse to silently
+        # drop a strategy's weighted aggregation rather than mis-account it
+        if not strat.uniform_aggregation:
+            raise NotImplementedError(
+                f"{strat.kind}: non-uniform Strategy.aggregate is "
+                "unsupported with DP clipping (dp_clip > 0)")
         key = rng if rng is not None else jax.random.key(0)
         pseudo_grad, _ = dp_mod.dp_aggregate(deltas, fed.dp_clip, fed.dp_noise, key)
     else:
-        pseudo_grad = jnp.mean(deltas, axis=0)
+        pseudo_grad = strat.aggregate(deltas, ctx)
 
     if fed.server_opt == "adam":
         flatP, opt = adam_update(flatP, pseudo_grad, server_state["opt"],
@@ -235,4 +241,32 @@ def make_round_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
         return federated_round(flatP, server_state, sstate, client_batches,
                                rng, loss_of=loss_of, meta=meta, fed=fed,
                                strategy=strat, spmd_axis_name=spmd_axis_name)
+    return fn
+
+
+def make_scanned_round_fn(round_fn):
+    """Scan-chunked round driver: runs `round_fn` over a leading rounds axis
+    in one device call, amortizing host dispatch (ShardedEngine's
+    `rounds_per_call`).
+
+    The returned function takes (flatP, server, sstate, batches, round_ids,
+    base_key) where every `batches` leaf has an extra leading rounds axis,
+    `round_ids` is the (k,) int32 vector of global round indices, and each
+    round's rng is derived as fold_in(base_key, round_id) — bit-identical to
+    the per-round driver's key schedule.  Metrics come back stacked along
+    the rounds axis.
+    """
+
+    def fn(flatP, server_state, sstate, batches, round_ids, base_key):
+        def body(carry, xs):
+            flatP, server_state, sstate = carry
+            cb, rid = xs
+            key = jax.random.fold_in(base_key, rid)
+            flatP, server_state, sstate, m = round_fn(
+                flatP, server_state, sstate, cb, key)
+            return (flatP, server_state, sstate), m
+
+        (flatP, server_state, sstate), metrics = jax.lax.scan(
+            body, (flatP, server_state, sstate), (batches, round_ids))
+        return flatP, server_state, sstate, metrics
     return fn

@@ -49,6 +49,8 @@ class StrategySpec:
     # heterogeneity: per-client-slot density (flasc-het) or rank (hetlora)
     client_densities: Tuple[float, ...] = ()
     hetlora_ranks: Tuple[int, ...] = ()
+    # hetlora: rank-coverage-weighted aggregation instead of plain averaging
+    hetlora_weighted: bool = False
     # message quantization (0 = off); composes with Top-K: mask -> quantize
     quant_bits_down: int = 0
     quant_bits_up: int = 0
@@ -147,6 +149,18 @@ class Strategy:
 
     def client_plan(self, m_down, slot: int, ctx: PlanContext) -> RoundPlan:
         return RoundPlan(m_down, None, UploadRule.fixed(m_down))
+
+    def aggregate(self, deltas, ctx: PlanContext) -> jax.Array:
+        """Combine the (n_clients, p_len) upload messages into the server
+        pseudo-gradient.  Default: uniform averaging (FedAvg)."""
+        return jnp.mean(deltas, axis=0)
+
+    @property
+    def uniform_aggregation(self) -> bool:
+        """True when `aggregate` is plain averaging — the assumption DP
+        noise calibration relies on.  Strategies with a weighted rule must
+        return False so the round function can refuse dp_clip > 0."""
+        return True
 
     def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
         """End-of-round transition; returns (sstate', flatP') — strategies
@@ -369,13 +383,37 @@ class FFALoRA(Strategy):
 class HetLoRA(Strategy):
     """Heterogeneous LoRA: client c sees only the leading `hetlora_ranks[c]`
     rank components (structured nested masks) for download, training, and
-    upload."""
+    upload.
+
+    With `hetlora_weighted=True` the aggregation divides each entry by the
+    number of clients whose rank slice actually covers it, instead of the
+    full cohort size: plain averaging dilutes the high-rank components
+    (only the large-rank clients ever touch them) by n_clients, shrinking
+    their effective server learning rate by n/coverage."""
 
     def client_plan(self, m_down, slot, ctx):
         assert ctx.rank_idx is not None, "hetlora needs FlatMeta rank metadata"
         r_c = self.spec.hetlora_ranks[slot]
         m = jnp.asarray(ctx.rank_idx < r_c)
         return RoundPlan(m, m, UploadRule.fixed(m))
+
+    def coverage(self, ctx: PlanContext) -> np.ndarray:
+        """(p_len,) count of clients whose rank mask covers each entry."""
+        assert ctx.rank_idx is not None, "hetlora needs FlatMeta rank metadata"
+        ranks = np.asarray(self.spec.hetlora_ranks[:ctx.n_clients])
+        assert len(ranks) == ctx.n_clients, \
+            (len(self.spec.hetlora_ranks), ctx.n_clients)
+        return np.sum(ranks[:, None] > ctx.rank_idx[None, :], axis=0)
+
+    def aggregate(self, deltas, ctx):
+        if not self.spec.hetlora_weighted:
+            return super().aggregate(deltas, ctx)
+        cov = jnp.asarray(np.maximum(self.coverage(ctx), 1), jnp.float32)
+        return jnp.sum(deltas, axis=0) / cov
+
+    @property
+    def uniform_aggregation(self) -> bool:
+        return not self.spec.hetlora_weighted
 
 
 # ---------------------------------------------------------------------------

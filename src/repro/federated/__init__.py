@@ -1,6 +1,16 @@
 from repro.federated.api import Experiment, ModelOptions, TrainOptions
+from repro.federated.engine import (Callback, CheckpointCallback, Engine,
+                                    EvalCallback, LedgerCallback,
+                                    LoggingCallback, RoundTask, RunState,
+                                    ShardedEngine, SimEngine, StopRun,
+                                    register_engine, registered_engines,
+                                    resolve_engine)
 from repro.federated.runtime import (run_experiment, ExperimentResult,
                                      model_for_task, pretrain, evaluate)
 
 __all__ = ["Experiment", "ModelOptions", "TrainOptions", "run_experiment",
-           "ExperimentResult", "model_for_task", "pretrain", "evaluate"]
+           "ExperimentResult", "model_for_task", "pretrain", "evaluate",
+           "Engine", "SimEngine", "ShardedEngine", "RoundTask", "RunState",
+           "Callback", "LedgerCallback", "EvalCallback", "LoggingCallback",
+           "CheckpointCallback", "StopRun", "register_engine",
+           "registered_engines", "resolve_engine"]

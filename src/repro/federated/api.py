@@ -18,21 +18,31 @@ config objects plus the strategy registry:
 strategies added with `@register_strategy` (see docs/strategies.md).
 `runtime.run_experiment` remains as a thin backward-compatible shim over
 this builder.
+
+Execution is pluggable (docs/engines.md): `.with_engine("sim")` (default,
+the single-device jit+vmap path) or `.with_engine("sharded", ...)` /
+`.with_engine(ShardedEngine(mesh, rounds_per_call=4))` for SPMD meshes.
+`.with_checkpoint(dir, every)` snapshots the run; `Experiment.resume(dir)`
+rebuilds the experiment from the snapshot and reproduces the interrupted
+run's remaining history bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint import io as ckpt_io
 from repro.core import comm as comm_mod
 from repro.core import fedround
 from repro.core import strategies as st
 from repro.core import transport as tp
 from repro.data.datasets import FederatedTask
 from repro.data.pipeline import sample_round
+from repro.federated import engine as eng
 from repro.models import lora as lora_mod
 from repro.models import model as mdl
 from repro.models.config import FederatedConfig, LoRAConfig
@@ -60,6 +70,7 @@ class TrainOptions:
     pretrain_steps: int = 100
     train_head: bool = True
     eval_every: int = 10
+    log_every: int = 0          # verbose progress cadence for eval-less runs
     seed: int = 0
     full_finetune: bool = False
     verbose: bool = False
@@ -74,12 +85,13 @@ class Experiment:
     pipeline and drives the experiment loop.
     """
 
-    def __init__(self, task: FederatedTask, *,
+    def __init__(self, task: Optional[FederatedTask], *,
                  strategy: st.StrategyLike = "flasc",
                  federation: Optional[FederatedConfig] = None,
                  model: Optional[ModelOptions] = None,
                  lora: Optional[LoRAConfig] = None,
-                 train: Optional[TrainOptions] = None):
+                 train: Optional[TrainOptions] = None,
+                 engine: eng.EngineLike = "sim"):
         self.task = task
         self.strategy = st.resolve(strategy)
         self.federation = federation or FederatedConfig(
@@ -87,7 +99,13 @@ class Experiment:
         self.model = model or ModelOptions()
         self.lora = lora or LoRAConfig()
         self.train = train or TrainOptions()
+        self.engine = eng.resolve_engine(engine)
         self._params_and_cfg: Optional[Tuple[Any, Any]] = None
+        self._data_provider: Optional[eng.DataProvider] = None
+        self._checkpoint: Optional[Tuple[str, int]] = None
+        self._callbacks: List[eng.Callback] = []
+        self._restore: Optional[Tuple[Any, Dict[str, Any]]] = None
+        self._frozen_written = False
 
     # --- builder facets ----------------------------------------------------
     def with_strategy(self, strategy: Optional[st.StrategyLike] = None,
@@ -149,8 +167,37 @@ class Experiment:
         self._params_and_cfg = (params, cfg)
         return self
 
+    def with_engine(self, engine: eng.EngineLike, **kwargs) -> "Experiment":
+        """Execution backend: "sim" (default), "sharded", an Engine class,
+        or an instance.  kwargs go to the backend constructor, e.g.
+        `.with_engine("sharded", rounds_per_call=4)`."""
+        self.engine = eng.resolve_engine(engine, **kwargs)
+        return self
+
+    def with_data(self, provider: eng.DataProvider) -> "Experiment":
+        """Replace the default `sample_round`-based batch provider with
+        `provider(round_idx) -> client_batches` (leaves shaped
+        (n_clients, local_steps, local_batch, ...)).  Lets task-less
+        drivers (launch/train.py) reuse the engine loop."""
+        self._data_provider = provider
+        return self
+
+    def with_checkpoint(self, directory: str, every: int = 10) -> "Experiment":
+        """Snapshot the run into `directory` every `every` rounds;
+        `Experiment.resume(directory)` restarts from the latest snapshot."""
+        self._checkpoint = (directory, int(every))
+        return self
+
+    def with_callbacks(self, *callbacks: eng.Callback) -> "Experiment":
+        """Append user callbacks to the engine's hook pipeline (they run
+        after the built-in ledger/eval/logging/checkpoint callbacks)."""
+        self._callbacks.extend(callbacks)
+        return self
+
     # --- assembly ----------------------------------------------------------
-    def _build_backbone(self):
+    def build_backbone(self):
+        """(params, ModelConfig) for the frozen backbone — pretrained unless
+        supplied via `with_params`.  Public so harnesses can cache it."""
         from repro.federated import runtime as rt
         t = self.train
         if self._params_and_cfg is not None:
@@ -187,10 +234,22 @@ class Experiment:
                                    up_value_bytes=up.value_bytes)
 
     # --- the experiment loop ----------------------------------------------
+    def _default_data(self) -> eng.DataProvider:
+        task, fed, seed = self.task, self.federation, self.train.seed
+
+        def data(r: int):
+            batch_np = sample_round(task, fed, r, seed=seed)
+            return {k: jnp.asarray(v) for k, v in batch_np.items()}
+        return data
+
     def run(self):
         from repro.federated import runtime as rt
         task, fed, t = self.task, self.federation, self.train
-        params, cfg = self._build_backbone()
+        if task is None:
+            assert self._data_provider is not None and \
+                self._params_and_cfg is not None, \
+                "task-less experiments need with_data(...) and with_params(...)"
+        params, cfg = self.build_backbone()
         trainable, meta, scale = self._build_trainable(params, cfg)
 
         def loss_of(tree, mb):
@@ -202,33 +261,134 @@ class Experiment:
             return mdl.loss_fn(p, cfg, rt._task_batch(cfg, mb),
                                lora=tree["lora"], lora_scale=scale)
 
-        flatP = meta.flatten(trainable)
-        server = fedround.init_server(flatP)
-        sstate = self.strategy.init_state(meta.p_len)
-        round_fn = jax.jit(fedround.make_round_fn(loss_of, meta, fed,
-                                                  self.strategy))
-        ledger = self.build_ledger(meta.p_len)
+        plan = eng.RoundTask(loss_of, meta, fed, self.strategy, seed=t.seed)
+        if self._restore is not None:
+            state, ledger, saved_acc = self._restore_state(plan, meta)
+        else:
+            state = eng.RunState.fresh(plan, meta.flatten(trainable),
+                                       rounds=t.rounds)
+            ledger, saved_acc = self.build_ledger(meta.p_len), 0.0
 
-        history: List[Dict[str, float]] = []
-        acc = 0.0
-        for r in range(t.rounds):
-            batch_np = sample_round(task, fed, r, seed=t.seed)
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            key = jax.random.fold_in(jax.random.key(t.seed + 2), r)
-            flatP, server, sstate, m = round_fn(flatP, server, sstate, batch, key)
-            ledger.record_round(
-                fed.n_clients, float(m["down_nnz"]), float(m["up_nnz"]),
-                down_per_message=[float(v) for v in m["down_nnz_clients"]],
-                up_per_message=[float(v) for v in m["up_nnz_clients"]])
-            rec = {"round": r, "loss": float(m["loss"]),
-                   "down_bytes": ledger.down_bytes, "up_bytes": ledger.up_bytes,
-                   "total_bytes": ledger.total_bytes,
-                   "coded_bytes": ledger.total_coded_bytes}
-            if (r + 1) % t.eval_every == 0 or r == t.rounds - 1:
-                acc = rt.evaluate(params, cfg, trainable, meta, task, scale, flatP)
-                rec["acc"] = acc
-                if t.verbose:
-                    print(f"  round {r+1:4d} loss={rec['loss']:.4f} acc={acc:.4f} "
-                          f"comm={ledger.total_bytes/1e6:.2f}MB")
-            history.append(rec)
-        return rt.ExperimentResult(history, ledger, acc)
+        callbacks: List[eng.Callback] = [eng.LedgerCallback(ledger)]
+        eval_cb = None
+        if task is not None:
+            eval_cb = eng.EvalCallback(
+                lambda flatP: rt.evaluate(params, cfg, trainable, meta, task,
+                                          scale, flatP),
+                every=t.eval_every)
+            eval_cb.acc = saved_acc
+            callbacks.append(eval_cb)
+        callbacks.append(eng.LoggingCallback(t.verbose, every=t.log_every))
+        if self._checkpoint is not None:
+            assert task is not None, "checkpointing needs a FederatedTask"
+            if self._params_and_cfg is not None and self._restore is None \
+                    and cfg != rt.model_for_task(task, **self.model.kwargs()):
+                raise ValueError(
+                    "with_checkpoint cannot snapshot a custom ModelConfig "
+                    "supplied via with_params: resume rebuilds the config "
+                    "from ModelOptions — configure the model through "
+                    "with_model(...) instead")
+            directory, every = self._checkpoint
+            callbacks.append(eng.CheckpointCallback(
+                directory, every,
+                lambda d, s: self._save_checkpoint(d, s, params, ledger,
+                                                   eval_cb)))
+        callbacks.extend(self._callbacks)
+
+        data = self._data_provider or self._default_data()
+        state = self.engine.run_rounds(state, data, callbacks)
+        acc = eval_cb.acc if eval_cb is not None else 0.0
+        return rt.ExperimentResult(state.history, ledger, acc)
+
+    # --- checkpoint / resume ----------------------------------------------
+    def _save_checkpoint(self, directory: str, state: eng.RunState,
+                         params, ledger, eval_cb) -> str:
+        task = self.task
+        arrays = {"P": state.flatP, "server": state.server,
+                  "strategy": state.sstate}
+        frozen = {        # run-constant payload, written once per directory
+            "params": params,
+            "task": {"parts": {str(i): p for i, p in enumerate(task.parts)},
+                     "data": task.data, "eval_data": task.eval_data},
+        }
+        directory_, every = self._checkpoint
+        meta_json = {
+            "version": 1,
+            "round": state.round,
+            "history": state.history,
+            "acc": float(eval_cb.acc) if eval_cb is not None else 0.0,
+            "ledger": {f.name: getattr(ledger, f.name)
+                       for f in dataclasses.fields(ledger)},
+            "strategy": dataclasses.asdict(self.strategy.spec),
+            "federation": dataclasses.asdict(self.federation),
+            "model": self.model.kwargs(),
+            "lora": dataclasses.asdict(self.lora),
+            "train": dataclasses.asdict(self.train),
+            "task_meta": {"name": task.name, "kind": task.kind,
+                          "n_classes": task.n_classes},
+            "checkpoint": {"dir": directory_, "every": every},
+            "engine": {"name": self.engine.name,
+                       "rounds_per_call":
+                           int(getattr(self.engine, "rounds_per_call", 1))},
+        }
+        # the first save of a fresh (non-resumed) run replaces any frozen
+        # payload a previous run left in the directory
+        overwrite = not (self._frozen_written or self._restore is not None)
+        self._frozen_written = True
+        return ckpt_io.save_experiment_checkpoint(directory, arrays, meta_json,
+                                                  frozen=frozen,
+                                                  overwrite_frozen=overwrite)
+
+    def _restore_state(self, plan: eng.RoundTask, meta: fedround.FlatMeta):
+        arrays, mj = self._restore
+        sstate = arrays.get("strategy")
+        if sstate is None:                      # stateless strategy: {} saves
+            sstate = plan.strategy.init_state(meta.p_len)  # as zero leaves
+        state = eng.RunState(plan, jnp.asarray(arrays["P"]), arrays["server"],
+                             sstate, round=int(mj["round"]),
+                             rounds=self.train.rounds,
+                             history=list(mj["history"]))
+        ledger = comm_mod.CommLedger(**mj["ledger"])
+        return state, ledger, float(mj.get("acc", 0.0))
+
+    @classmethod
+    def resume(cls, directory: str,
+               task: Optional[FederatedTask] = None) -> "Experiment":
+        """Rebuild an experiment from its latest checkpoint.  `.run()` then
+        executes exactly the remaining rounds: restored history + new
+        records reproduce the uninterrupted run bit-for-bit.  Extend the
+        run by chaining `.with_training(rounds=...)` before `.run()`.
+
+        The saved engine backend (name + rounds_per_call) is restored so
+        the remaining rounds take the same numerical path; a ShardedEngine
+        comes back on its default mesh — re-apply `.with_engine(...)` for
+        a custom one."""
+        from repro.federated import runtime as rt
+        arrays, mj = ckpt_io.load_experiment_checkpoint(directory)
+        if task is None:
+            tm, tarr = mj["task_meta"], arrays["task"]
+            parts = [np.asarray(tarr["parts"][str(i)])
+                     for i in range(len(tarr["parts"]))]
+            task = FederatedTask(tm["name"], tm["kind"], parts,
+                                 tarr["data"], tarr["eval_data"],
+                                 tm["n_classes"])
+        sj = dict(mj["strategy"])
+        for k in ("client_densities", "hetlora_ranks"):
+            sj[k] = tuple(sj.get(k, ()))
+        lj = dict(mj["lora"])
+        lj["targets"] = tuple(lj.get("targets", ()))
+        exp = cls(task,
+                  strategy=st.StrategySpec(**sj),
+                  federation=FederatedConfig(**mj["federation"]),
+                  model=ModelOptions(**mj["model"]),
+                  lora=LoRAConfig(**lj),
+                  train=TrainOptions(**mj["train"]))
+        cfg = rt.model_for_task(task, **exp.model.kwargs())
+        exp.with_params(arrays["params"], cfg)
+        exp.with_checkpoint(mj["checkpoint"]["dir"], mj["checkpoint"]["every"])
+        ej = mj.get("engine", {"name": "sim"})
+        ekw = ({"rounds_per_call": ej["rounds_per_call"]}
+               if ej.get("rounds_per_call", 1) > 1 else {})
+        exp.with_engine(ej["name"], **ekw)
+        exp._restore = (arrays, mj)
+        return exp

@@ -1,0 +1,461 @@
+"""Pluggable execution engines: one federated round loop, many backends.
+
+The FLASC round loop used to exist three times — `Experiment.run()`'s
+inline Python loop, `launch/train.py`'s hand-rolled copy, and the sharded
+step builders in `launch/steps.py`.  This module unifies them behind an
+`Engine` protocol:
+
+    compile(plan)  -> step       # one device call = one (or k) FL rounds
+    run_rounds(state, data, callbacks) -> state'
+
+Two registered backends:
+
+  SimEngine      — the current jit+vmap single-device path, extracted out
+                   of `Experiment.run()` and bit-identical to it.
+  ShardedEngine  — the same experiment under jit(in_shardings=...,
+                   donate_argnums=...) on a device mesh, reusing the
+                   launch-layer sharding rules (`TRAIN_RULES`,
+                   `activation_sharding`, `train_spmd_axes`).  An optional
+                   `rounds_per_call` runs k rounds per device call through
+                   `fedround.make_scanned_round_fn`, amortizing host
+                   dispatch.
+
+The loop body is a `Callback` hook pipeline (`on_round_end` / `on_eval` /
+`on_checkpoint`): `LedgerCallback` (communication accounting, incl. the
+practical coded-bytes wire format), `EvalCallback`, `LoggingCallback`,
+and `CheckpointCallback` (periodic `checkpoint/io` snapshots that
+`Experiment.resume` restarts from).  Callbacks may raise `StopRun` to end
+a run cleanly — the interrupted-run path the checkpoint tests exercise.
+
+Engines are registered like strategies: `resolve_engine("sim")`,
+`resolve_engine("sharded", rounds_per_call=4)`, or pass an instance.
+See docs/engines.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, ClassVar, Dict, List, Optional, Sequence, Type, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fedround
+from repro.core import strategies as st
+from repro.models.config import FederatedConfig
+
+DataProvider = Callable[[int], Any]
+# data(round_idx) -> client_batches pytree, leaves (n_clients, steps, bs, ...)
+
+
+@dataclasses.dataclass
+class RoundTask:
+    """What an engine compiles: the static facets of one experiment's
+    round function (the `plan` of `Engine.compile(plan)`)."""
+    loss_of: fedround.LossFn
+    meta: fedround.FlatMeta
+    fed: FederatedConfig
+    strategy: st.Strategy
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RunState:
+    """Everything that changes between rounds.  `round` is the next round
+    to execute; a checkpoint of a RunState resumes exactly there."""
+    plan: RoundTask
+    flatP: Any
+    server: Any
+    sstate: Any
+    round: int = 0
+    rounds: int = 0
+    history: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def fresh(cls, plan: RoundTask, flatP, *, rounds: int) -> "RunState":
+        return cls(plan, flatP, fedround.init_server(flatP),
+                   plan.strategy.init_state(plan.meta.p_len),
+                   round=0, rounds=rounds)
+
+
+class StopRun(Exception):
+    """Raised by a callback to end `run_rounds` cleanly after the current
+    hook dispatch (simulates an interrupted run for checkpoint tests).
+
+    With a scan-chunked engine (rounds_per_call > 1) raise it only on
+    rounds where your callback's `wants_state` returns True: chunks end
+    there, so `state.flatP` matches `state.round`.  Stopping at an
+    interior round of a chunk would return weights from the chunk's last
+    round with history/round still at the stop point."""
+
+
+@dataclasses.dataclass
+class RoundEvent:
+    """Mutable context handed to every callback hook for one round."""
+    round: int
+    state: RunState
+    metrics: Dict[str, Any]             # raw device metrics for this round
+    record: Dict[str, Any]              # the history record being built
+    evaluated: bool = False             # set by EvalCallback
+    checkpoint_due: bool = False        # set by CheckpointCallback
+    checkpoint_path: Optional[str] = None
+
+
+class Callback:
+    """Round-loop hook protocol.  `wants_state(r)` marks rounds where the
+    callback needs host access to the post-round state — scan-chunked
+    engines end their chunks there so flatP is materialized."""
+
+    def wants_state(self, round_idx: int, rounds: int) -> bool:
+        return False
+
+    def on_round_end(self, ev: RoundEvent) -> None:
+        pass
+
+    def on_eval(self, ev: RoundEvent) -> None:
+        pass
+
+    def on_checkpoint(self, ev: RoundEvent) -> None:
+        pass
+
+
+class LedgerCallback(Callback):
+    """Per-round communication accounting with full per-message nnz detail
+    (the index-vs-bitmap coded-bytes minimum is taken per client message)."""
+
+    def __init__(self, ledger):
+        self.ledger = ledger
+
+    def on_round_end(self, ev: RoundEvent) -> None:
+        m, led = ev.metrics, self.ledger
+        led.record_round(
+            ev.state.plan.fed.n_clients,
+            float(m["down_nnz"]), float(m["up_nnz"]),
+            down_per_message=[float(v) for v in m["down_nnz_clients"]],
+            up_per_message=[float(v) for v in m["up_nnz_clients"]])
+        ev.record.update(
+            down_bytes=led.down_bytes, up_bytes=led.up_bytes,
+            total_bytes=led.total_bytes, coded_bytes=led.total_coded_bytes,
+            down_coded_bytes=led.down_coded_bytes,
+            up_coded_bytes=led.up_coded_bytes)
+
+
+class EvalCallback(Callback):
+    """Runs `eval_fn(flatP) -> acc` every `every` rounds and on the final
+    round; records the result in the round's history record."""
+
+    def __init__(self, eval_fn: Callable[[Any], float], every: int = 10):
+        self.eval_fn = eval_fn
+        self.every = every
+        self.acc = 0.0
+
+    def _due(self, round_idx: int, rounds: int) -> bool:
+        at_cadence = self.every > 0 and (round_idx + 1) % self.every == 0
+        return at_cadence or round_idx == rounds - 1
+
+    def wants_state(self, round_idx: int, rounds: int) -> bool:
+        return self._due(round_idx, rounds)
+
+    def on_round_end(self, ev: RoundEvent) -> None:
+        if self._due(ev.round, ev.state.rounds):
+            self.acc = self.eval_fn(ev.state.flatP)
+            ev.record["acc"] = self.acc
+            ev.evaluated = True
+
+
+class LoggingCallback(Callback):
+    """Prints the classic one-line progress record on eval rounds, and —
+    for runs without an EvalCallback — every `every` rounds."""
+
+    def __init__(self, verbose: bool = True, every: int = 0):
+        self.verbose = verbose
+        self.every = every
+
+    def _line(self, ev: RoundEvent) -> str:
+        rec = ev.record
+        acc = f" acc={rec['acc']:.4f}" if "acc" in rec else ""
+        return (f"  round {ev.round + 1:4d} loss={rec['loss']:.4f}{acc} "
+                f"comm={rec.get('total_bytes', 0) / 1e6:.2f}MB")
+
+    def on_round_end(self, ev: RoundEvent) -> None:
+        if (self.verbose and not ev.evaluated and self.every > 0
+                and (ev.round + 1) % self.every == 0):
+            print(self._line(ev))
+
+    def on_eval(self, ev: RoundEvent) -> None:
+        if self.verbose:
+            print(self._line(ev))
+
+
+class CheckpointCallback(Callback):
+    """Saves a resumable snapshot every `every` rounds via `save_fn(dir,
+    state) -> path` (wired by `Experiment.with_checkpoint` to
+    `checkpoint/io.save_experiment_checkpoint`)."""
+
+    def __init__(self, directory: str, every: int,
+                 save_fn: Callable[[str, RunState], str]):
+        self.directory = directory
+        self.every = max(int(every), 1)
+        self.save_fn = save_fn
+        self.last_path: Optional[str] = None
+
+    def _due(self, round_idx: int) -> bool:
+        return (round_idx + 1) % self.every == 0
+
+    def wants_state(self, round_idx: int, rounds: int) -> bool:
+        return self._due(round_idx)
+
+    def on_round_end(self, ev: RoundEvent) -> None:
+        if self._due(ev.round):
+            ev.checkpoint_due = True
+
+    def on_checkpoint(self, ev: RoundEvent) -> None:
+        self.last_path = self.save_fn(self.directory, ev.state)
+        ev.checkpoint_path = self.last_path
+
+
+# ---------------------------------------------------------------------------
+# the engine protocol + registry
+# ---------------------------------------------------------------------------
+
+def _tree_stack(trees: Sequence[Any]):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+class Engine:
+    """Execution backend: compiles a `RoundTask` into a device step and
+    drives the callback-instrumented round loop."""
+
+    name: ClassVar[str] = "base"
+    rounds_per_call: int = 1
+
+    def compile(self, plan: RoundTask):
+        """-> step(flatP, server, sstate, batch, key) ->
+        (flatP', server', sstate', metrics)."""
+        raise NotImplementedError
+
+    def _compile_chunk(self, plan: RoundTask):
+        """-> chunk(flatP, server, sstate, batches, round_ids, base_key),
+        leaves of `batches` carrying a leading rounds axis.  Only engines
+        with rounds_per_call > 1 need this."""
+        raise NotImplementedError
+
+    # --- the one round loop -----------------------------------------------
+    def run_rounds(self, state: RunState, data: DataProvider,
+                   callbacks: Sequence[Callback] = ()) -> RunState:
+        """Run rounds [state.round, state.rounds); mutates and returns
+        `state`.  Rng schedule: fold_in(key(seed + 2), round_idx)."""
+        plan = state.plan
+        base_key = jax.random.key(plan.seed + 2)
+        step = self.compile(plan)
+        chunk_step = None
+        try:
+            r = state.round
+            while r < state.rounds:
+                n = self._chunk_len(r, state, callbacks)
+                if n == 1:
+                    key = jax.random.fold_in(base_key, r)
+                    state.flatP, state.server, state.sstate, metrics = step(
+                        state.flatP, state.server, state.sstate, data(r), key)
+                    per_round = [metrics]
+                else:
+                    if chunk_step is None:
+                        chunk_step = self._compile_chunk(plan)
+                    batches = _tree_stack([data(i) for i in range(r, r + n)])
+                    rids = jnp.arange(r, r + n, dtype=jnp.int32)
+                    state.flatP, state.server, state.sstate, ms = chunk_step(
+                        state.flatP, state.server, state.sstate, batches,
+                        rids, base_key)
+                    per_round = [jax.tree.map(lambda x, i=i: x[i], ms)
+                                 for i in range(n)]
+                for i, m in enumerate(per_round):
+                    self._finish_round(state, r + i, m, callbacks)
+                r += n
+        except StopRun:
+            pass
+        return state
+
+    def _chunk_len(self, r: int, state: RunState,
+                   callbacks: Sequence[Callback]) -> int:
+        """Rounds to run in the next device call: capped by rounds_per_call
+        and cut so rounds needing host state access end a chunk."""
+        max_n = min(self.rounds_per_call, state.rounds - r)
+        for i in range(max_n - 1):
+            if any(cb.wants_state(r + i, state.rounds) for cb in callbacks):
+                return i + 1
+        return max_n
+
+    def _finish_round(self, state: RunState, round_idx: int, metrics,
+                      callbacks: Sequence[Callback]) -> None:
+        record: Dict[str, Any] = {"round": round_idx,
+                                  "loss": float(metrics["loss"])}
+        ev = RoundEvent(round=round_idx, state=state, metrics=metrics,
+                        record=record)
+        # A StopRun from any hook still finishes this round's bookkeeping
+        # (history append + round advance) first, so ledger totals, history
+        # length, and state.round stay mutually consistent on early stops.
+        stop: Optional[StopRun] = None
+        try:
+            for cb in callbacks:
+                cb.on_round_end(ev)
+            if ev.evaluated:
+                for cb in callbacks:
+                    cb.on_eval(ev)
+        except StopRun as e:
+            stop = e
+        state.history.append(record)
+        state.round = round_idx + 1
+        if ev.checkpoint_due and stop is None:
+            for cb in callbacks:
+                cb.on_checkpoint(ev)
+        if stop is not None:
+            raise stop
+
+
+_ENGINES: Dict[str, Type[Engine]] = {}
+
+
+def register_engine(name: str):
+    """Class decorator: `@register_engine("sim")` makes the backend
+    reachable from `Experiment.with_engine("sim")` and `BENCH_ENGINE`."""
+    def deco(cls: Type[Engine]) -> Type[Engine]:
+        assert issubclass(cls, Engine), cls
+        cls.name = name
+        _ENGINES[name] = cls
+        return cls
+    return deco
+
+
+def registered_engines():
+    return tuple(sorted(_ENGINES))
+
+
+EngineLike = Union[Engine, str, Type[Engine]]
+
+
+def resolve_engine(obj: EngineLike, **kwargs) -> Engine:
+    """Engine instance / registered name / Engine class -> instance."""
+    if isinstance(obj, Engine):
+        assert not kwargs, "pass constructor kwargs with a name, not an instance"
+        return obj
+    if isinstance(obj, str):
+        try:
+            cls = _ENGINES[obj]
+        except KeyError:
+            raise KeyError(f"no engine registered as {obj!r}; known: "
+                           f"{registered_engines()}") from None
+        return cls(**kwargs)
+    if isinstance(obj, type) and issubclass(obj, Engine):
+        return obj(**kwargs)
+    raise TypeError(f"cannot resolve {obj!r} to an Engine")
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+@register_engine("sim")
+class SimEngine(Engine):
+    """Single-device jit+vmap simulation — the path `Experiment.run()`
+    always took, now behind the protocol (and bit-identical to it)."""
+
+    def compile(self, plan: RoundTask):
+        return jax.jit(fedround.make_round_fn(plan.loss_of, plan.meta,
+                                              plan.fed, plan.strategy))
+
+
+class _ShardedStep:
+    """Deferred-jit wrapper: in_shardings need the concrete arg pytrees, so
+    the jit is built on first call and executed under the engine's
+    activation-sharding context (required at trace time for `constrain`)."""
+
+    def __init__(self, engine: "ShardedEngine", fn, batch_client_axis: int):
+        self.engine = engine
+        self.fn = fn
+        self.batch_client_axis = batch_client_axis
+        self._jitted = None
+
+    def _build(self, server, sstate, batch, rest):
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.launch.shardings import logical_to_pspec
+        mesh = self.engine.mesh
+        rules = self.engine.rules
+        rep = NamedSharding(mesh, PartitionSpec())
+
+        def rep_tree(tree):
+            return jax.tree.map(lambda _: rep, tree)
+
+        def batch_sharding(x):
+            axes: List[Optional[str]] = [None] * x.ndim
+            axes[self.batch_client_axis] = "clients"
+            return NamedSharding(
+                mesh, logical_to_pspec(x.shape, tuple(axes), mesh, rules))
+
+        shardings = (rep, rep_tree(server), rep_tree(sstate),
+                     jax.tree.map(batch_sharding, batch),
+                     *(rep_tree(x) for x in rest))
+        donate = (0, 1, 2) if self.engine.donate else ()
+        return jax.jit(self.fn, in_shardings=shardings, donate_argnums=donate)
+
+    def __call__(self, flatP, server, sstate, batch, *rest):
+        from repro.launch.shardings import activation_sharding
+        if self._jitted is None:
+            self._jitted = self._build(server, sstate, batch, rest)
+        with activation_sharding(self.engine.mesh, self.engine.rules):
+            return self._jitted(flatP, server, sstate, batch, *rest)
+
+
+@register_engine("sharded")
+class ShardedEngine(Engine):
+    """SPMD backend: the identical round function lowered with
+    jit(in_shardings=..., donate_argnums=(0, 1, 2)) on a device mesh.
+
+    The vmapped client axis is sharded over the mesh's data(+pod) axes
+    (`train_spmd_axes`), activations follow the launch-layer `TRAIN_RULES`,
+    and the weight vector / server state are replicated and donated.  On a
+    single CPU device this degenerates to a (1, 1) mesh and is the
+    end-to-end testable version of what the multi-pod dry-run lowers.
+
+    `rounds_per_call=k` scans k rounds inside one device call
+    (`fedround.make_scanned_round_fn`); chunks are cut at rounds where a
+    callback needs host state (eval, checkpoint), so cadences still hold.
+
+    Limitation: `plan.loss_of` closes over the frozen backbone params, so
+    they enter the executable as replicated constants — fine at Experiment
+    scale, but the big-model production path must keep passing params as a
+    sharded step argument (`launch/steps.build_train_step`, as lowered by
+    the dry-run) until the plan carries params explicitly (ROADMAP item).
+    """
+
+    def __init__(self, mesh=None, *, rounds_per_call: int = 1,
+                 donate: bool = True, rules=None):
+        self._mesh = mesh
+        self.rounds_per_call = max(int(rounds_per_call), 1)
+        self.donate = donate
+        self._rules = rules
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            self._mesh = jax.make_mesh((1, 1), ("data", "model"))
+        return self._mesh
+
+    @property
+    def rules(self):
+        if self._rules is None:
+            from repro.launch.steps import TRAIN_RULES
+            self._rules = TRAIN_RULES
+        return self._rules
+
+    def _round_fn(self, plan: RoundTask):
+        from repro.launch.steps import train_spmd_axes
+        return fedround.make_round_fn(plan.loss_of, plan.meta, plan.fed,
+                                      plan.strategy,
+                                      spmd_axis_name=train_spmd_axes(self.mesh))
+
+    def compile(self, plan: RoundTask):
+        return _ShardedStep(self, self._round_fn(plan), batch_client_axis=0)
+
+    def _compile_chunk(self, plan: RoundTask):
+        return _ShardedStep(self,
+                            fedround.make_scanned_round_fn(self._round_fn(plan)),
+                            batch_client_axis=1)

@@ -29,8 +29,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bkv, T, scale, causal):
 
     def body(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.ds(j * bkv, bkv), slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.ds(j * bkv, bkv), slice(None))).astype(jnp.float32)
+        # index the leading (size-1) block dim with a length-1 slice: raw int
+        # indices break interpret-mode discharge on current jax (API drift)
+        k = pl.load(k_ref, (pl.ds(0, 1), pl.ds(j * bkv, bkv), slice(None)))[0]
+        v = pl.load(v_ref, (pl.ds(0, 1), pl.ds(j * bkv, bkv), slice(None)))[0]
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
         s = q @ k.T                                     # (bq, bkv)
         if causal:
             q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)

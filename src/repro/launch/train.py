@@ -1,11 +1,20 @@
 """Production training launcher: federated LoRA finetuning of any assigned
-architecture.
+architecture — a thin CLI over `Experiment` + the engine registry.
 
   # real compute at CPU scale (reduced variant, synthetic federated data):
   PYTHONPATH=src python -m repro.launch.train --arch yi-9b --rounds 20
 
+  # scan-chunked dispatch (4 rounds per device call):
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --rounds-per-call 4
+
   # production lowering of the FULL config against the pod mesh (no compute):
   PYTHONPATH=src python -m repro.launch.train --arch yi-9b --dry-run [--multi-pod]
+
+The round loop itself lives in `federated/engine.py` (the same loop every
+benchmark and experiment uses); this module only assembles the reduced
+architecture, a synthetic batch provider, and the ShardedEngine, then
+reports the full communication ledger — per-client averages and the
+practical coded-bytes wire totals included.
 """
 from __future__ import annotations
 
@@ -19,6 +28,11 @@ def main():
     ap.add_argument("--rank", type=int, default=8)
     ap.add_argument("--density", type=float, default=0.25)
     ap.add_argument("--strategy", default="flasc")
+    ap.add_argument("--engine", default="sharded",
+                    help="registered engine backend (sim | sharded)")
+    ap.add_argument("--rounds-per-call", type=int, default=1,
+                    help="scan-chunk k rounds into one device call (sharded)")
+    ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
@@ -38,26 +52,18 @@ def main():
     import numpy as np
 
     from repro.configs.registry import get_config
-    from repro.core import fedround
-    from repro.core import strategies as st
-    from repro.core.comm import CommLedger
-    from repro.models import lora as lora_mod
+    from repro.federated.api import Experiment
     from repro.models import model as mdl
     from repro.models.config import FederatedConfig, LoRAConfig
     from repro.models.layers import init_params
 
     cfg = get_config(args.arch, smoke=True)
     print(f"[train] {args.arch} (reduced: {cfg.num_layers}L d{cfg.d_model}) "
-          f"strategy={args.strategy} d={args.density} r={args.rank}")
+          f"strategy={args.strategy} d={args.density} r={args.rank} "
+          f"engine={args.engine}")
     params = init_params(mdl.model_spec(cfg), jax.random.key(0))
-    lcfg = LoRAConfig(rank=args.rank)
-    lora0 = lora_mod.init_lora(cfg, lcfg, jax.random.key(1))
-    meta = fedround.FlatMeta.of(lora0)
-    fed = FederatedConfig(n_clients=4, local_batch=4, local_steps=1,
+    fed = FederatedConfig(n_clients=args.clients, local_batch=4, local_steps=1,
                           client_lr=1e-3, server_lr=2e-3)
-    strategy = st.resolve(st.StrategySpec(kind=args.strategy,
-                                          density_down=args.density,
-                                          density_up=args.density))
 
     S = 32
     rng = np.random.default_rng(0)
@@ -75,24 +81,33 @@ def main():
                         cfg.num_image_tokens, cfg.vision_embed_dim)), jnp.float32)
         return b
 
-    def loss_of(tree, mb):
-        return mdl.loss_fn(params, cfg, mb, lora=tree, lora_scale=lcfg.scale)
+    engine_kw = ({"rounds_per_call": args.rounds_per_call}
+                 if args.engine == "sharded" else {})
+    exp = (Experiment(None, federation=fed)
+           .with_strategy(args.strategy, density_down=args.density,
+                          density_up=args.density)
+           .with_lora(config=LoRAConfig(rank=args.rank))
+           .with_training(rounds=args.rounds, eval_every=0, log_every=5,
+                          pretrain_steps=0, train_head=False, verbose=True)
+           .with_params(params, cfg)
+           .with_data(batch_for_round)
+           .with_engine(args.engine, **engine_kw))
+    res = exp.run()
 
-    flatP = meta.flatten(lora0)
-    server = fedround.init_server(flatP)
-    sstate = strategy.init_state(meta.p_len)
-    fn = jax.jit(fedround.make_round_fn(loss_of, meta, fed, strategy))
-    ledger = CommLedger(total_params=meta.p_len)
-    for r in range(args.rounds):
-        flatP, server, sstate, m = fn(flatP, server, sstate, batch_for_round(r),
-                                      jax.random.key(r))
-        ledger.record_round(fed.n_clients, float(m["down_nnz"]), float(m["up_nnz"]))
-        if (r + 1) % 5 == 0 or r == 0:
-            print(f"  round {r+1:3d} loss={float(m['loss']):.4f} "
-                  f"comm={ledger.total_bytes/1e6:.2f}MB")
-    print(f"[train] done; total client<->server traffic "
-          f"{ledger.total_bytes/1e6:.2f}MB "
-          f"({ledger.total_bytes/max(ledger.dense_equivalent_bytes(fed.n_clients),1):.2%} of dense)")
+    led = res.ledger
+    n, r = fed.n_clients, max(led.rounds, 1)
+    dense = max(led.dense_equivalent_bytes(n), 1)
+    print(f"[train] done after {led.rounds} rounds; "
+          f"final loss={res.history[-1]['loss']:.4f}")
+    print(f"[train] traffic: total {led.total_bytes/1e6:.2f}MB "
+          f"({led.total_bytes/dense:.2%} of dense) | "
+          f"coded wire format {led.total_coded_bytes/1e6:.2f}MB "
+          f"(down {led.down_coded_bytes/1e6:.2f} / up {led.up_coded_bytes/1e6:.2f})")
+    print(f"[train] per client per round: "
+          f"down {led.down_bytes/(r*n)/1e3:.1f}kB "
+          f"({led.down_values/(r*n):.0f} values), "
+          f"up {led.up_bytes/(r*n)/1e3:.1f}kB "
+          f"({led.up_values/(r*n):.0f} values)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,316 @@
+"""Engine-API equivalence and behavior:
+
+  * SimEngine vs the frozen pre-refactor `Experiment.run()` loop —
+    bit-identical round outputs, final weights, strategy state, and
+    ledger totals for all 8 registered strategy kinds;
+  * ShardedEngine end-to-end on 1 CPU device (per-round and scan-chunked),
+    agreeing with SimEngine on ledger totals and losses;
+  * checkpoint round-trip: save mid-run via CheckpointCallback + StopRun,
+    `Experiment.resume`, concatenated history bit-for-bit;
+  * engine registry, callback cadences, and rank-weighted hetlora
+    aggregation.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedround
+from repro.core import strategies as st
+from repro.data import datasets as ds
+from repro.data.pipeline import sample_round
+from repro.federated import engine as eng
+from repro.federated.api import Experiment
+
+N_CLIENTS = 4
+ROUNDS = 4
+EVAL_EVERY = 2
+
+KIND_KWARGS = {
+    "lora": {},
+    "flasc": {},
+    "flasc_ef": {},
+    "sparse_adapter": {},
+    "fedselect": {},
+    "adapter_lth": dict(lth_prune_every=2, lth_keep=0.9),
+    "ffa": {},
+    "hetlora": dict(hetlora_ranks=(1, 2, 3, 4)),
+}
+
+
+@pytest.fixture(scope="module")
+def task():
+    return ds.make_synth_image(n_examples=128, n_clients=8, n_patches=4,
+                               dim=16, seed=0, n_eval=128)
+
+
+def _experiment(task, kind="flasc", rounds=ROUNDS, **kw):
+    spec = st.StrategySpec(kind=kind, density_down=0.5, density_up=0.5, **kw)
+    return (Experiment(task, strategy=spec)
+            .with_federation(n_clients=N_CLIENTS, local_batch=4)
+            .with_model(d_model=16, num_layers=1, num_heads=2, d_ff=32)
+            .with_lora(rank=4)
+            .with_training(rounds=rounds, eval_every=EVAL_EVERY,
+                           pretrain_steps=2))
+
+
+def _legacy_run(exp):
+    """The pre-engine `Experiment.run()` inline loop, frozen verbatim (the
+    SimEngine extraction must stay bit-identical to this)."""
+    from repro.federated import runtime as rt
+    from repro.models import model as mdl
+    task, fed, t = exp.task, exp.federation, exp.train
+    params, cfg = exp.build_backbone()
+    trainable, meta, scale = exp._build_trainable(params, cfg)
+
+    def loss_of(tree, mb):
+        p = dict(params)
+        if "head" in tree:
+            p.update(tree["head"])
+        return mdl.loss_fn(p, cfg, rt._task_batch(cfg, mb),
+                           lora=tree["lora"], lora_scale=scale)
+
+    flatP = meta.flatten(trainable)
+    server = fedround.init_server(flatP)
+    sstate = exp.strategy.init_state(meta.p_len)
+    round_fn = jax.jit(fedround.make_round_fn(loss_of, meta, fed,
+                                              exp.strategy))
+    ledger = exp.build_ledger(meta.p_len)
+    history, acc = [], 0.0
+    for r in range(t.rounds):
+        batch_np = sample_round(task, fed, r, seed=t.seed)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        key = jax.random.fold_in(jax.random.key(t.seed + 2), r)
+        flatP, server, sstate, m = round_fn(flatP, server, sstate, batch, key)
+        ledger.record_round(
+            fed.n_clients, float(m["down_nnz"]), float(m["up_nnz"]),
+            down_per_message=[float(v) for v in m["down_nnz_clients"]],
+            up_per_message=[float(v) for v in m["up_nnz_clients"]])
+        rec = {"round": r, "loss": float(m["loss"]),
+               "down_bytes": ledger.down_bytes, "up_bytes": ledger.up_bytes,
+               "total_bytes": ledger.total_bytes,
+               "coded_bytes": ledger.total_coded_bytes}
+        if (r + 1) % t.eval_every == 0 or r == t.rounds - 1:
+            acc = rt.evaluate(params, cfg, trainable, meta, task, scale, flatP)
+            rec["acc"] = acc
+        history.append(rec)
+    return history, ledger, acc, np.asarray(flatP), jax.tree.leaves(sstate)
+
+
+class _CaptureState(eng.Callback):
+    """Grabs the post-round state so tests can compare final weights."""
+
+    def on_round_end(self, ev):
+        self.flatP = np.asarray(ev.state.flatP)
+        self.sstate_leaves = [np.asarray(x)
+                              for x in jax.tree.leaves(ev.state.sstate)]
+
+
+LEDGER_ATTRS = ("down_values", "up_values", "down_bytes", "up_bytes",
+                "total_bytes", "down_coded_bytes", "up_coded_bytes",
+                "total_coded_bytes", "rounds")
+
+
+@pytest.mark.parametrize("kind", sorted(KIND_KWARGS))
+def test_sim_engine_bit_identical_to_prerefactor_loop(task, kind):
+    cap = _CaptureState()
+    res = _experiment(task, kind, **KIND_KWARGS[kind]).with_callbacks(cap).run()
+    hist_old, led_old, acc_old, P_old, ss_old = _legacy_run(
+        _experiment(task, kind, **KIND_KWARGS[kind]))
+
+    assert len(res.history) == len(hist_old)
+    for rec_new, rec_old in zip(res.history, hist_old):
+        for k, v in rec_old.items():        # new records add coded splits
+            assert rec_new[k] == v, (rec_new["round"], k)
+    assert res.final_acc == acc_old
+    for attr in LEDGER_ATTRS:
+        assert getattr(res.ledger, attr) == getattr(led_old, attr), attr
+    np.testing.assert_array_equal(cap.flatP, P_old)
+    assert len(cap.sstate_leaves) == len(ss_old)
+    for a, b in zip(cap.sstate_leaves, ss_old):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+@pytest.mark.parametrize("rounds_per_call", [1, 4])
+def test_sharded_engine_end_to_end_single_device(task, rounds_per_call):
+    """The SPMD backend on a (1, 1) cpu mesh: same experiment, same ledger
+    totals, matching losses, eval cadence preserved across scan chunks."""
+    sim = _experiment(task, rounds=6).run()
+    sh = (_experiment(task, rounds=6)
+          .with_engine("sharded", rounds_per_call=rounds_per_call)
+          .run())
+    assert [h["round"] for h in sh.history] == [h["round"] for h in sim.history]
+    for a, b in zip(sh.history, sim.history):
+        assert a["loss"] == pytest.approx(b["loss"], rel=1e-5)
+    for attr in LEDGER_ATTRS:
+        assert getattr(sh.ledger, attr) == getattr(sim.ledger, attr), attr
+    # eval rounds must land at the cadence even when chunked
+    assert [h["round"] for h in sh.history if "acc" in h] == \
+        [h["round"] for h in sim.history if "acc" in h]
+    assert sh.final_acc == pytest.approx(sim.final_acc, abs=1e-6)
+
+
+class _StopAfterCheckpoint(eng.Callback):
+    """Simulates a crash right after a snapshot lands on disk."""
+
+    def on_checkpoint(self, ev):
+        raise eng.StopRun
+
+
+def test_checkpoint_resume_reproduces_history(task, tmp_path):
+    full = _experiment(task, rounds=8).run()
+
+    ckpt = str(tmp_path / "ckpt")
+    interrupted = (_experiment(task, rounds=8)
+                   .with_checkpoint(ckpt, every=3)
+                   .with_callbacks(_StopAfterCheckpoint())
+                   .run())
+    assert len(interrupted.history) == 3        # stopped at the round-3 save
+    assert os.path.exists(os.path.join(ckpt, "state-r3.npz"))
+    assert os.path.exists(os.path.join(ckpt, "frozen.npz"))
+    assert os.path.exists(os.path.join(ckpt, "meta.json"))
+
+    resumed = Experiment.resume(ckpt).run()
+    assert resumed.history == full.history      # bit-for-bit, floats included
+    for attr in LEDGER_ATTRS:
+        assert getattr(resumed.ledger, attr) == getattr(full.ledger, attr), attr
+    assert resumed.final_acc == full.final_acc
+
+
+def test_resume_without_remaining_rounds_is_stable(task, tmp_path):
+    """A checkpoint taken on the final round resumes to a no-op run that
+    still reports the saved history and accuracy — and comes back on the
+    engine backend the run was saved under."""
+    ckpt = str(tmp_path / "ckpt")
+    full = (_experiment(task, rounds=3)
+            .with_engine("sharded", rounds_per_call=2)
+            .with_checkpoint(ckpt, every=3).run())
+    exp = Experiment.resume(ckpt)
+    assert isinstance(exp.engine, eng.ShardedEngine)
+    assert exp.engine.rounds_per_call == 2
+    resumed = exp.run()
+    assert resumed.history == full.history
+    assert resumed.final_acc == full.final_acc
+
+
+@pytest.mark.fast
+def test_weighted_aggregation_refused_under_dp():
+    """DP noise calibration assumes uniform averaging; a weighted
+    aggregate must be rejected, not silently dropped."""
+    from repro.models.config import FederatedConfig
+    tree = {"w": {"a": jnp.zeros((2, 4)), "b": jnp.zeros((4, 3))}}
+    meta = fedround.FlatMeta.of(tree)
+    fed = FederatedConfig(n_clients=2, local_batch=2, local_steps=1,
+                          dp_clip=1.0, dp_noise=0.1)
+    spec = st.StrategySpec(kind="hetlora", hetlora_ranks=(2, 4),
+                           hetlora_weighted=True)
+    fn = fedround.make_round_fn(lambda tree, mb: jnp.sum(tree["w"]["a"] ** 2),
+                                meta, fed, spec)
+    flatP = meta.flatten(tree)
+    with pytest.raises(NotImplementedError, match="non-uniform"):
+        fn(flatP, fedround.init_server(flatP), {},
+           {"x": jnp.zeros((2, 1, 2, 1))}, jax.random.key(0))
+    # ...while plain hetlora (uniform averaging) still composes with DP
+    spec_ok = st.StrategySpec(kind="hetlora", hetlora_ranks=(2, 4))
+    fn_ok = jax.jit(fedround.make_round_fn(
+        lambda tree, mb: jnp.sum(tree["w"]["a"] ** 2), meta, fed, spec_ok))
+    out = fn_ok(flatP, fedround.init_server(flatP), {},
+                {"x": jnp.zeros((2, 1, 2, 1))}, jax.random.key(0))
+    assert np.isfinite(float(out[3]["loss"]))
+
+
+def test_stoprun_mid_round_keeps_state_consistent(task):
+    """StopRun raised from on_round_end still finishes that round's
+    bookkeeping: history length, ledger.rounds, and state.round agree."""
+
+    class StopAfter(eng.Callback):
+        def __init__(self, n):
+            self.n = n
+
+        def on_round_end(self, ev):
+            if ev.round + 1 >= self.n:
+                raise eng.StopRun
+
+    res = _experiment(task, rounds=8).with_callbacks(StopAfter(3)).run()
+    assert len(res.history) == 3
+    assert res.ledger.rounds == 3
+    assert [h["round"] for h in res.history] == [0, 1, 2]
+
+
+@pytest.mark.fast
+def test_engine_registry_resolves():
+    assert set(eng.registered_engines()) >= {"sim", "sharded"}
+    assert isinstance(eng.resolve_engine("sim"), eng.SimEngine)
+    sharded = eng.resolve_engine("sharded", rounds_per_call=4)
+    assert isinstance(sharded, eng.ShardedEngine)
+    assert sharded.rounds_per_call == 4
+    inst = eng.SimEngine()
+    assert eng.resolve_engine(inst) is inst
+    with pytest.raises(KeyError, match="no_such_engine"):
+        eng.resolve_engine("no_such_engine")
+
+
+@pytest.mark.fast
+def test_chunk_len_cuts_at_state_rounds():
+    """Scan chunks end where a callback needs host state (eval cadence)."""
+
+    class Want(eng.Callback):
+        def wants_state(self, r, rounds):
+            return (r + 1) % 3 == 0
+
+    e = eng.ShardedEngine(rounds_per_call=8)
+    plan = object()
+    state = eng.RunState(plan, None, None, None, round=0, rounds=10)
+    cuts, r = [], 0
+    while r < state.rounds:
+        n = e._chunk_len(r, state, [Want()])
+        cuts.append(n)
+        r += n
+    assert cuts == [3, 3, 3, 1]                 # chunks end at rounds 2,5,8,9
+
+
+@pytest.mark.fast
+def test_hetlora_weighted_aggregation_math():
+    """Rank-coverage weighting divides each entry by the number of clients
+    whose rank slice covers it (plain averaging divides by n_clients)."""
+    tree = {"w": {"a": jnp.zeros((2, 4)), "b": jnp.zeros((4, 3))}}
+    meta = fedround.FlatMeta.of(tree)
+    ranks = (1, 2, 4, 4)
+    strat = st.resolve(st.StrategySpec(kind="hetlora", hetlora_ranks=ranks,
+                                       hetlora_weighted=True))
+    ctx = meta.plan_context(4)
+    masks = jnp.stack([strat.client_plan(None, c, ctx).m_down
+                       for c in range(4)])
+    deltas = masks.astype(jnp.float32)          # each client uploads its mask
+    agg = strat.aggregate(deltas, ctx)
+    cov = np.sum(np.asarray(masks), axis=0)
+    # covered entries aggregate to exactly 1 (sum/coverage); uncovered to 0
+    np.testing.assert_allclose(np.asarray(agg),
+                               (cov > 0).astype(np.float32), atol=0)
+    # the unweighted default would have produced mean = cov / 4
+    plain = st.resolve(st.StrategySpec(kind="hetlora", hetlora_ranks=ranks))
+    np.testing.assert_allclose(np.asarray(plain.aggregate(deltas, ctx)),
+                               cov / 4.0, atol=0)
+
+
+def test_hetlora_weighted_changes_round_outputs(task):
+    base = KIND_KWARGS["hetlora"]
+    res_plain = _experiment(task, "hetlora", **base).run()
+    res_w = _experiment(task, "hetlora", hetlora_weighted=True, **base).run()
+    # identical communication, different server trajectory
+    assert res_w.ledger.total_bytes == res_plain.ledger.total_bytes
+    assert any(a["loss"] != b["loss"]
+               for a, b in zip(res_w.history[1:], res_plain.history[1:]))
+
+
+@pytest.mark.fast
+def test_logging_callback_formats(capsys):
+    state = eng.RunState(None, None, None, None, rounds=10)
+    rec = {"loss": 1.25, "acc": 0.5, "total_bytes": 2e6}
+    ev = eng.RoundEvent(round=4, state=state, metrics={}, record=rec,
+                        evaluated=True)
+    eng.LoggingCallback(verbose=True).on_eval(ev)
+    out = capsys.readouterr().out
+    assert "round    5" in out and "acc=0.5000" in out and "2.00MB" in out
