@@ -144,12 +144,50 @@ def lower_combo(arch: str, shape_name: str, mesh, *, lora_rank: int = 16,
         "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
         "peak_bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
                                      + getattr(mem, "argument_size_in_bytes", 0)),
-        "cpu_upcast_bytes": int(hloprof.cpu_upcast_bytes(hlo)),
+        "cpu_upcast_bytes": int(coll.pop("cpu_upcast_bytes")),
         **coll,
     }
+    problems = sanity_check(stats)
+    if problems:
+        stats["status"] = "SUSPECT"
+        stats["sanity"] = problems
     if _keep:
         stats["_compiled"] = compiled
     return stats
+
+
+def sanity_check(stats: dict) -> list:
+    """Guard against silent hloprof parser regressions (it happened: an HLO
+    printer format change zeroed operand parsing, under-counting flops ~1000x
+    and emitting the degenerate dot_traffic == 2*flops signature of
+    contract=1 / operand_bytes=0).  Returns a list of problem strings."""
+    problems = []
+    flops, raw = stats["flops"], stats["xla_flops_raw"]
+    # the trip-count gate below must not be the only line of defense: if the
+    # trip parser itself regresses, every while reports 1 trip and would
+    # silently disarm it.  All whiles in these graphs are counted scans, so
+    # whiles with no parsed trip count mean the parser is broken.
+    if stats.get("while_ops", 0) > 0 and stats.get("max_while_trips", 1) <= 1:
+        problems.append(
+            f"{stats['while_ops']:.0f} while op(s) but no trip count parsed "
+            "from known_trip_count/loop-condition; hloprof's trip parser is "
+            "broken")
+    # valid only for layer-scanned dot-dominated graphs (every production
+    # arch here): with >=8 while trips, trip-aware dot flops must exceed
+    # XLA's everything-counted-once total
+    if stats.get("max_while_trips", 1) >= 8 and flops < raw:
+        problems.append(
+            f"trip-count-aware dot flops ({flops:.3e}) below XLA's "
+            f"loop-bodies-counted-once total ({raw:.3e}); hloprof is "
+            "under-counting")
+    traffic = stats["dot_traffic_bytes"]
+    if stats.get("dot_ops", 0) > 0 and flops > 0:
+        for k in (1.0, 2.0, 4.0):
+            if abs(traffic - k * flops) <= 1e-6 * traffic:
+                problems.append(
+                    f"dot_traffic_bytes == {k:g}*flops exactly — the "
+                    "signature of lost contracting-dim/operand parsing")
+    return problems
 
 
 def main():
@@ -190,8 +228,11 @@ def main():
                 json.dump(stats, f, indent=1)
             line = (f"[{mesh_tag}] {arch:20s} {shape:12s} {stats['status']:4s} ")
             if stats["status"] == "OK":
+                # subtract each materialized f32 upcast once: the bf16
+                # original stays live either way, the f32 copy would not
+                # exist on TPU (native bf16 dots)
                 peak_adj = (stats['peak_bytes_per_device']
-                            - 2 * stats['cpu_upcast_bytes'])  # double-buffered
+                            - stats['cpu_upcast_bytes'])
                 line += (f"compile={stats['compile_s']:6.1f}s "
                          f"flops={stats['flops']:.3e} "
                          f"peak/dev={stats['peak_bytes_per_device']/2**30:6.2f}GiB "
@@ -199,6 +240,9 @@ def main():
                          f"coll={stats['collective_bytes']/2**30:7.3f}GiB")
             elif stats["status"] == "SKIP":
                 line += stats["reason"][:60]
+            elif stats["status"] == "SUSPECT":
+                failures += 1
+                line += "SANITY: " + "; ".join(stats["sanity"])[:120]
             else:
                 line += stats["error"][:90]
             print(line, flush=True)

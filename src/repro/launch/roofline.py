@@ -4,8 +4,11 @@ Per (arch x shape x mesh), three per-device time terms on TPU v5e:
 
   t_compute    = dot_flops / PEAK_FLOPS          (trip-count-aware HLO dots)
   t_memory     = dot_traffic_bytes / HBM_BW      (dot operands+results; an
-                 upper bound that ignores fusion reuse, minus the CPU-only
-                 f32 weight upcasts)
+                 upper bound that ignores fusion reuse and keeps the f32
+                 width of CPU-upcast operands — trip-weighted dot reads
+                 can't be reconciled with the once-per-buffer upcast count,
+                 so no subtraction is attempted; ~<=2x pessimistic for
+                 upcast-fed dots)
   t_collective = collective_bytes / ICI_BW       (per-device link bytes with
                  ring-algorithm factors)
 
@@ -30,6 +33,13 @@ from repro.models.model import count_params
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 ICI_BW = 50e9                # bytes/s / link (per-device budget used here)
+
+# useful_ratio = MODEL_FLOPS / HLO flops.  LoRA training does less backward
+# work than the dense 6*N*D reference (frozen weights get no weight-grad),
+# so ratios slightly above 1 are legitimate — but anything far above means
+# the artifact's flop accounting is broken (a silent hloprof parser failure
+# once produced ratio=1483) and must not drive the hillclimb analysis.
+USEFUL_RATIO_MAX = 1.5
 
 SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 
@@ -68,11 +78,16 @@ def analyse(d: Dict) -> Optional[Dict]:
         return None
     chips = d["chips"]
     t_c = d["flops"] / PEAK_FLOPS
-    traffic = max(d["dot_traffic_bytes"] - 2 * d.get("cpu_upcast_bytes", 0), 0.0)
-    t_m = traffic / HBM_BW
+    t_m = d["dot_traffic_bytes"] / HBM_BW
     t_x = d["collective_bytes"] / ICI_BW
     mf = model_flops(d["arch"], d["shape"])
     hlo_global = d["flops"] * chips
+    ratio = mf / max(hlo_global, 1.0)
+    if ratio > USEFUL_RATIO_MAX:
+        raise ValueError(
+            f"{d['arch']}/{d['shape']}: useful_ratio={ratio:.1f} > "
+            f"{USEFUL_RATIO_MAX} is physically impossible — the artifact's "
+            "flop accounting is broken; regenerate the dry-run")
     terms = {"compute": t_c, "memory": t_m, "collective": t_x}
     dom = max(terms, key=terms.get)
     total = max(terms.values())
@@ -80,9 +95,21 @@ def analyse(d: Dict) -> Optional[Dict]:
         **d,
         "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
         "dominant": dom, "bound_s": total,
-        "model_flops": mf, "useful_ratio": mf / max(hlo_global, 1.0),
+        "model_flops": mf, "useful_ratio": ratio,
         "mfu_bound": mf / (chips * PEAK_FLOPS * max(total, 1e-12)),
     }
+
+
+def _try_analyse(d: Dict):
+    """(analysis, error) — one broken/SUSPECT artifact must surface as a
+    broken *row*, not abort the whole report for the healthy combos."""
+    try:
+        a = analyse(d)
+    except ValueError as e:
+        return None, str(e)
+    if a is None:
+        return None, d.get("error") or "; ".join(d.get("sanity", []))
+    return a, ""
 
 
 NOTES = {
@@ -99,11 +126,12 @@ def emit_markdown(rows: List[Dict]) -> str:
         if d.get("status") == "SKIP":
             out.append(f"| {d['arch']} | {d['shape']} | — | — | — | SKIP | — | — | {d['reason'][:48]} |")
             continue
-        a = analyse(d)
+        a, err = _try_analyse(d)
         if a is None:
-            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | FAIL | — | — | {d.get('error','')[:48]} |")
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — "
+                       f"| {d.get('status', 'FAIL')} | — | — | {err[:48]} |")
             continue
-        adj = max(a["peak_bytes_per_device"] - 2 * a.get("cpu_upcast_bytes", 0), 0) / 2**30
+        adj = max(a["peak_bytes_per_device"] - a.get("cpu_upcast_bytes", 0), 0) / 2**30
         out.append(
             f"| {a['arch']} | {a['shape']} | {a['t_compute']:.3f} | {a['t_memory']:.3f} "
             f"| {a['t_collective']:.3f} | **{a['dominant']}** | {a['model_flops']:.2e} "
@@ -113,13 +141,17 @@ def emit_markdown(rows: List[Dict]) -> str:
 
 def pick_hillclimb(rows: List[Dict]) -> Dict[str, str]:
     """worst roofline fraction / most collective-bound / most representative."""
-    analysed = [a for a in (analyse(d) for d in rows) if a]
+    analysed = [a for a in (_try_analyse(d)[0] for d in rows) if a]
+    if not analysed:
+        return {"error": "no healthy rows — every artifact failed analysis; "
+                         "regenerate the dry-run"}
     worst = min(analysed, key=lambda a: a["mfu_bound"])
     coll = max(analysed, key=lambda a: a["t_collective"] / max(a["bound_s"], 1e-12))
-    rep = next(a for a in analysed if a["shape"] == "train_4k")  # paper's own regime
+    # paper's own regime; absent if only serving shapes survived
+    rep = next((a for a in analysed if a["shape"] == "train_4k"), None)
     return {"worst_roofline": f"{worst['arch']}/{worst['shape']}",
             "most_collective": f"{coll['arch']}/{coll['shape']}",
-            "representative": f"{rep['arch']}/{rep['shape']}"}
+            "representative": f"{rep['arch']}/{rep['shape']}" if rep else "n/a"}
 
 
 def main():
@@ -135,13 +167,13 @@ def main():
         print("hillclimb picks:", json.dumps(pick_hillclimb(rows), indent=1))
     else:
         for d in rows:
-            a = analyse(d)
+            a, err = _try_analyse(d)
             if a:
                 print(f"{a['arch']:20s} {a['shape']:12s} comp={a['t_compute']:8.3f}s "
                       f"mem={a['t_memory']:8.3f}s coll={a['t_collective']:8.3f}s "
                       f"dom={a['dominant']:10s} ratio={a['useful_ratio']:6.2f}")
             else:
-                print(f"{d['arch']:20s} {d['shape']:12s} {d['status']}")
+                print(f"{d['arch']:20s} {d['shape']:12s} {d['status']} {err}")
 
 
 if __name__ == "__main__":

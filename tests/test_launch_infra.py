@@ -69,6 +69,94 @@ def test_hloprof_nested_loops():
     assert p["dot_flops"] == pytest.approx(12 * 2 * 64 ** 3, rel=0.01)
 
 
+def test_hloprof_dot_traffic_not_degenerate():
+    """Traffic must be operands+result bytes, never a round multiple of
+    flops — the 2x signature meant operand parsing silently failed."""
+    def g(x):
+        def body(c, _):
+            return c @ x, None
+        y, _ = jax.lax.scan(body, jnp.eye(128), None, length=5)
+        return y
+    c = jax.jit(g).lower(jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
+    p = hloprof.profile(c.as_text(), 1)
+    # per trip: lhs + rhs + result, each 128*128*f32
+    assert p["dot_traffic_bytes"] == pytest.approx(5 * 3 * 128 * 128 * 4, rel=0.01)
+    for k in (1.0, 2.0, 4.0):
+        assert p["dot_traffic_bytes"] != pytest.approx(k * p["dot_flops"], rel=1e-6)
+
+
+def test_hloprof_unparseable_dot_raises():
+    """A dot whose operands/contracting dims can't be parsed must raise, not
+    silently fall back to contract=1 (that under-counted flops ~1000x)."""
+    comp = hloprof.Computation("c", [], {})
+    op = hloprof.Op("dot.1", "dot", "f32[8,8]{1,0}",
+                    "dot(%mystery.1, %mystery.2), metadata={}")
+    with pytest.raises(ValueError):
+        hloprof._dot_flops(comp, op)
+
+
+def test_hloprof_bf16_upcast_detection():
+    """CPU materializes f32 copies of bf16 dot inputs; cpu_upcast_bytes must
+    see them (the old wrapped_convert fusion naming no longer exists)."""
+    def g(x, w):
+        return (x @ w).astype(jnp.bfloat16)
+    args = (jax.ShapeDtypeStruct((64, 64), jnp.bfloat16),
+            jax.ShapeDtypeStruct((64, 64), jnp.bfloat16))
+    c = jax.jit(g).lower(*args).compile()
+    up = hloprof.cpu_upcast_bytes(c.as_text())
+    # at least the two 64x64 f32 operand upcasts
+    assert up >= 2 * 64 * 64 * 4
+
+
+def test_dryrun_sanity_check():
+    from repro.launch.dryrun import sanity_check
+    good = {"flops": 1e14, "xla_flops_raw": 7e12, "dot_traffic_bytes": 9.7e11,
+            "dot_ops": 2112, "max_while_trips": 34.0, "while_ops": 6.0}
+    assert sanity_check(good) == []
+    undercount = dict(good, flops=1.6e11, dot_traffic_bytes=3.2e11)
+    probs = sanity_check(undercount)
+    assert any("under-counting" in p for p in probs)
+    degenerate = dict(good, dot_traffic_bytes=2.0 * good["flops"])
+    probs = sanity_check(degenerate)
+    assert any("signature" in p for p in probs)
+    # a regressed trip parser reports 1 trip everywhere — that must itself
+    # trip the gate, not silently disarm the under-count check
+    broken_trips = dict(good, max_while_trips=1.0)
+    probs = sanity_check(broken_trips)
+    assert any("trip parser" in p for p in probs)
+
+
+def test_dryrun_sanity_ignores_loop_free_modules():
+    """Loop-free graphs legitimately have dot flops below XLA's total (which
+    counts elementwise work too) — the under-count gate must not fire.
+    max_while_trips must be real while trips, not call-graph multiplicity."""
+    from repro.launch.dryrun import sanity_check
+
+    def g(x, w):
+        y = x @ w
+        return jnp.sum(y) + jnp.sum(x)
+
+    args = (jax.ShapeDtypeStruct((64, 64), jnp.float32),) * 2
+    c = jax.jit(g).lower(*args).compile()
+    p = hloprof.profile(c.as_text(), 1)
+    assert p["max_while_trips"] == 1.0
+    assert p["while_ops"] == 0.0
+    stats = {"flops": p["dot_flops"], "xla_flops_raw": p["dot_flops"] * 1.1,
+             "dot_traffic_bytes": p["dot_traffic_bytes"],
+             "dot_ops": p["dot_ops"], "max_while_trips": p["max_while_trips"],
+             "while_ops": p["while_ops"]}
+    assert sanity_check(stats) == []
+
+
+def test_roofline_rejects_impossible_ratio():
+    from repro.launch.roofline import analyse
+    d = {"status": "OK", "arch": "minitron-8b", "shape": "train_4k",
+         "chips": 256, "flops": 1.6e11, "dot_traffic_bytes": 3.2e11,
+         "collective_bytes": 1.3e11, "cpu_upcast_bytes": 0}
+    with pytest.raises(ValueError, match="useful_ratio"):
+        analyse(d)
+
+
 def test_hloprof_sort_accounting():
     c = jax.jit(jnp.sort).lower(jax.ShapeDtypeStruct((4096,), jnp.float32)).compile()
     p = hloprof.profile(c.as_text(), 1)
