@@ -54,10 +54,13 @@ def default_fed(**kw) -> FederatedConfig:
     return FederatedConfig(**base)
 
 
-def _engine_for(name: str):
-    """'sim' | 'sharded' | 'sharded:<rounds_per_call>' -> Engine."""
-    if ":" in name:
-        name, k = name.split(":", 1)
+def _engine_for(engine):
+    """'sim' | 'sharded' | 'async' | 'sharded:<rounds_per_call>' | an
+    Engine instance -> Engine."""
+    if not isinstance(engine, str):
+        return resolve_engine(engine)       # instance passes through
+    if ":" in engine:
+        name, k = engine.split(":", 1)
         try:
             return resolve_engine(name, rounds_per_call=int(k))
         except TypeError:
@@ -65,7 +68,7 @@ def _engine_for(name: str):
                 f"engine {name!r} does not support a rounds_per_call chunk "
                 f"(BENCH_ENGINE={name}:{k}); only 'sharded' scans rounds"
             ) from None
-    return resolve_engine(name)
+    return resolve_engine(engine)
 
 
 # pretrained (params, cfg) per backbone identity — figure harnesses sweep
@@ -89,7 +92,10 @@ def pretrained_backbone(task, model_kw: dict, pretrain_steps: int, seed: int):
 def run(task, spec: StrategyLike, fed: Optional[FederatedConfig] = None,
         rounds: int = None, lora_rank: int = 16, seed: int = 0,
         model_kw: Optional[dict] = None, pretrain_steps: Optional[int] = None,
-        full_finetune: bool = False, engine: Optional[str] = None, **train_kw):
+        full_finetune: bool = False, engine=None, **train_kw):
+    """One experiment run.  `engine` is a registry name ('sim', 'sharded',
+    'sharded:<k>', 'async') or an Engine instance (e.g. an AsyncEngine
+    with a custom ClientSystemProfile); None defers to $BENCH_ENGINE."""
     t0 = time.time()
     model_kw = model_kw or MODEL_KW
     pretrain_steps = ((40 if QUICK else 150) if pretrain_steps is None

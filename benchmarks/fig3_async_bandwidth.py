@@ -1,12 +1,31 @@
-"""Figure 3: communication time to reach a target accuracy under asymmetric
-up/down bandwidth (1x, 1/4x, 1/16x upload speed).
+"""Figure 3: time to reach a target accuracy under asymmetric up/down
+bandwidth (upload at 1x, 1/4x, 1/16x of the download speed).
+
+Runs every method under `engine="async"` — the event-driven virtual-clock
+backend — with a comm-only `ClientSystemProfile` (step_time=0, upload
+bandwidth scaled down per grid point), so the reported `sim_time` is the
+*simulated* wall-clock at which each round's coded download+upload
+actually completed on the event queue.  Two timing columns per method and
+ratio:
+
+  * sim_time / sim_rel_time — the async engine's virtual clock
+    (time-to-target read off the run's history records);
+  * rel_time / rel_time_coded — the legacy post-hoc bytes/bandwidth
+    arithmetic over the same histories, kept for comparison.
 
 Paper claim: FLASC's independent upload density makes it robust to slow
-uploads — d_up=1/64 reaches target ~16x faster than dense LoRA."""
+uploads — d_up=1/64 reaches target ~16x faster than dense LoRA.
+
+Sentinel: when a method never reaches the target — or the dense-LoRA
+reference never does, so there is no baseline to normalize against —
+relative rows carry -1.0 (never a silent 1.0; see `rel_row`).
+"""
 from __future__ import annotations
 
 from repro.core.strategies import StrategySpec
-from benchmarks.common import QUICK, emit, get_task, row, run
+from repro.federated.async_clock import ClientSystemProfile
+from repro.federated.engine import AsyncEngine
+from benchmarks.common import emit, get_task, row, run
 
 METHODS = {
     "lora": StrategySpec(kind="lora"),
@@ -17,40 +36,73 @@ METHODS = {
     "adapter_lth_.98": StrategySpec(kind="adapter_lth", lth_keep=0.98),
 }
 BW_RATIOS = (1, 4, 16)          # download/upload speed ratio
-DOWN_BW = 1e6                   # arbitrary unit; times reported relative to LoRA
+DOWN_BW = 1e6                   # bytes/sec; times reported relative to LoRA
+
+
+def sim_time_to_target(history, target):
+    """Virtual-clock time at the first eval record at/above `target`
+    (None if the run never reached it)."""
+    for h in history:
+        if h.get("acc", 0.0) >= target:
+            return h["sim_time"]
+    return None
+
+
+def posthoc_time_to_target(history, target, ratio, coded=False):
+    """The legacy post-hoc estimate: cumulative bytes / bandwidth at the
+    first eval record at/above `target` (None if never reached)."""
+    dk, uk = (("down_coded_bytes", "up_coded_bytes") if coded
+              else ("down_bytes", "up_bytes"))
+    for h in history:
+        if h.get("acc", 0.0) >= target:
+            return h[dk] / DOWN_BW + h[uk] / (DOWN_BW / ratio)
+    return None
+
+
+def rel_row(figure, setting, metric, t, base_t):
+    """Relative-time row with the -1.0 sentinel when the method never
+    reached the target (t is None) or the dense-LoRA baseline never did
+    (base_t is None) — the old code silently emitted 1.0 for the latter."""
+    if t is None or base_t is None:
+        return row(figure, setting, metric, -1.0)
+    return row(figure, setting, metric, t / base_t)
 
 
 def main():
     task = get_task("synth_text")
-    # target = fraction of the dense-LoRA best accuracy (70%-style threshold)
-    ref = run(task, METHODS["lora"])
-    target = 0.9 * ref.best_acc()
-    rows = [row("fig3", "lora", "target_acc", target)]
-    results = {"lora": ref}
-    for name, spec in METHODS.items():
-        if name not in results:
-            results[name] = run(task, spec)
+    rows = []
+    results = {}                # (name, ratio) -> ExperimentResult
     for ratio in BW_RATIOS:
-        base_t = base_tc = None
-        for name, res in results.items():
-            reached = [h for h in res.history if h.get("acc", 0) >= target]
-            if not reached:
-                rows.append(row("fig3", f"up1/{ratio}/{name}", "rel_time", -1.0))
-                rows.append(row("fig3", f"up1/{ratio}/{name}", "rel_time_coded",
-                                -1.0))
-                continue
-            h = reached[0]
-            t = h["down_bytes"] / DOWN_BW + h["up_bytes"] / (DOWN_BW / ratio)
-            # practical index/bitmap wire format (per-direction coded bytes)
-            tc = (h["down_coded_bytes"] / DOWN_BW
-                  + h["up_coded_bytes"] / (DOWN_BW / ratio))
-            if name == "lora":
-                base_t, base_tc = t, tc
-            rows.append(row("fig3", f"up1/{ratio}/{name}", "rel_time",
-                            t / base_t if base_t else 1.0))
-            rows.append(row("fig3", f"up1/{ratio}/{name}", "rel_time_coded",
-                            tc / base_tc if base_tc else 1.0))
-    return emit(rows, "Figure 3: time-to-accuracy under asymmetric bandwidth")
+        profile = ClientSystemProfile(step_time=0.0, down_bw=DOWN_BW,
+                                      up_bw=DOWN_BW / ratio)
+        for name, spec in METHODS.items():
+            results[(name, ratio)] = run(
+                task, spec, engine=AsyncEngine(profile=profile))
+    # target = fraction of the dense-LoRA best accuracy (70%-style threshold)
+    target = 0.9 * results[("lora", BW_RATIOS[0])].best_acc()
+    rows.append(row("fig3", "lora", "target_acc", target))
+    for ratio in BW_RATIOS:
+        base = results[("lora", ratio)].history
+        base_sim = sim_time_to_target(base, target)
+        base_t = posthoc_time_to_target(base, target, ratio)
+        base_tc = posthoc_time_to_target(base, target, ratio, coded=True)
+        for name in METHODS:
+            hist = results[(name, ratio)].history
+            setting = f"up1/{ratio}/{name}"
+            t_sim = sim_time_to_target(hist, target)
+            if t_sim is not None:
+                rows.append(row("fig3", setting, "sim_time", t_sim))
+            rows.append(rel_row("fig3", setting, "sim_rel_time",
+                                t_sim, base_sim))
+            rows.append(rel_row("fig3", setting, "rel_time",
+                                posthoc_time_to_target(hist, target, ratio),
+                                base_t))
+            rows.append(rel_row("fig3", setting, "rel_time_coded",
+                                posthoc_time_to_target(hist, target, ratio,
+                                                       coded=True),
+                                base_tc))
+    return emit(rows, "Figure 3: time-to-accuracy under asymmetric bandwidth "
+                      "(async engine)")
 
 
 if __name__ == "__main__":

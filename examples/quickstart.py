@@ -1,29 +1,47 @@
 """Quickstart: one FLASC federated finetuning run on a synthetic task.
 
   PYTHONPATH=src python examples/quickstart.py
+
+QUICK=1 shrinks the task/model/rounds to a seconds-long smoke run — the
+mode `scripts/check_docs.py` executes in CI so this file can't rot.
 """
+import os
+
 from repro.core.strategies import StrategySpec
 from repro.data.datasets import make_synth_image
 from repro.federated.runtime import run_experiment
 from repro.models.config import FederatedConfig
 
+QUICK = os.environ.get("QUICK", "0") == "1"
+
+MODEL_KW = (dict(d_model=16, num_layers=1, num_heads=2, d_ff=32) if QUICK
+            else dict(d_model=48, num_layers=2, num_heads=4, d_ff=96))
+ROUNDS = 4 if QUICK else 30
+PRETRAIN = 5 if QUICK else 100
+EVAL_EVERY = 2 if QUICK else 10
+
 
 def main():
-    task = make_synth_image(n_examples=1024, n_clients=48, n_patches=8, dim=48)
+    if QUICK:
+        task = make_synth_image(n_examples=256, n_clients=8, n_patches=4,
+                                dim=16)
+    else:
+        task = make_synth_image(n_examples=1024, n_clients=48, n_patches=8,
+                                dim=48)
     fed = FederatedConfig(n_clients=8, local_batch=8, local_steps=1,
                           client_lr=5e-3, server_lr=5e-3)
     print("== dense LoRA baseline ==")
     dense = run_experiment(task, spec=StrategySpec(kind="lora"), fed=fed,
-                           rounds=30, lora_rank=16, eval_every=10,
-                           model_kw=dict(d_model=48, num_layers=2,
-                                         num_heads=4, d_ff=96), verbose=True)
+                           rounds=ROUNDS, lora_rank=16, eval_every=EVAL_EVERY,
+                           pretrain_steps=PRETRAIN, model_kw=MODEL_KW,
+                           verbose=True)
     print("== FLASC (d_down = d_up = 1/4) ==")
     flasc = run_experiment(task, spec=StrategySpec(kind="flasc",
                                                    density_down=0.25,
                                                    density_up=0.25),
-                           fed=fed, rounds=30, lora_rank=16, eval_every=10,
-                           model_kw=dict(d_model=48, num_layers=2,
-                                         num_heads=4, d_ff=96), verbose=True)
+                           fed=fed, rounds=ROUNDS, lora_rank=16,
+                           eval_every=EVAL_EVERY, pretrain_steps=PRETRAIN,
+                           model_kw=MODEL_KW, verbose=True)
     saving = dense.ledger.total_bytes / max(flasc.ledger.total_bytes, 1)
     print(f"\nLoRA   : acc={dense.best_acc():.3f} comm={dense.ledger.total_bytes/1e6:.2f}MB")
     print(f"FLASC  : acc={flasc.best_acc():.3f} comm={flasc.ledger.total_bytes/1e6:.2f}MB")

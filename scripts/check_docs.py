@@ -1,0 +1,210 @@
+#!/usr/bin/env python
+"""Docs-vs-code consistency gate (wired into scripts/ci_fast.sh).
+
+Checks, over README.md and every docs/*.md:
+
+  1. inline-code *file paths* (backtick spans containing '/' or ending in
+     a known suffix) exist in the repo — tried relative to the repo root,
+     `src/`, and `src/repro/`;
+  2. inline-code *dotted references* (`module.symbol`, `Class.method`,
+     `pkg.module`) resolve against a static AST index of `src/repro` —
+     no imports, so the check is fast and jax-free;
+  3. `examples/quickstart.py` still runs (QUICK=1 smoke mode), so the
+     README's copy-paste path can't rot (skip with --no-run).
+
+Markdown link targets ([text](path)) are checked as paths too.  Exits 1
+with a per-failure listing when anything is broken.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+PATH_SUFFIXES = (".py", ".md", ".sh", ".json", ".txt", ".ini")
+# bare filenames with these suffixes are run-time artifacts, not repo files
+ARTIFACT_SUFFIXES = {"npz", "json", "log", "csv", "tmp"}
+# dotted names rooted in well-known externals are not ours to verify
+EXTERNAL_ROOTS = {"jax", "jnp", "np", "numpy", "os", "json", "heapq",
+                  "dataclasses", "pytest"}
+
+
+def build_index():
+    """module dotted path -> {"symbols": set, "classes": {name: attrs}}."""
+    index = {}
+    for dirpath, _, files in os.walk(os.path.join(SRC, "repro")):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            mod = os.path.relpath(path, SRC)[:-3].replace(os.sep, ".")
+            if mod.endswith(".__init__"):
+                mod = mod[: -len(".__init__")]
+            with open(path) as f:
+                tree = ast.parse(f.read(), filename=path)
+            symbols, classes = set(), {}
+            for node in tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    symbols.add(node.name)
+                elif isinstance(node, ast.ClassDef):
+                    attrs = set()
+                    for sub in node.body:
+                        if isinstance(sub, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef)):
+                            attrs.add(sub.name)
+                            # instance attrs: self.x = ... anywhere inside
+                            for stmt in ast.walk(sub):
+                                for t in getattr(stmt, "targets",
+                                                 [getattr(stmt, "target",
+                                                          None)]):
+                                    if isinstance(t, ast.Attribute) and \
+                                            isinstance(t.value, ast.Name) \
+                                            and t.value.id == "self":
+                                        attrs.add(t.attr)
+                        elif isinstance(sub, ast.AnnAssign) and \
+                                isinstance(sub.target, ast.Name):
+                            attrs.add(sub.target.id)
+                        elif isinstance(sub, ast.Assign):
+                            attrs.update(t.id for t in sub.targets
+                                         if isinstance(t, ast.Name))
+                    classes[node.name] = attrs
+                    symbols.add(node.name)
+                elif isinstance(node, ast.AnnAssign) and \
+                        isinstance(node.target, ast.Name):
+                    symbols.add(node.target.id)
+                elif isinstance(node, ast.Assign):
+                    symbols.update(t.id for t in node.targets
+                                   if isinstance(t, ast.Name))
+            index[mod] = {"symbols": symbols, "classes": classes}
+    return index
+
+
+def _tail_in_module(parts, info):
+    """Does `parts` (1-2 names) name a symbol / Class.attr in `info`?"""
+    if not parts or len(parts) > 2:
+        return False
+    head = parts[0]
+    if len(parts) == 1:
+        return head in info["symbols"]
+    return head in info["classes"] and parts[1] in info["classes"][head]
+
+
+def resolve_dotted(ref, index):
+    parts = ref.split(".")
+    if parts[0] in EXTERNAL_ROOTS:
+        return True
+    for mod, info in index.items():
+        mod_parts = mod.split(".")
+        # pure module reference by any dotted-path suffix
+        # (core.transport ~ repro.core.transport, fedround ~ ...fedround)
+        for k in range(1, len(mod_parts) + 1):
+            if parts == mod_parts[-k:]:
+                return True
+            # module suffix + symbol chain
+            if len(parts) > k and parts[:k] == mod_parts[-k:] and \
+                    _tail_in_module(parts[k:], info):
+                return True
+        # bare Symbol / Class.attr with no module qualifier
+        if _tail_in_module(parts, info):
+            return True
+    # `var.attr` prose idiom (spec.kind, ctx.rank_idx): a lowercase head is
+    # a variable, not a namespace — accept if the attribute exists on some
+    # indexed class
+    if len(parts) == 2 and parts[0] == parts[0].lower():
+        return any(parts[1] in attrs
+                   for info in index.values()
+                   for attrs in info["classes"].values())
+    return False
+
+
+def path_exists(ref):
+    for base in ("", "src", os.path.join("src", "repro")):
+        if os.path.exists(os.path.join(ROOT, base, ref)):
+            return True
+    return False
+
+
+FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
+SPAN_RE = re.compile(r"`([^`\n]+)`")
+LINK_RE = re.compile(r"\]\(([^)#:\s]+)\)")
+NAME_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*(\.[A-Za-z_][A-Za-z0-9_]*)+$")
+PATH_RE = re.compile(r"^[\w./-]+$")
+
+
+def check_file(md_path, index):
+    with open(md_path) as f:
+        text = f.read()
+    rel = os.path.relpath(md_path, ROOT)
+    failures = []
+    prose = FENCE_RE.sub("", text)      # fenced blocks are examples, not API
+    refs = set(SPAN_RE.findall(prose))
+    links = set(LINK_RE.findall(prose))
+    for target in links:
+        if not path_exists(target):
+            failures.append(f"{rel}: broken link target ({target})")
+    for span in refs:
+        ref = span.strip().rstrip(".")
+        for junk in ("()", "..."):
+            ref = ref.replace(junk, "")
+        if "/" not in ref and ref.rsplit(".", 1)[-1] in ARTIFACT_SUFFIXES:
+            continue    # bare runtime-artifact filename (meta.json, *.npz)
+        if PATH_RE.match(ref) and ("/" in ref
+                                   or ref.endswith(PATH_SUFFIXES)):
+            if path_exists(ref):
+                continue
+            # `dir/module.symbol` hybrid (checkpoint/io.save_pytree):
+            # resolve as a dotted reference instead
+            if NAME_RE.match(ref.replace("/", ".")) and \
+                    resolve_dotted(ref.replace("/", "."), index):
+                continue
+            failures.append(f"{rel}: missing file path (`{span}`)")
+        elif NAME_RE.match(ref):
+            if not resolve_dotted(ref, index):
+                failures.append(f"{rel}: unresolved code reference "
+                                f"(`{span}`)")
+    return failures
+
+
+def smoke_quickstart():
+    env = dict(os.environ, QUICK="1",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    try:
+        proc = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "examples", "quickstart.py")],
+            env=env, cwd=ROOT, capture_output=True, text=True, timeout=600)
+    except subprocess.TimeoutExpired:
+        return ["examples/quickstart.py timed out after 600s (QUICK=1)"]
+    if proc.returncode != 0:
+        return [f"examples/quickstart.py failed (QUICK=1):\n"
+                f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"]
+    return []
+
+
+def main(argv):
+    index = build_index()
+    md_files = [os.path.join(ROOT, "README.md")]
+    docs_dir = os.path.join(ROOT, "docs")
+    md_files += sorted(os.path.join(docs_dir, f)
+                       for f in os.listdir(docs_dir) if f.endswith(".md"))
+    failures = []
+    for md in md_files:
+        failures += check_file(md, index)
+    if "--no-run" not in argv:
+        failures += smoke_quickstart()
+    if failures:
+        print(f"check_docs: {len(failures)} failure(s)")
+        for f in failures:
+            print("  -", f)
+        return 1
+    print(f"check_docs: OK ({len(md_files)} files"
+          f"{', quickstart smoke-run passed' if '--no-run' not in argv else ''})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

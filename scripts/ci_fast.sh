@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Fast CI signal: the sub-minute tier-1 subset (strategy-registry
 # equivalence, sparsity selectors, communication ledger, engine
-# registry/callback/chunking units from tests/test_engine.py) —
-# everything tagged @pytest.mark.fast.  The full tier-1 suite
-# (ROADMAP.md) still covers the slow model-training paths.
+# registry/callback/chunking units from tests/test_engine.py and
+# tests/test_async_engine.py) — everything tagged @pytest.mark.fast —
+# followed by the docs gate (scripts/check_docs.py: README/docs code
+# references must resolve, examples/quickstart.py must run).  The full
+# tier-1 suite (ROADMAP.md) still covers the slow model-training paths.
 #
 #   scripts/ci_fast.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -q -m fast "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m fast "$@"
+python scripts/check_docs.py

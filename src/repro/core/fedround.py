@@ -114,29 +114,21 @@ def _keep_count(p_len: int, density: float) -> int:
     return max(int(round(p_len * density)), 1)
 
 
-def federated_round(flatP, server_state, sstate, client_batches, rng, *,
-                    loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
-                    strategy: Optional[st.StrategyLike] = None,
-                    spec: Optional[st.StrategySpec] = None,
-                    spmd_axis_name=None):
-    """One round. client_batches leaves: (n_clients, local_steps, local_bs, ...).
+def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
+                 loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
+                 kdown=None, upkeys=None, ax_key=None, spmd_axis_name=None):
+    """Stack per-client `RoundPlan`s onto the vmapped client axis and run
+    every client's local update through the transport pipelines.
 
-    `strategy` accepts a `Strategy` instance, a `StrategySpec`, or a kind
-    string (`spec` is the legacy alias).  `spmd_axis_name` (e.g. ('data',)
-    or ('pod','data')) shards the vmapped client axis across the mesh in
-    the production lowering.
-    Returns (flatP', server_state', sstate', metrics).
+    This is the client block of `federated_round`, shared verbatim with the
+    async engine's `make_client_phase_fn` so both execution paths trace the
+    exact same per-client computation (the basis of the AsyncEngine
+    sync-equivalence guarantee).
+
+    Returns ((deltas, up_nnzs, losses, down_nnzs), (m_down_cs, ax_down)) —
+    the second pair is the stacked download mask and its vmap axis, which
+    the caller needs for the shared-vs-per-client download accounting.
     """
-    strat = st.resolve(strategy if strategy is not None else spec)
-    s = strat.spec
-    round_idx = server_state["round"]
-    n_clients = jax.tree.leaves(client_batches)[0].shape[0]
-
-    m_down_global = strat.download_mask(flatP, sstate, round_idx)
-    P_base = strat.download_base(flatP, sstate)
-    ctx = meta.plan_context(n_clients)
-    plans = [strat.client_plan(m_down_global, c, ctx) for c in range(n_clients)]
-
     # --- stack the plans onto the client axis -----------------------------
     m_down_cs, ax_down = _share_or_stack([p.m_down for p in plans])
     trains = [p.m_train for p in plans]
@@ -162,12 +154,6 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
                 [_keep_count(meta.p_len, d) for d in densities], jnp.int32)
             up_cs, ax_up = up_counts, 0
 
-    # --- per-message quantization keys (stochastic rounding) --------------
-    use_keys = rng is not None and (s.quant_bits_up or s.quant_bits_down)
-    qkeys = jax.random.split(rng, n_clients + 1) if use_keys else None
-    kdown = qkeys[-1] if use_keys else None     # shared: one broadcast message
-    upkeys, ax_key = (qkeys[:-1], 0) if use_keys else (None, None)
-
     def one_client(m_dn, m_tr, up_arg, cb, kup):
         down = tp.download_pipeline(m_dn, s.quant_bits_down)(P_base, key=kdown)
         if up_mode == "fixed":
@@ -184,10 +170,46 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
                                            up_key=kup)
         return values, nnz, loss, down.nnz
 
-    deltas, nnzs, losses, down_nnzs = jax.vmap(
+    out = jax.vmap(
         one_client, in_axes=(ax_down, ax_train, ax_up, 0, ax_key),
         spmd_axis_name=spmd_axis_name)(
         m_down_cs, m_train_cs, up_cs, client_batches, upkeys)
+    return out, (m_down_cs, ax_down)
+
+
+def federated_round(flatP, server_state, sstate, client_batches, rng, *,
+                    loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
+                    strategy: Optional[st.StrategyLike] = None,
+                    spec: Optional[st.StrategySpec] = None,
+                    spmd_axis_name=None):
+    """One round. client_batches leaves: (n_clients, local_steps, local_bs, ...).
+
+    `strategy` accepts a `Strategy` instance, a `StrategySpec`, or a kind
+    string (`spec` is the legacy alias).  `spmd_axis_name` (e.g. ('data',)
+    or ('pod','data')) shards the vmapped client axis across the mesh in
+    the production lowering.
+    Returns (flatP', server_state', sstate', metrics).
+    """
+    strat = st.resolve(strategy if strategy is not None else spec)
+    s = strat.spec
+    round_idx = server_state["round"]
+    n_clients = jax.tree.leaves(client_batches)[0].shape[0]
+
+    m_down_global = strat.download_mask(flatP, sstate, round_idx)
+    P_base = strat.download_base(flatP, sstate)
+    ctx = meta.plan_context(n_clients)
+    plans = [strat.client_plan(m_down_global, c, ctx) for c in range(n_clients)]
+
+    # --- per-message quantization keys (stochastic rounding) --------------
+    use_keys = rng is not None and (s.quant_bits_up or s.quant_bits_down)
+    qkeys = jax.random.split(rng, n_clients + 1) if use_keys else None
+    kdown = qkeys[-1] if use_keys else None     # shared: one broadcast message
+    upkeys, ax_key = (qkeys[:-1], 0) if use_keys else (None, None)
+
+    (deltas, nnzs, losses, down_nnzs), (m_down_cs, ax_down) = _run_clients(
+        P_base, plans, client_batches, s, loss_of=loss_of, meta=meta, fed=fed,
+        kdown=kdown, upkeys=upkeys, ax_key=ax_key,
+        spmd_axis_name=spmd_axis_name)
 
     if ax_down is None:     # shared mask: bill the global mask support
         down_nnz = jnp.sum(jnp.asarray(m_down_cs).astype(jnp.float32))
@@ -227,6 +249,10 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
         # per-message sizes for the ledger's per-message index/bitmap coding
         "down_nnz_clients": down_nnzs,
         "up_nnz_clients": nnzs,
+        # per-client losses: engines derive the *recorded* loss from these
+        # on the host (fused device reductions are association-dependent
+        # per program, so their scalars differ across engine backends)
+        "loss_clients": losses,
     }
     return flatP, server_state, sstate, metrics
 
@@ -269,4 +295,108 @@ def make_scanned_round_fn(round_fn):
         (flatP, server_state, sstate), metrics = jax.lax.scan(
             body, (flatP, server_state, sstate), (batches, round_ids))
         return flatP, server_state, sstate, metrics
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# split-phase round (AsyncEngine): client compute and the server update are
+# separate device calls, so clients can run against stale server snapshots
+# and the server can aggregate a buffer of updates from mixed versions.
+# ---------------------------------------------------------------------------
+
+def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
+                         strategy: st.StrategyLike, slots: Tuple[int, ...],
+                         repeats: Optional[Tuple[int, ...]] = None):
+    """Client side of the split round: run the cohort slots in `slots`
+    (a static tuple of global client indices) against one server snapshot.
+
+    The returned function has signature
+
+        fn(flatP, sstate, round_idx, client_batches, rng)
+            -> (deltas, up_nnzs, losses, down_nnzs)
+
+    with `client_batches` leaves shaped (len(slots), local_steps,
+    local_bs, ...).  It traces exactly the download-mask / plan-stacking /
+    vmapped-client block of `federated_round` via `_run_clients`, and the
+    quantization key schedule splits `rng` into the *full cohort's*
+    n_clients+1 keys before selecting this call's rows — so with
+    slots == (0..n_clients-1) the computation is bit-compatible with one
+    synchronous round's client block (the AsyncEngine equivalence anchor).
+
+    `repeats[i]` > 0 marks slot i's repeat-th job against the *same*
+    server version (possible when the buffer is smaller than the
+    concurrency); its quantization key is folded once more per repeat so
+    stochastic rounding never reuses randomness.
+    """
+    strat = st.resolve(strategy)
+    s = strat.spec
+    repeats = tuple(repeats) if repeats is not None else (0,) * len(slots)
+    assert len(repeats) == len(slots), (slots, repeats)
+
+    def fn(flatP, sstate, round_idx, client_batches, rng):
+        m_down_global = strat.download_mask(flatP, sstate, round_idx)
+        P_base = strat.download_base(flatP, sstate)
+        ctx = meta.plan_context(fed.n_clients)
+        plans = [strat.client_plan(m_down_global, c, ctx) for c in slots]
+
+        use_keys = rng is not None and (s.quant_bits_up or s.quant_bits_down)
+        if use_keys:
+            qkeys = jax.random.split(rng, fed.n_clients + 1)
+            kdown = qkeys[-1]
+            ups = [qkeys[c] if rep == 0 else jax.random.fold_in(qkeys[c], rep)
+                   for c, rep in zip(slots, repeats)]
+            upkeys, ax_key = jnp.stack(ups), 0
+        else:
+            kdown, upkeys, ax_key = None, None, None
+
+        (deltas, nnzs, losses, down_nnzs), _ = _run_clients(
+            P_base, plans, client_batches, s, loss_of=loss_of, meta=meta,
+            fed=fed, kdown=kdown, upkeys=upkeys, ax_key=ax_key)
+        return deltas, nnzs, losses, down_nnzs
+    return fn
+
+
+def make_server_phase_fn(meta: FlatMeta, fed: FederatedConfig,
+                         strategy: st.StrategyLike):
+    """Server side of the split round: one buffered aggregation event (the
+    aggregate / server-opt / `post_round` tail of `federated_round`).
+
+    The returned function has signature
+
+        fn(flatP, server_state, sstate, deltas, weights)
+            -> (flatP', server_state', sstate')
+
+    where `deltas` (k, p_len) are the buffered upload messages and
+    `weights` (k,) their staleness discounts.  Each delta is scaled by its
+    weight *before* `Strategy.aggregate`, so every registered strategy's
+    aggregation rule runs unmodified — and since `x * 1.0` is an IEEE
+    identity, all-ones weights reduce bit-exactly to the synchronous
+    update.  `post_round` sees the download mask/base recomputed from the
+    pre-update server snapshot, which is what the synchronous round hands
+    it when the buffer is one full fresh cohort.
+
+    DP aggregation (fed.dp_clip > 0) is noise-calibrated for one uniform
+    synchronous cohort and is refused by the AsyncEngine before this
+    function is ever built.
+    """
+    strat = st.resolve(strategy)
+
+    def fn(flatP, server_state, sstate, deltas, weights):
+        round_idx = server_state["round"]
+        m_down = strat.download_mask(flatP, sstate, round_idx)
+        P_base = strat.download_base(flatP, sstate)
+        ctx = meta.plan_context(fed.n_clients)
+        pseudo_grad = strat.aggregate(deltas * weights[:, None], ctx)
+
+        if fed.server_opt == "adam":
+            flatP2, opt = adam_update(flatP, pseudo_grad, server_state["opt"],
+                                      fed.server_lr, fed.adam_b1, fed.adam_b2,
+                                      fed.adam_eps)
+        else:   # FedAvg/FedSGD rule (paper Appendix A)
+            flatP2 = flatP - fed.server_lr * pseudo_grad
+            opt = server_state["opt"]
+
+        sstate2, flatP2 = strat.post_round(sstate, flatP2, P_base=P_base,
+                                           m_down=m_down, round_idx=round_idx)
+        return flatP2, {"opt": opt, "round": round_idx + 1}, sstate2
     return fn

@@ -1,6 +1,8 @@
 from repro.federated.api import Experiment, ModelOptions, TrainOptions
-from repro.federated.engine import (Callback, CheckpointCallback, Engine,
-                                    EvalCallback, LedgerCallback,
+from repro.federated.async_clock import (ClientSystemProfile, VirtualClock,
+                                         staleness_weight)
+from repro.federated.engine import (AsyncEngine, Callback, CheckpointCallback,
+                                    Engine, EvalCallback, LedgerCallback,
                                     LoggingCallback, RoundTask, RunState,
                                     ShardedEngine, SimEngine, StopRun,
                                     register_engine, registered_engines,
@@ -10,7 +12,9 @@ from repro.federated.runtime import (run_experiment, ExperimentResult,
 
 __all__ = ["Experiment", "ModelOptions", "TrainOptions", "run_experiment",
            "ExperimentResult", "model_for_task", "pretrain", "evaluate",
-           "Engine", "SimEngine", "ShardedEngine", "RoundTask", "RunState",
+           "Engine", "SimEngine", "ShardedEngine", "AsyncEngine",
+           "ClientSystemProfile", "VirtualClock", "staleness_weight",
+           "RoundTask", "RunState",
            "Callback", "LedgerCallback", "EvalCallback", "LoggingCallback",
            "CheckpointCallback", "StopRun", "register_engine",
            "registered_engines", "resolve_engine"]

@@ -306,6 +306,8 @@ class Experiment:
         task = self.task
         arrays = {"P": state.flatP, "server": state.server,
                   "strategy": state.sstate}
+        if state.aux is not None:   # engine-owned state (async event queue)
+            arrays["aux"] = state.aux
         frozen = {        # run-constant payload, written once per directory
             "params": params,
             "task": {"parts": {str(i): p for i, p in enumerate(task.parts)},
@@ -328,6 +330,7 @@ class Experiment:
                           "n_classes": task.n_classes},
             "checkpoint": {"dir": directory_, "every": every},
             "engine": {"name": self.engine.name,
+                       "config": self.engine.config(),
                        "rounds_per_call":
                            int(getattr(self.engine, "rounds_per_call", 1))},
         }
@@ -347,7 +350,8 @@ class Experiment:
         state = eng.RunState(plan, jnp.asarray(arrays["P"]), arrays["server"],
                              sstate, round=int(mj["round"]),
                              rounds=self.train.rounds,
-                             history=list(mj["history"]))
+                             history=list(mj["history"]),
+                             aux=arrays.get("aux"))
         ledger = comm_mod.CommLedger(**mj["ledger"])
         return state, ledger, float(mj.get("acc", 0.0))
 
@@ -359,10 +363,12 @@ class Experiment:
         records reproduce the uninterrupted run bit-for-bit.  Extend the
         run by chaining `.with_training(rounds=...)` before `.run()`.
 
-        The saved engine backend (name + rounds_per_call) is restored so
-        the remaining rounds take the same numerical path; a ShardedEngine
-        comes back on its default mesh — re-apply `.with_engine(...)` for
-        a custom one."""
+        The saved engine backend (name + `Engine.config()` kwargs) is
+        restored so the remaining rounds take the same numerical path; an
+        AsyncEngine also restores its event queue (in-flight jobs, server
+        buffer, virtual time) from the snapshot's `aux` payload.  A
+        ShardedEngine comes back on its default mesh — re-apply
+        `.with_engine(...)` for a custom one."""
         from repro.federated import runtime as rt
         arrays, mj = ckpt_io.load_experiment_checkpoint(directory)
         if task is None:
@@ -387,8 +393,10 @@ class Experiment:
         exp.with_params(arrays["params"], cfg)
         exp.with_checkpoint(mj["checkpoint"]["dir"], mj["checkpoint"]["every"])
         ej = mj.get("engine", {"name": "sim"})
-        ekw = ({"rounds_per_call": ej["rounds_per_call"]}
-               if ej.get("rounds_per_call", 1) > 1 else {})
+        ekw = ej.get("config")
+        if ekw is None:     # pre-config checkpoints only stored the chunk
+            ekw = ({"rounds_per_call": ej["rounds_per_call"]}
+                   if ej.get("rounds_per_call", 1) > 1 else {})
         exp.with_engine(ej["name"], **ekw)
         exp._restore = (arrays, mj)
         return exp

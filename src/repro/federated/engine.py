@@ -8,7 +8,7 @@ step builders in `launch/steps.py`.  This module unifies them behind an
     compile(plan)  -> step       # one device call = one (or k) FL rounds
     run_rounds(state, data, callbacks) -> state'
 
-Two registered backends:
+Three registered backends:
 
   SimEngine      — the current jit+vmap single-device path, extracted out
                    of `Experiment.run()` and bit-identical to it.
@@ -19,6 +19,15 @@ Two registered backends:
                    `rounds_per_call` runs k rounds per device call through
                    `fedround.make_scanned_round_fn`, amortizing host
                    dispatch.
+  AsyncEngine    — an event-driven virtual-clock simulator (paper Fig. 3
+                   bandwidth scenarios): clients with heterogeneous
+                   compute speed and up/down bandwidth
+                   (`async_clock.ClientSystemProfile`) train against
+                   stale server snapshots, and the server applies
+                   FedBuff-style buffered, staleness-discounted
+                   aggregation through the `Strategy.aggregate` hook.
+                   With full concurrency, a full buffer, and a uniform
+                   profile it reduces bit-exactly to SimEngine.
 
 The loop body is a `Callback` hook pipeline (`on_round_end` / `on_eval` /
 `on_checkpoint`): `LedgerCallback` (communication accounting, incl. the
@@ -38,19 +47,55 @@ from typing import Any, Callable, ClassVar, Dict, List, Optional, Sequence, Type
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import comm as comm_mod
 from repro.core import fedround
 from repro.core import strategies as st
+from repro.federated import async_clock as ac
 from repro.models.config import FederatedConfig
 
 DataProvider = Callable[[int], Any]
 # data(round_idx) -> client_batches pytree, leaves (n_clients, steps, bs, ...)
 
 
+def _mean_f32(values) -> float:
+    """Sequential float32 mean — the canonical, engine-independent
+    reduction for recorded metrics.  XLA picks a fused reduction's
+    association per program, so the same per-client values can average to
+    scalars an ulp apart under different backends; a fixed host-side
+    order cannot."""
+    vals = np.asarray(values, np.float32)
+    acc = np.float32(0.0)
+    for v in vals:
+        acc = np.float32(acc + v)
+    return float(np.float32(acc / np.float32(max(vals.size, 1))))
+
+
+def _sum_f32(values) -> float:
+    """Sequential float32 sum (see `_mean_f32`)."""
+    acc = np.float32(0.0)
+    for v in np.asarray(values, np.float32):
+        acc = np.float32(acc + v)
+    return float(acc)
+
+
 @dataclasses.dataclass
 class RoundTask:
-    """What an engine compiles: the static facets of one experiment's
-    round function (the `plan` of `Engine.compile(plan)`)."""
+    """The static facets of one experiment — what an engine compiles (the
+    `plan` argument of `Engine.compile(plan)`).
+
+    loss_of  — `loss_of(trainable_tree, microbatch) -> scalar`, closing
+               over the frozen backbone params (see the ShardedEngine
+               limitation note about carrying params explicitly).
+    meta     — `fedround.FlatMeta` for the trainable tree: treedef, leaf
+               shapes, the flat length `p_len`, and the LoRA rank/is-B
+               index maps strategies use for structured masks.
+    fed      — federation geometry + client/server optimizer settings.
+    strategy — the *resolved* `Strategy` instance (not a spec/kind).
+    seed     — base rng seed; engines derive per-round keys as
+               `fold_in(key(seed + 2), round_idx)`.
+    """
     loss_of: fedround.LossFn
     meta: fedround.FlatMeta
     fed: FederatedConfig
@@ -60,8 +105,17 @@ class RoundTask:
 
 @dataclasses.dataclass
 class RunState:
-    """Everything that changes between rounds.  `round` is the next round
-    to execute; a checkpoint of a RunState resumes exactly there."""
+    """Everything that changes between rounds.
+
+    `round` is the next round to execute (== len of a gap-free `history`);
+    a checkpoint of a RunState resumes exactly there.  `flatP` is the flat
+    trainable vector, `server` the server optimizer state dict
+    (`fedround.init_server`), `sstate` the strategy's persistent pytree.
+    `aux` is engine-owned auxiliary state serialized alongside checkpoints
+    — `None` for the synchronous engines; the AsyncEngine keeps its
+    virtual-clock snapshot (event queue, buffer, in-flight deltas) here so
+    resume is bit-exact mid-flight.
+    """
     plan: RoundTask
     flatP: Any
     server: Any
@@ -69,6 +123,7 @@ class RunState:
     round: int = 0
     rounds: int = 0
     history: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    aux: Optional[Dict[str, Any]] = None
 
     @classmethod
     def fresh(cls, plan: RoundTask, flatP, *, rounds: int) -> "RunState":
@@ -101,9 +156,23 @@ class RoundEvent:
 
 
 class Callback:
-    """Round-loop hook protocol.  `wants_state(r)` marks rounds where the
-    callback needs host access to the post-round state — scan-chunked
-    engines end their chunks there so flatP is materialized."""
+    """Round-loop hook protocol; all hooks default to no-ops.
+
+    `on_round_end(ev)` runs after every round with the round's raw device
+    metrics and the mutable history `ev.record` being built; `on_eval(ev)`
+    runs afterwards on rounds where an EvalCallback evaluated
+    (`ev.evaluated`); `on_checkpoint(ev)` runs last on rounds a
+    CheckpointCallback marked due.  Any hook may raise `StopRun` to end
+    the run cleanly after this round's bookkeeping.
+
+    `wants_state(round_idx, rounds)` marks rounds where the callback needs
+    host access to the post-round state — scan-chunked engines end their
+    chunks there so `state.flatP` is materialized.  Under the AsyncEngine
+    a "round" is one buffered aggregation event and `ev.record` also
+    carries the virtual-time keys (`sim_time`, `staleness`, `applied`,
+    `dropped`), so callbacks can key behavior on simulated time as well
+    as round index.
+    """
 
     def wants_state(self, round_idx: int, rounds: int) -> bool:
         return False
@@ -120,18 +189,26 @@ class Callback:
 
 class LedgerCallback(Callback):
     """Per-round communication accounting with full per-message nnz detail
-    (the index-vs-bitmap coded-bytes minimum is taken per client message)."""
+    (the index-vs-bitmap coded-bytes minimum is taken per client message).
+
+    A synchronous round bills one message per cohort client; engines whose
+    rounds carry a different message count (the AsyncEngine's buffered
+    aggregation events) set `metrics["n_messages"]` explicitly.  The
+    average/total entry counts fed to `record_round` are derived from the
+    per-message lists with the canonical host reductions, so ledger totals
+    agree bit-for-bit across engine backends."""
 
     def __init__(self, ledger):
         self.ledger = ledger
 
     def on_round_end(self, ev: RoundEvent) -> None:
         m, led = ev.metrics, self.ledger
+        n_messages = int(m.get("n_messages", ev.state.plan.fed.n_clients))
+        down_pm = [float(v) for v in m["down_nnz_clients"]]
+        up_pm = [float(v) for v in m["up_nnz_clients"]]
         led.record_round(
-            ev.state.plan.fed.n_clients,
-            float(m["down_nnz"]), float(m["up_nnz"]),
-            down_per_message=[float(v) for v in m["down_nnz_clients"]],
-            up_per_message=[float(v) for v in m["up_nnz_clients"]])
+            n_messages, _mean_f32(down_pm), _sum_f32(up_pm),
+            down_per_message=down_pm, up_per_message=up_pm)
         ev.record.update(
             down_bytes=led.down_bytes, up_bytes=led.up_bytes,
             total_bytes=led.total_bytes, coded_bytes=led.total_coded_bytes,
@@ -173,8 +250,9 @@ class LoggingCallback(Callback):
     def _line(self, ev: RoundEvent) -> str:
         rec = ev.record
         acc = f" acc={rec['acc']:.4f}" if "acc" in rec else ""
+        t = f" t={rec['sim_time']:.1f}s" if "sim_time" in rec else ""
         return (f"  round {ev.round + 1:4d} loss={rec['loss']:.4f}{acc} "
-                f"comm={rec.get('total_bytes', 0) / 1e6:.2f}MB")
+                f"comm={rec.get('total_bytes', 0) / 1e6:.2f}MB{t}")
 
     def on_round_end(self, ev: RoundEvent) -> None:
         if (self.verbose and not ev.evaluated and self.every > 0
@@ -227,6 +305,13 @@ class Engine:
 
     name: ClassVar[str] = "base"
     rounds_per_call: int = 1
+
+    def config(self) -> Dict[str, Any]:
+        """JSON-serializable constructor kwargs for checkpoint metadata:
+        `resolve_engine(self.name, **self.config())` must rebuild an
+        equivalent backend on resume (non-serializable facets like a
+        device mesh fall back to their defaults)."""
+        return {}
 
     def compile(self, plan: RoundTask):
         """-> step(flatP, server, sstate, batch, key) ->
@@ -285,9 +370,15 @@ class Engine:
         return max_n
 
     def _finish_round(self, state: RunState, round_idx: int, metrics,
-                      callbacks: Sequence[Callback]) -> None:
-        record: Dict[str, Any] = {"round": round_idx,
-                                  "loss": float(metrics["loss"])}
+                      callbacks: Sequence[Callback],
+                      extra: Optional[Dict[str, Any]] = None) -> None:
+        # the recorded loss is the canonical host mean of the per-client
+        # losses, identical across engine backends (see `_mean_f32`)
+        loss = (_mean_f32(metrics["loss_clients"])
+                if "loss_clients" in metrics else float(metrics["loss"]))
+        record: Dict[str, Any] = {"round": round_idx, "loss": loss}
+        if extra:
+            record.update(extra)
         ev = RoundEvent(round=round_idx, state=state, metrics=metrics,
                         record=record)
         # A StopRun from any hook still finishes this round's bookkeeping
@@ -333,7 +424,13 @@ EngineLike = Union[Engine, str, Type[Engine]]
 
 
 def resolve_engine(obj: EngineLike, **kwargs) -> Engine:
-    """Engine instance / registered name / Engine class -> instance."""
+    """Engine instance / registered name / Engine class -> instance.
+
+    A name or class is constructed with `**kwargs` (e.g.
+    `resolve_engine("sharded", rounds_per_call=4)` or
+    `resolve_engine("async", buffer_size=4)`); an already-built instance
+    is passed through unchanged and rejects kwargs.  Unknown names raise
+    `KeyError` listing `registered_engines()`."""
     if isinstance(obj, Engine):
         assert not kwargs, "pass constructor kwargs with a name, not an instance"
         return obj
@@ -433,6 +530,12 @@ class ShardedEngine(Engine):
         self.donate = donate
         self._rules = rules
 
+    def config(self) -> Dict[str, Any]:
+        # mesh/rules are not serializable; a resumed engine comes back on
+        # its defaults (documented in Experiment.resume)
+        return ({"rounds_per_call": self.rounds_per_call}
+                if self.rounds_per_call > 1 else {})
+
     @property
     def mesh(self):
         if self._mesh is None:
@@ -459,3 +562,272 @@ class ShardedEngine(Engine):
         return _ShardedStep(self,
                             fedround.make_scanned_round_fn(self._round_fn(plan)),
                             batch_client_axis=1)
+
+
+@register_engine("async")
+class AsyncEngine(Engine):
+    """Event-driven async backend: virtual-clock client timing + FedBuff-
+    style buffered, staleness-weighted aggregation.
+
+    Clients draw compute speed and up/down bandwidth from a
+    `ClientSystemProfile`; a client job downloads the current server
+    snapshot, trains locally, and uploads its delta, completing at
+
+        t_start + coded_down_bytes / down_bw
+                + local_steps * step_time / speed
+                + coded_up_bytes / up_bw
+
+    on the virtual clock — both transfers charged over the *coded* wire
+    bytes (`comm.coded_message_bytes`, the same index/bitmap minimum the
+    `CommLedger` bills).  The server buffers arriving updates; when
+    `buffer_size` have arrived it aggregates them — each delta scaled by
+    the `staleness_weight` of (current version - start version) — through
+    the unmodified `Strategy.aggregate` hook, applies the server
+    optimizer, and advances one "round".  Updates staler than
+    `max_staleness` are dropped (their traffic is still billed).
+
+    One aggregation event == one round of the callback pipeline: history
+    records additionally carry `sim_time`, `staleness`, `applied`, and
+    `dropped`, so eval/logging/checkpoint cadences are keyed by virtual
+    time as well as round index.  Checkpoints snapshot the whole event
+    queue (in-flight deltas included) into `RunState.aux`; resume is
+    bit-exact mid-flight.
+
+    Sync-equivalence anchor: with `concurrency == n_clients`,
+    `buffer_size == n_clients`, and a uniform profile (the defaults),
+    every aggregation event is one full fresh cohort at staleness 0, and
+    the run reproduces `SimEngine` history — weights, losses, ledger —
+    bit for bit (tests/test_async_engine.py, all registered strategy
+    kinds).
+
+    Not supported: DP aggregation (`fed.dp_clip > 0`) — its noise
+    calibration assumes one uniform synchronous cohort.
+    """
+
+    def __init__(self, *, concurrency: Optional[int] = None,
+                 buffer_size: Optional[int] = None,
+                 staleness_alpha: float = 0.5,
+                 max_staleness: Optional[int] = None,
+                 allow_version_repeats: bool = False,
+                 profile=None):
+        if isinstance(profile, dict):   # checkpoint meta round-trip
+            profile = ac.ClientSystemProfile(
+                **{k: tuple(v) if isinstance(v, list) else v
+                   for k, v in profile.items()})
+        self.concurrency = None if concurrency is None else int(concurrency)
+        self.buffer_size = None if buffer_size is None else int(buffer_size)
+        self.staleness_alpha = float(staleness_alpha)
+        self.max_staleness = (None if max_staleness is None
+                              else int(max_staleness))
+        assert self.max_staleness is None or self.max_staleness >= 0
+        # by default a client waits for the server version to advance
+        # before starting its next job (FedBuff samples cohorts without
+        # replacement); True lets fast clients train continuously, with
+        # repeat jobs folding fresh quantization keys
+        self.allow_version_repeats = bool(allow_version_repeats)
+        self.profile = profile if profile is not None \
+            else ac.ClientSystemProfile()
+
+    def config(self) -> Dict[str, Any]:
+        return {"concurrency": self.concurrency,
+                "buffer_size": self.buffer_size,
+                "staleness_alpha": self.staleness_alpha,
+                "max_staleness": self.max_staleness,
+                "allow_version_repeats": self.allow_version_repeats,
+                "profile": dataclasses.asdict(self.profile)}
+
+    def compile(self, plan: RoundTask):
+        raise NotImplementedError(
+            "AsyncEngine has no single-round step: it drives split client/"
+            "server phases (fedround.make_client_phase_fn / "
+            "make_server_phase_fn) from run_rounds")
+
+    # --- the event loop ----------------------------------------------------
+    def run_rounds(self, state: RunState, data: DataProvider,
+                   callbacks: Sequence[Callback] = ()) -> RunState:
+        plan = state.plan
+        fed, meta = plan.fed, plan.meta
+        if fed.dp_clip > 0.0:
+            raise NotImplementedError(
+                "AsyncEngine: DP aggregation (dp_clip > 0) is calibrated "
+                "for one uniform synchronous cohort; run it on SimEngine")
+        n = fed.n_clients
+        concurrency = (n if self.concurrency is None
+                       else min(self.concurrency, n))
+        buffer_size = n if self.buffer_size is None else self.buffer_size
+        assert concurrency >= 1 and buffer_size >= 1, (concurrency,
+                                                       buffer_size)
+        # a weighted Strategy.aggregate (hetlora_weighted's rank coverage)
+        # assumes one full fresh cohort; a partial buffer would silently
+        # mis-scale the pseudo-gradient — refuse, like the DP guard in the
+        # synchronous round
+        if not plan.strategy.uniform_aggregation and (
+                buffer_size < n or self.max_staleness is not None
+                or self.allow_version_repeats):
+            raise NotImplementedError(
+                f"{plan.strategy.kind}: non-uniform Strategy.aggregate "
+                "assumes a full fresh cohort; AsyncEngine supports it only "
+                "with buffer_size == n_clients, max_staleness=None, and "
+                "allow_version_repeats=False")
+        prof = self.profile
+        spec = plan.strategy.spec
+        down_vb = (spec.quant_bits_down or 32) / 8.0
+        up_vb = (spec.quant_bits_up or 32) / 8.0
+        base_key = jax.random.key(plan.seed + 2)
+        server_fn = jax.jit(
+            fedround.make_server_phase_fn(meta, fed, plan.strategy))
+        client_fns: Dict[Any, Any] = {}
+        clock = (ac.VirtualClock.from_arrays(state.aux, n, meta.p_len)
+                 if state.aux is not None
+                 else ac.VirtualClock(n, meta.p_len))
+        # job index -> cohort batch; data(j) is deterministic, so entries a
+        # straggler still needs can be evicted and recomputed — the cap
+        # matters because min(job_counts) lags arbitrarily far behind fast
+        # clients under heterogeneous profiles
+        data_cache: Dict[int, Any] = {}
+        data_cache_cap = max(2 * n, 16)
+
+        def fetch(j: int):
+            if j not in data_cache:
+                if len(data_cache) >= data_cache_cap:
+                    del data_cache[next(iter(data_cache))]   # oldest insert
+                data_cache[j] = data(j)
+            return data_cache[j]
+
+        def client_fn(slots, repeats):
+            if not (spec.quant_bits_up or spec.quant_bits_down):
+                # repeats only perturb quantization keys; without them,
+                # normalize the cache key so repeat jobs
+                # (allow_version_repeats) never force a recompile
+                repeats = (0,) * len(slots)
+            key = (slots, repeats)
+            if key not in client_fns:
+                client_fns[key] = jax.jit(fedround.make_client_phase_fn(
+                    plan.loss_of, meta, fed, plan.strategy, slots, repeats))
+            return client_fns[key]
+
+        def launch(slots):
+            version = state.round
+            repeats = tuple(clock.version_repeat(c, version) for c in slots)
+            rows = [jax.tree.map(lambda x, c=c: x[c],
+                                 fetch(int(clock.job_counts[c])))
+                    for c in slots]
+            batch = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+            rng = jax.random.fold_in(base_key, version)
+            deltas, up_nnzs, losses, down_nnzs = client_fn(slots, repeats)(
+                state.flatP, state.sstate, jnp.asarray(version, jnp.int32),
+                batch, rng)
+            for i, c in enumerate(slots):
+                dn, un = float(down_nnzs[i]), float(up_nnzs[i])
+                dur = (prof.down_time(c, comm_mod.coded_message_bytes(
+                           int(dn), meta.p_len, 1, down_vb))
+                       + prof.compute_time(c, fed.local_steps)
+                       + prof.up_time(c, comm_mod.coded_message_bytes(
+                           int(un), meta.p_len, 1, up_vb)))
+                clock.submit(ac.Job(
+                    slot=c, version=version, seq=clock.next_seq(),
+                    t_start=clock.now, t_finish=clock.now + dur,
+                    delta=deltas[i], loss=losses[i],
+                    down_nnz=dn, up_nnz=un))
+                clock.job_counts[c] += 1
+
+        def start_jobs():
+            version = state.round
+            starters, remaining = [], []
+            budget = concurrency - len(clock.inflight)
+            for c in clock.idle:
+                startable = (self.allow_version_repeats
+                             or clock.last_version[c] < version)
+                if budget > 0 and startable:
+                    starters.append(c)
+                    budget -= 1
+                else:
+                    remaining.append(c)
+            clock.idle = remaining
+            if not starters:
+                return
+            slots = tuple(sorted(starters))
+            if slots == tuple(range(n)) or len(slots) == 1:
+                # a full fresh cohort runs as ONE vmapped device call — the
+                # sync-equivalence anchor needs the identical program shape
+                launch(slots)
+            else:
+                # partial cohorts launch per client: at most n+1 compiled
+                # programs total, instead of one per slot combination
+                for c in slots:
+                    launch((c,))
+            # every future job index is >= the slowest client's count, so
+            # these can never be requested again
+            low = int(clock.job_counts.min())
+            for stale in [j for j in data_cache if j < low]:
+                del data_cache[stale]
+
+        try:
+            while state.round < state.rounds:
+                if not clock.pending:
+                    start_jobs()
+                    if not clock.inflight:
+                        # every client already contributed to this version:
+                        # the buffer can never reach K — flush it partially
+                        # (FedBuff timeout semantics)
+                        assert clock.buffer, "async engine deadlocked"
+                        self._aggregate(state, clock, server_fn, callbacks)
+                        continue
+                    clock.pull_completions()
+                job = clock.pending.pop(0)
+                clock.idle.append(job.slot)
+                staleness = state.round - job.version
+                if (self.max_staleness is not None
+                        and staleness > self.max_staleness):
+                    clock.drop(job)
+                    continue
+                clock.buffer.append(job)
+                if len(clock.buffer) >= buffer_size:
+                    self._aggregate(state, clock, server_fn, callbacks)
+        except StopRun:
+            pass
+        state.aux = clock.to_arrays()
+        return state
+
+    def _aggregate(self, state: RunState, clock: "ac.VirtualClock",
+                   server_fn, callbacks: Sequence[Callback]) -> None:
+        """Apply one buffered aggregation event and run the round-end
+        callback pipeline for it.  Updates aggregate in submission (seq)
+        order, so results don't depend on arrival jitter within a buffer —
+        and a full fresh cohort aggregates in slot order, exactly like the
+        synchronous round."""
+        jobs, clock.buffer = sorted(clock.buffer, key=lambda j: j.seq), []
+        staleness = [state.round - j.version for j in jobs]
+        weights = jnp.asarray(
+            [ac.staleness_weight(s, self.staleness_alpha) for s in staleness],
+            jnp.float32)
+        deltas = jnp.stack([j.delta for j in jobs])
+        state.flatP, state.server, state.sstate = server_fn(
+            state.flatP, state.server, state.sstate, deltas, weights)
+        drop_down, drop_up = clock.take_drops()
+        down_list = [j.down_nnz for j in jobs] + drop_down
+        up_list = [j.up_nnz for j in jobs] + drop_up
+        metrics: Dict[str, Any] = {
+            # one full fresh cohort in seq order carries the same values in
+            # the same order as the synchronous round's metrics, so the
+            # canonical host reductions reproduce its record bit-for-bit
+            "loss_clients": [j.loss for j in jobs],
+            "down_nnz": _mean_f32(down_list),
+            "up_nnz": _sum_f32(up_list),
+            "down_nnz_clients": down_list,
+            "up_nnz_clients": up_list,
+            "n_messages": len(down_list),
+        }
+        extra = {"sim_time": clock.now,
+                 "staleness": float(np.mean(staleness)),
+                 "applied": len(jobs), "dropped": len(drop_down)}
+        # snapshot the simulator *before* the hooks so a checkpoint taken
+        # by this event captures a resumable event queue — but only on
+        # rounds where a callback asked for host state (serializing every
+        # in-flight delta per event is pure waste otherwise; a StopRun at
+        # any round is still covered by the final snapshot in run_rounds)
+        if any(cb.wants_state(state.round, state.rounds)
+               for cb in callbacks):
+            state.aux = clock.to_arrays()
+        self._finish_round(state, state.round, metrics, callbacks,
+                           extra=extra)

@@ -1,0 +1,341 @@
+"""AsyncEngine correctness anchors:
+
+  * sync-equivalence: with full concurrency, a full buffer, and a uniform
+    `ClientSystemProfile` (the defaults), the async backend reproduces
+    SimEngine bit for bit — history records, final weights, strategy
+    state, eval accuracy, and ledger totals — for all 8 registered
+    strategy kinds;
+  * staleness-weight and system-profile unit math;
+  * event-queue checkpoint/resume: a genuinely-async run (small buffer,
+    tiered speeds, jobs mid-flight at the snapshot) resumes bit-exactly;
+  * staleness drop policy terminates and bills dropped traffic;
+  * fig3 regression: under a 1/16 upload-bandwidth ratio, FLASC with
+    d_up=1/64 reaches the target accuracy in less simulated time than
+    dense LoRA, and the fig3 row helper emits the -1.0 sentinel instead
+    of a silent 1.0 when a baseline is missing.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import strategies as st
+from repro.data import datasets as ds
+from repro.federated import async_clock as ac
+from repro.federated import engine as eng
+from repro.federated.api import Experiment
+
+N_CLIENTS = 4
+ROUNDS = 4
+EVAL_EVERY = 2
+
+KIND_KWARGS = {
+    "lora": {},
+    "flasc": {},
+    "flasc_ef": {},
+    "sparse_adapter": {},
+    "fedselect": {},
+    "adapter_lth": dict(lth_prune_every=2, lth_keep=0.9),
+    "ffa": {},
+    "hetlora": dict(hetlora_ranks=(1, 2, 3, 4)),
+}
+
+# keys only the async engine writes into history records
+ASYNC_KEYS = {"sim_time", "staleness", "applied", "dropped"}
+
+
+@pytest.fixture(scope="module")
+def task():
+    return ds.make_synth_image(n_examples=128, n_clients=8, n_patches=4,
+                               dim=16, seed=0, n_eval=128)
+
+
+def _experiment(task, kind="flasc", rounds=ROUNDS, **kw):
+    defaults = dict(density_down=0.5, density_up=0.5)
+    defaults.update(kw)
+    spec = st.StrategySpec(kind=kind, **defaults)
+    return (Experiment(task, strategy=spec)
+            .with_federation(n_clients=N_CLIENTS, local_batch=4)
+            .with_model(d_model=16, num_layers=1, num_heads=2, d_ff=32)
+            .with_lora(rank=4)
+            .with_training(rounds=rounds, eval_every=EVAL_EVERY,
+                           pretrain_steps=2))
+
+
+class _CaptureState(eng.Callback):
+    """Grabs the post-round state so tests can compare final weights."""
+
+    def on_round_end(self, ev):
+        import jax
+        self.flatP = np.asarray(ev.state.flatP)
+        self.sstate_leaves = [np.asarray(x)
+                              for x in jax.tree.leaves(ev.state.sstate)]
+
+
+LEDGER_ATTRS = ("down_values", "up_values", "down_bytes", "up_bytes",
+                "total_bytes", "down_coded_bytes", "up_coded_bytes",
+                "total_coded_bytes", "rounds")
+
+
+def _strip_async(record):
+    return {k: v for k, v in record.items() if k not in ASYNC_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# the sync-equivalence anchor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", sorted(KIND_KWARGS))
+def test_async_defaults_reduce_to_sim_engine_bit_for_bit(task, kind):
+    cap_sim, cap_async = _CaptureState(), _CaptureState()
+    res_sim = (_experiment(task, kind, **KIND_KWARGS[kind])
+               .with_callbacks(cap_sim).run())
+    res_async = (_experiment(task, kind, **KIND_KWARGS[kind])
+                 .with_engine("async").with_callbacks(cap_async).run())
+
+    assert len(res_async.history) == len(res_sim.history)
+    for rec_a, rec_s in zip(res_async.history, res_sim.history):
+        assert _strip_async(rec_a) == rec_s, rec_s["round"]
+        assert rec_a["staleness"] == 0.0    # full fresh cohorts only
+        assert rec_a["applied"] == N_CLIENTS
+    assert res_async.final_acc == res_sim.final_acc
+    for attr in LEDGER_ATTRS:
+        assert getattr(res_async.ledger, attr) == \
+            getattr(res_sim.ledger, attr), attr
+    np.testing.assert_array_equal(cap_async.flatP, cap_sim.flatP)
+    assert len(cap_async.sstate_leaves) == len(cap_sim.sstate_leaves)
+    for a, b in zip(cap_async.sstate_leaves, cap_sim.sstate_leaves):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_async_equivalence_holds_for_odd_cohort(task):
+    """Non-power-of-two cohorts exercise the canonical host reductions
+    (XLA's fused means are association-dependent there)."""
+    res_sim = _experiment(task, "hetlora",
+                          hetlora_ranks=(1, 2, 4)).with_federation(
+                              n_clients=3, local_batch=4).run()
+    res_async = (_experiment(task, "hetlora", hetlora_ranks=(1, 2, 4))
+                 .with_federation(n_clients=3, local_batch=4)
+                 .with_engine("async").run())
+    for rec_a, rec_s in zip(res_async.history, res_sim.history):
+        assert _strip_async(rec_a) == rec_s
+
+
+# ---------------------------------------------------------------------------
+# staleness / profile units
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+def test_staleness_weight_math():
+    for alpha in (0.0, 0.5, 1.0, 2.0):
+        assert ac.staleness_weight(0, alpha) == 1.0     # exactly
+    ws = [ac.staleness_weight(s, 0.5) for s in range(5)]
+    assert all(a > b for a, b in zip(ws, ws[1:]))       # monotone decay
+    assert ac.staleness_weight(3, 0.0) == 1.0           # alpha=0 disables
+    assert ac.staleness_weight(3, 1.0) == pytest.approx(0.25)
+    with pytest.raises(AssertionError):
+        ac.staleness_weight(-1, 0.5)
+
+
+@pytest.mark.fast
+def test_client_system_profile():
+    uniform = ac.ClientSystemProfile()
+    assert uniform.is_uniform
+    assert uniform.compute_time(3, 2) == 2.0
+    assert uniform.down_time(0, 2e6) == 2.0
+
+    tiered = ac.ClientSystemProfile.tiered(4, 4)
+    assert not tiered.is_uniform
+    assert tiered.speed_factors == (0.25, 0.5, 0.75, 1.0)
+    # slowest tier takes 4x the base step time; factors cycle past n
+    assert tiered.compute_time(0, 1) == 4.0
+    assert tiered.compute_time(4, 1) == 4.0
+    assert tiered.up_time(3, 1e6) == 1.0
+
+    logn = ac.ClientSystemProfile.lognormal(8, sigma=0.5, seed=1)
+    assert len(logn.speed_factors) == 8
+    assert all(f > 0 for f in logn.speed_factors)
+    # deterministic in the seed
+    assert logn == ac.ClientSystemProfile.lognormal(8, sigma=0.5, seed=1)
+
+    with pytest.raises(AssertionError):
+        ac.ClientSystemProfile(up_bw=0.0)
+
+
+@pytest.mark.fast
+def test_async_engine_registry_and_config_roundtrip():
+    assert "async" in eng.registered_engines()
+    e = eng.resolve_engine("async", buffer_size=2, staleness_alpha=1.0,
+                           max_staleness=3,
+                           profile=ac.ClientSystemProfile.tiered(4, 2))
+    assert isinstance(e, eng.AsyncEngine)
+    rebuilt = eng.resolve_engine("async", **e.config())
+    assert rebuilt.buffer_size == 2
+    assert rebuilt.max_staleness == 3
+    assert rebuilt.profile == e.profile     # dict round-trip -> tuples
+
+
+# ---------------------------------------------------------------------------
+# genuinely-async behavior
+# ---------------------------------------------------------------------------
+
+def _tiered_engine(**kw):
+    kw.setdefault("buffer_size", 2)
+    return eng.AsyncEngine(profile=ac.ClientSystemProfile.tiered(N_CLIENTS, 4),
+                           **kw)
+
+
+def test_async_staleness_and_virtual_time(task):
+    res = _experiment(task, rounds=8).with_engine(_tiered_engine()).run()
+    assert len(res.history) == 8
+    times = [h["sim_time"] for h in res.history]
+    assert all(a <= b for a, b in zip(times, times[1:]))
+    assert times[0] > 0.0
+    assert all(h["applied"] == 2 for h in res.history)
+    assert any(h["staleness"] > 0 for h in res.history)     # really async
+
+
+def test_async_max_staleness_drops_and_terminates(task):
+    res = (_experiment(task, rounds=5)
+           .with_engine(_tiered_engine(buffer_size=1, max_staleness=0))
+           .run())
+    assert len(res.history) == 5
+    assert sum(h["dropped"] for h in res.history) > 0
+    # dropped messages still billed: more upload messages than applied
+    applied = sum(h["applied"] for h in res.history)
+    assert res.ledger.up_values > 0
+    assert res.ledger.rounds == 5
+    assert applied == 5     # buffer of 1 applies one update per event
+
+
+class _StopAfterCheckpoint(eng.Callback):
+    """Simulates a crash right after a snapshot lands on disk."""
+
+    def on_checkpoint(self, ev):
+        raise eng.StopRun
+
+
+def test_async_checkpoint_resumes_event_queue_bit_exactly(task, tmp_path):
+    full = _experiment(task, rounds=8).with_engine(_tiered_engine()).run()
+
+    ckpt = str(tmp_path / "ckpt")
+    interrupted = (_experiment(task, rounds=8)
+                   .with_engine(_tiered_engine())
+                   .with_checkpoint(ckpt, every=3)
+                   .with_callbacks(_StopAfterCheckpoint())
+                   .run())
+    assert len(interrupted.history) == 3
+    assert os.path.exists(os.path.join(ckpt, "state-r3.npz"))
+
+    resumed_exp = Experiment.resume(ckpt)
+    assert isinstance(resumed_exp.engine, eng.AsyncEngine)
+    assert resumed_exp.engine.buffer_size == 2
+    assert resumed_exp.engine.profile == \
+        ac.ClientSystemProfile.tiered(N_CLIENTS, 4)
+    resumed = resumed_exp.run()
+    # bit-for-bit: floats, virtual timestamps, staleness — everything
+    assert resumed.history == full.history
+    assert resumed.final_acc == full.final_acc
+    for attr in LEDGER_ATTRS:
+        assert getattr(resumed.ledger, attr) == \
+            getattr(full.ledger, attr), attr
+
+
+@pytest.mark.fast
+def test_virtual_clock_array_roundtrip():
+    clock = ac.VirtualClock(n_clients=3, p_len=5)
+    clock.now, clock.seq = 2.5, 4
+    clock.job_counts[:] = (2, 1, 1)
+    clock.idle = [2]
+    job = ac.Job(slot=0, version=1, seq=3, t_start=2.0, t_finish=3.5,
+                 delta=np.arange(5, dtype=np.float32), loss=np.float32(0.25),
+                 down_nnz=5.0, up_nnz=2.0)
+    clock.submit(job)
+    clock.buffer.append(ac.Job(slot=1, version=0, seq=2, t_start=0.0,
+                               t_finish=2.5,
+                               delta=np.ones(5, np.float32),
+                               loss=np.float32(1.0), down_nnz=5.0,
+                               up_nnz=3.0))
+    clock.drop_down, clock.drop_up = [5.0], [1.0]
+
+    restored = ac.VirtualClock.from_arrays(clock.to_arrays(), 3, 5)
+    assert restored.now == 2.5 and restored.seq == 4
+    assert restored.idle == [2]
+    assert [e[2].seq for e in restored.inflight] == [3]
+    np.testing.assert_array_equal(restored.inflight[0][2].delta, job.delta)
+    assert restored.buffer[0].up_nnz == 3.0
+    assert restored.drop_down == [5.0] and restored.drop_up == [1.0]
+    np.testing.assert_array_equal(restored.job_counts, clock.job_counts)
+
+
+@pytest.mark.fast
+def test_async_refuses_weighted_aggregation_with_partial_buffers(task):
+    """hetlora_weighted's coverage math assumes one full fresh cohort; a
+    partial buffer must be rejected, not silently mis-scaled — but the
+    full-buffer default configuration still runs (and is covered by the
+    bit-equivalence test above)."""
+    exp = (_experiment(task, "hetlora", hetlora_ranks=(1, 2, 3, 4),
+                       hetlora_weighted=True)
+           .with_engine("async", buffer_size=2))
+    with pytest.raises(NotImplementedError, match="full fresh cohort"):
+        exp.run()
+
+
+@pytest.mark.fast
+def test_async_rejects_zero_buffer_and_concurrency(task):
+    """An explicit 0 is an error, not a silent fall-back to the
+    full-cohort default (None)."""
+    with pytest.raises(AssertionError):
+        _experiment(task).with_engine("async", buffer_size=0).run()
+    with pytest.raises(AssertionError):
+        _experiment(task).with_engine("async", concurrency=0).run()
+
+
+@pytest.mark.fast
+def test_async_refuses_dp(task):
+    exp = (_experiment(task)
+           .with_federation(n_clients=N_CLIENTS, local_batch=4, dp_clip=1.0,
+                            dp_noise=0.1)
+           .with_engine("async"))
+    with pytest.raises(NotImplementedError, match="dp_clip"):
+        exp.run()
+
+
+# ---------------------------------------------------------------------------
+# fig3 regression + row-helper sentinel
+# ---------------------------------------------------------------------------
+
+def test_fig3_flasc_sparse_upload_beats_dense_lora_sim_time(task):
+    """The paper's Fig. 3 claim on the virtual clock: under upload 16x
+    slower than download, FLASC d_up=1/64 reaches the target accuracy in
+    far less simulated time than dense LoRA."""
+    from benchmarks.fig3_async_bandwidth import sim_time_to_target
+    profile = ac.ClientSystemProfile(step_time=0.0, down_bw=1e6,
+                                     up_bw=1e6 / 16)
+    res_lora = (_experiment(task, "lora", rounds=6)
+                .with_engine(eng.AsyncEngine(profile=profile)).run())
+    res_flasc = (_experiment(task, "flasc", rounds=6, density_down=0.25,
+                             density_up=1 / 64)
+                 .with_engine(eng.AsyncEngine(profile=profile)).run())
+    target = 0.9 * min(res_lora.best_acc(), res_flasc.best_acc())
+    t_lora = sim_time_to_target(res_lora.history, target)
+    t_flasc = sim_time_to_target(res_flasc.history, target)
+    assert t_lora is not None and t_flasc is not None
+    assert t_flasc < t_lora
+
+
+@pytest.mark.fast
+def test_fig3_rel_row_sentinel():
+    """`base_t is None` (dense LoRA never reached target) must yield the
+    -1.0 sentinel, not a silent 1.0 — the bug the old inline code had."""
+    from benchmarks.fig3_async_bandwidth import rel_row, sim_time_to_target
+    assert rel_row("fig3", "s", "m", 5.0, None)["value"] == -1.0
+    assert rel_row("fig3", "s", "m", None, 3.0)["value"] == -1.0
+    assert rel_row("fig3", "s", "m", None, None)["value"] == -1.0
+    assert rel_row("fig3", "s", "m", 6.0, 3.0)["value"] == 2.0
+    assert rel_row("fig3", "s", "m", 3.0, 3.0)["value"] == 1.0
+    # the time readers skip non-eval records and unreached targets
+    hist = [{"round": 0, "loss": 1.0},
+            {"round": 1, "loss": 0.5, "acc": 0.4, "sim_time": 7.0}]
+    assert sim_time_to_target(hist, 0.3) == 7.0
+    assert sim_time_to_target(hist, 0.9) is None

@@ -58,7 +58,15 @@ def _experiment(task, kind="flasc", rounds=ROUNDS, **kw):
 
 def _legacy_run(exp):
     """The pre-engine `Experiment.run()` inline loop, frozen verbatim (the
-    SimEngine extraction must stay bit-identical to this)."""
+    SimEngine extraction must stay bit-identical to this).
+
+    One deliberate update rode along with the AsyncEngine PR: recorded
+    loss and ledger inputs are now derived from the per-client metrics
+    with the canonical host reductions (`engine._mean_f32`/`_sum_f32`)
+    instead of the fused device scalars, because XLA's per-program
+    reduction association made those scalars engine-dependent.  This loop
+    applies the same derivation so the bit-identity contract stays exact.
+    """
     from repro.federated import runtime as rt
     from repro.models import model as mdl
     task, fed, t = exp.task, exp.federation, exp.train
@@ -84,11 +92,12 @@ def _legacy_run(exp):
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
         key = jax.random.fold_in(jax.random.key(t.seed + 2), r)
         flatP, server, sstate, m = round_fn(flatP, server, sstate, batch, key)
+        down_pm = [float(v) for v in m["down_nnz_clients"]]
+        up_pm = [float(v) for v in m["up_nnz_clients"]]
         ledger.record_round(
-            fed.n_clients, float(m["down_nnz"]), float(m["up_nnz"]),
-            down_per_message=[float(v) for v in m["down_nnz_clients"]],
-            up_per_message=[float(v) for v in m["up_nnz_clients"]])
-        rec = {"round": r, "loss": float(m["loss"]),
+            fed.n_clients, eng._mean_f32(down_pm), eng._sum_f32(up_pm),
+            down_per_message=down_pm, up_per_message=up_pm)
+        rec = {"round": r, "loss": eng._mean_f32(m["loss_clients"]),
                "down_bytes": ledger.down_bytes, "up_bytes": ledger.up_bytes,
                "total_bytes": ledger.total_bytes,
                "coded_bytes": ledger.total_coded_bytes}
