@@ -1,36 +1,110 @@
-"""Kernel microbenches + sparsifier cost.
+"""Kernel microbenches + the Top-K selector sweep.
 
 On this CPU container the Pallas kernels execute in interpret mode, so the
 numbers are NOT TPU timings — they validate plumbing and give the relative
-cost of the exact-sort vs histogram Top-K selectors (pure-jnp paths, which
-ARE the CPU production path)."""
+cost of the selector implementations.  The `exact` (argsort) and
+`histogram` (bisection) selectors are pure jnp and ARE the CPU production
+paths; `pallas` runs the fused streaming kernels under the interpreter
+with one whole-vector block.
+
+Besides the usual CSV rows, the selector sweep writes `BENCH_topk.json`
+at the repo root: one row per (selector, size, batch) with wall-time per
+call, plus a host block flagging interpret-mode numbers.  Future PRs
+regress against this file — see docs/kernels.md.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, row
-from repro.core import sparsity as sp
+from benchmarks.common import QUICK, emit, row
+from repro.core import selectors as sel
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_topk.json")
+
+DENSITY = 0.25
+# (n, timed reps): compile excluded; fewer reps as the arrays get huge
+SIZES = [(1 << 20, 3), (1 << 22, 3), (1 << 24, 2), (1 << 26, 1)]
+QUICK_SIZES = [(1 << 20, 3), (1 << 22, 2)]
 
 
 def timeit(fn, *args, n=5):
-    fn(*args)  # compile
+    # synchronize the warmup: jax dispatch is async, so an unawaited
+    # compile+run would bleed into the timed region (worst at n=1)
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(n):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def _label(n: int) -> str:
+    return f"{n >> 20}M"
+
+
+def selector_sweep(rows):
+    """exact vs histogram vs pallas over realistic adapter sizes, plus one
+    batched-client-axis case with traced per-client counts (the
+    heterogeneous upload path).  Returns the BENCH_topk.json row dicts."""
+    jrows = []
+    sizes = QUICK_SIZES if QUICK else SIZES
+    for n, reps in sizes:
+        x = jax.random.normal(jax.random.key(0), (n,))
+        for name in ("exact", "histogram", "pallas"):
+            s = sel.resolve_selector(name)
+            fn = jax.jit(lambda v, s=s: s.sparsify(v, DENSITY))
+            us = timeit(fn, x, n=reps)
+            rows.append(row("kernels", f"topk_{name}_{_label(n)}",
+                            "us_per_call", us))
+            jrows.append({"selector": name, "n": n, "batch": 1,
+                          "density": DENSITY, "us_per_call": round(us, 1)})
+        del x
+
+    # batched client axis: 8 clients x 2M entries, traced keep-counts
+    b, nb = 8, 1 << 21
+    xb = jax.random.normal(jax.random.key(1), (b, nb))
+    ks = jnp.asarray([max(int(nb * DENSITY) >> i, 1) for i in range(b)],
+                     jnp.int32)
+    for name in ("exact", "histogram", "pallas"):
+        s = sel.resolve_selector(name)
+        fn = jax.jit(jax.vmap(lambda v, k, s=s: s.sparsify_by_count(v, k)))
+        us = timeit(fn, xb, ks, n=2)
+        rows.append(row("kernels", f"topk_{name}_8x{_label(nb)}_counts",
+                        "us_per_call", us))
+        jrows.append({"selector": name, "n": nb, "batch": b,
+                      "density": "per-client counts",
+                      "us_per_call": round(us, 1)})
+    return jrows
+
+
+def write_bench_json(jrows):
+    payload = {
+        "bench": "topk_selector_sweep",
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "note": ("pallas numbers are Pallas interpret-mode (CPU) unless "
+                 "backend == tpu; they baseline the selector dispatch, "
+                 "not TPU kernel speed"),
+        "quick": QUICK,
+        "density": DENSITY,
+        "metric": "us_per_call",
+        "rows": jrows,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {BENCH_JSON} ({len(jrows)} rows)", flush=True)
+
+
 def main():
     rows = []
-    x = jax.random.normal(jax.random.key(0), (1 << 22,))  # 4M entries
-
-    exact = jax.jit(lambda v: sp.topk_mask(v, 0.25, exact=True))
-    hist = jax.jit(lambda v: sp.topk_mask(v, 0.25, exact=False))
-    rows.append(row("kernels", "topk_exact_4M", "us_per_call", timeit(exact, x)))
-    rows.append(row("kernels", "topk_histogram_4M", "us_per_call", timeit(hist, x)))
+    jrows = selector_sweep(rows)
+    write_bench_json(jrows)
 
     from repro.kernels import ops
     q = jax.random.normal(jax.random.key(1), (1, 128, 2, 32))

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Fast CI signal: the sub-minute tier-1 subset (strategy-registry
-# equivalence, sparsity selectors, communication ledger, engine
+# Fast CI signal: the fast tier-1 subset (strategy-registry
+# equivalence, sparsity + Top-K selector layer incl. the interpret-mode
+# pallas parity/contract tests from tests/test_selectors.py and the
+# exact_topk deprecation check, communication ledger, engine
 # registry/callback/chunking units from tests/test_engine.py and
 # tests/test_async_engine.py) — everything tagged @pytest.mark.fast —
 # followed by the docs gate (scripts/check_docs.py: README/docs code

@@ -1,6 +1,8 @@
 from repro.core.sparsity import (topk_mask, topk_mask_by_count, sparsify,
                                  sparsify_by_count, threshold_exact,
                                  threshold_histogram)
+from repro.core.selectors import (Selector, SelectorLike, register_selector,
+                                  registered_selectors, resolve_selector)
 from repro.core.strategies import (Strategy, StrategySpec, RoundPlan,
                                    UploadRule, PlanContext, register_strategy,
                                    registered_kinds, resolve,
@@ -13,6 +15,8 @@ from repro.core.comm import CommLedger, coded_message_bytes
 
 __all__ = ["topk_mask", "topk_mask_by_count", "sparsify", "sparsify_by_count",
            "threshold_exact", "threshold_histogram",
+           "Selector", "SelectorLike", "register_selector",
+           "registered_selectors", "resolve_selector",
            "Strategy", "StrategySpec", "RoundPlan", "UploadRule",
            "PlanContext", "register_strategy", "registered_kinds", "resolve",
            "init_strategy_state",

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dp as dp_mod
+from repro.core import sparsity as sp
 from repro.core import strategies as st
 from repro.core import transport as tp
 from repro.models.config import FederatedConfig
@@ -109,9 +110,7 @@ def _share_or_stack(items):
 
 
 def _keep_count(p_len: int, density: float) -> int:
-    if density >= 1.0:
-        return p_len
-    return max(int(round(p_len * density)), 1)
+    return sp.density_count(p_len, density)
 
 
 def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
@@ -158,13 +157,14 @@ def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
         down = tp.download_pipeline(m_dn, s.quant_bits_down)(P_base, key=kdown)
         if up_mode == "fixed":
             rule = st.UploadRule.fixed(up_arg)
-            pipe = tp.upload_pipeline(rule, s.quant_bits_up, exact=s.exact_topk)
+            pipe = tp.upload_pipeline(rule, s.quant_bits_up,
+                                      selector=s.selector)
         elif up_counts is None:
             pipe = tp.upload_pipeline(plans[0].upload, s.quant_bits_up,
-                                      exact=s.exact_topk)
+                                      selector=s.selector)
         else:
             pipe = tp.upload_pipeline(plans[0].upload, s.quant_bits_up,
-                                      exact=s.exact_topk, count=up_arg)
+                                      selector=s.selector, count=up_arg)
         values, nnz, loss = _client_update(down.values, cb, m_tr, pipe,
                                            loss_of=loss_of, meta=meta, fed=fed,
                                            up_key=kup)

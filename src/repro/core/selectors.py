@@ -1,0 +1,280 @@
+"""Unified Top-K selector layer: one dispatch surface for FLASC's hot spot.
+
+Every download mask and every per-client upload runs magnitude Top-K over
+the flattened adapter vector (paper §3) — the per-round hot spot all of the
+10x communication savings flow through.  A `Selector` answers the four
+selection questions behind one registry:
+
+    mask(flat, density)          -> (..., n) bool     static density
+    mask_by_count(flat, k)       -> (..., n) bool     traced keep-count
+    sparsify(flat, density)      -> (values, nnz)
+    sparsify_by_count(flat, k)   -> (values, nnz)
+
+Registered implementations:
+
+* ``exact``     — argsort reference.  Selects exactly k entries by rank
+  with positional tie-breaking; the bit-exact semantics every
+  seed-equivalence anchor is frozen against.  O(n log n) sort per call.
+* ``histogram`` — fixed-depth bisection on |x| (`iters` count-compare
+  halvings, `sparsity.threshold_histogram_count`).  O(n · iters)
+  elementwise work, no sort; keeps >= k entries (ties / 2^-iters probe
+  resolution can keep a few extra).  Pure jnp — the CPU production path.
+* ``pallas``    — the fused TPU production path.  Each bisection iteration
+  is one `threshold_count_pallas` streaming pass over a VMEM-blocked
+  vector, and the final mask + nnz come from a single `topk_mask_pallas`
+  pass, so the vector is read once per iteration and once to materialize.
+  Padding to the kernel block is handled internally; traced per-client
+  keep-counts (the vmapped heterogeneous upload path) are supported; off
+  TPU the same kernels run under Pallas interpret mode automatically,
+  with one whole-vector block to amortize the interpreter's per-block
+  overhead.  Bit-identical to ``histogram`` by construction: both share
+  the canonical bisection loop, only the count pass differs.
+
+Strategy code never branches on the selector: `StrategySpec(selector=...)`
+threads the name through `core.transport.TopKSparsify` and the
+`core.fedround` client block, and the module-level helpers below
+(`topk_mask`, `sparsify_by_count`, ...) dispatch by name or instance.
+Register a custom selector with `@register_selector("name")`.
+
+See docs/kernels.md for the selector table, dispatch rules, and when the
+pallas path falls back to interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Callable, ClassVar, Dict, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsity as sp
+from repro.kernels.topk_mask import (BLOCK, threshold_count_pallas,
+                                     topk_mask_pallas)
+
+
+class Selector:
+    """Selection-policy protocol.  Implementations must be pure jax (safe
+    under jit / vmap / lax.cond / scan) and honor the `sparsity.clamp_count`
+    keep-count contract: k clipped to [0, n], k == 0 keeps nothing."""
+
+    name: ClassVar[str] = "base"
+
+    # --- required -----------------------------------------------------------
+    def mask(self, flat: jax.Array, density: float) -> jax.Array:
+        raise NotImplementedError
+
+    def mask_by_count(self, flat: jax.Array, k) -> jax.Array:
+        raise NotImplementedError
+
+    # --- derived (fused selectors override) ---------------------------------
+    def sparsify(self, flat: jax.Array, density: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+        m = self.mask(flat, density)
+        return flat * m, jnp.sum(m, axis=-1)
+
+    def sparsify_by_count(self, flat: jax.Array, k
+                          ) -> Tuple[jax.Array, jax.Array]:
+        m = self.mask_by_count(flat, k)
+        return flat * m, jnp.sum(m, axis=-1)
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+_REGISTRY: Dict[str, Type[Selector]] = {}
+_DEFAULTS: Dict[str, Selector] = {}       # lazily-built default instances
+
+
+def register_selector(name: str):
+    """Class decorator: `@register_selector("histogram")` makes the class
+    reachable from `StrategySpec(selector="histogram")` and every
+    `selector=` seam in transport/fedround."""
+    def deco(cls: Type[Selector]) -> Type[Selector]:
+        assert issubclass(cls, Selector), cls
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def registered_selectors() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+SelectorLike = Union[str, Selector]
+
+
+def resolve_selector(obj: SelectorLike) -> Selector:
+    """Selector name or instance -> Selector instance (default instances
+    are cached per name)."""
+    if isinstance(obj, Selector):
+        return obj
+    if isinstance(obj, str):
+        if obj not in _REGISTRY:
+            raise KeyError(f"no selector registered for {obj!r}; "
+                           f"known: {registered_selectors()}")
+        if obj not in _DEFAULTS:
+            _DEFAULTS[obj] = _REGISTRY[obj]()
+        return _DEFAULTS[obj]
+    raise TypeError(f"cannot resolve {obj!r} to a Selector")
+
+
+# ---------------------------------------------------------------------------
+# module-level dispatch (what transport / strategies actually call)
+# ---------------------------------------------------------------------------
+
+def topk_mask(flat, density: float, selector: SelectorLike = "exact"):
+    return resolve_selector(selector).mask(flat, density)
+
+
+def topk_mask_by_count(flat, k, selector: SelectorLike = "exact"):
+    return resolve_selector(selector).mask_by_count(flat, k)
+
+
+def sparsify(flat, density: float, selector: SelectorLike = "exact"):
+    return resolve_selector(selector).sparsify(flat, density)
+
+
+def sparsify_by_count(flat, k, selector: SelectorLike = "exact"):
+    return resolve_selector(selector).sparsify_by_count(flat, k)
+
+
+# ---------------------------------------------------------------------------
+# the three built-in selectors
+# ---------------------------------------------------------------------------
+
+@register_selector("exact")
+class ExactSelector(Selector):
+    """Argsort rank selection — the bit-exact reference semantics."""
+
+    def mask(self, flat, density):
+        return sp.topk_mask(flat, density, exact=True)
+
+    def mask_by_count(self, flat, k):
+        return sp.topk_mask_by_count(flat, k, exact=True)
+
+
+@register_selector("histogram")
+class HistogramSelector(Selector):
+    """Pure-jnp bisection threshold (`iters` count-compare halvings)."""
+
+    def __init__(self, iters: int = 24):
+        self.iters = iters
+
+    def mask(self, flat, density):
+        return sp.topk_mask(flat, density, exact=False, iters=self.iters)
+
+    def mask_by_count(self, flat, k):
+        return sp.topk_mask_by_count(flat, k, exact=False, iters=self.iters)
+
+    def __repr__(self):
+        return f"HistogramSelector(iters={self.iters})"
+
+
+@register_selector("pallas")
+class PallasSelector(Selector):
+    """Fused streaming bisection: `threshold_count_pallas` per iteration,
+    one `topk_mask_pallas` pass for the final mask + nnz.
+
+    * `block` — kernel tile.  The default (None) auto-tunes: the
+      VMEM-sized `kernels.topk_mask.BLOCK` on TPU; off TPU the whole
+      padded vector becomes a single interpret-mode block
+      (`_INTERPRET_BLOCK_CAP`-capped), because the interpreter pays a
+      fixed cost per *block*, so fine-grained tiling that is free on TPU
+      dominates wall-time on CPU.  An explicit `block` is always honored
+      (tests use small multi-block grids).
+    * `interpret` — force interpret mode; `None` (default) auto-detects:
+      native lowering on TPU backends, interpret everywhere else.
+    * Arbitrary lengths: inputs are zero-padded up to the block multiple
+      inside the selector.  Zero padding is invisible to the bisection
+      (a padded entry only passes `|0| >= mid` when mid == 0, which
+      happens only when the whole vector is zero — and then the
+      threshold is 0 on every path) and never survives the final
+      `|x| >= max(thr, 1e-38)` mask.
+    * Batched inputs (leading axes) vmap over the kernel; traced
+      per-client keep-counts ride the same path (this replaces the
+      argsort-inside-vmap in the heterogeneous upload block).
+    """
+
+    _INTERPRET_BLOCK_CAP = 1 << 26          # 256 MiB f32 single block
+
+    def __init__(self, block=None, iters: int = 24, interpret=None):
+        self.block = block
+        self.iters = iters
+        self.interpret = interpret
+
+    # --- dispatch plumbing --------------------------------------------------
+    def _interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return bool(self.interpret)
+
+    def _block_for(self, n: int, interpret: bool) -> int:
+        if self.block is not None:
+            return self.block
+        if not interpret:
+            return BLOCK
+        # one lane-aligned block for the whole vector: interpret mode costs
+        # O(1) per *block*, not per element, so maximize the block
+        return min(-(-n // 128) * 128, self._INTERPRET_BLOCK_CAP)
+
+    def _batched(self, fn: Callable, flat, k):
+        """Apply `fn(row, k_row)` over any leading batch axes."""
+        if flat.ndim == 1:
+            return fn(flat, k)
+        k = jnp.asarray(k)
+        in_axes = (0, 0 if k.ndim else None)
+        return jax.vmap(lambda row, kk: self._batched(fn, row, kk),
+                        in_axes=in_axes)(flat, k)
+
+    def _pad(self, x, block):
+        n = x.shape[-1]
+        return jnp.pad(x, (0, -n % block)) if n % block else x
+
+    # --- the fused kernel path ---------------------------------------------
+    def _threshold(self, a_pad, k, interpret, block):
+        def count(mid):
+            return threshold_count_pallas(a_pad, mid, block=block,
+                                          interpret=interpret)
+        return sp.threshold_histogram_count(a_pad, k, self.iters,
+                                            count_fn=count)
+
+    def _select(self, flat, k):
+        """(masked values, nnz) for one 1-D vector, traced or static k."""
+        n = flat.shape[-1]
+        interpret = self._interpret()
+        block = self._block_for(n, interpret)
+        x = self._pad(flat.astype(jnp.float32), block)
+        a = jnp.abs(x)
+        k = sp.clamp_count(k, n)
+        thr = self._threshold(a, k, interpret, block)
+        masked, cnt = topk_mask_pallas(x, jnp.maximum(thr, sp.TINY),
+                                       block=block, interpret=interpret)
+        keep = k > 0                        # clamp_count contract: k=0 -> {}
+        # selection ran in f32 (like every selector); hand values back in
+        # the caller's dtype so selectors stay drop-in interchangeable
+        # (surviving entries are unmodified inputs, so the cast is exact)
+        return masked[:n].astype(flat.dtype) * keep, cnt * keep
+
+    # --- Selector surface ---------------------------------------------------
+    def mask(self, flat, density):
+        if density >= 1.0:
+            return jnp.ones_like(flat, bool)
+        k = sp.density_count(flat.shape[-1], density)
+        return self.mask_by_count(flat, k)
+
+    def mask_by_count(self, flat, k):
+        values, _ = self._batched(self._select, flat, k)
+        return values != 0
+
+    def sparsify(self, flat, density):
+        if density >= 1.0:
+            return flat, jnp.sum(jnp.ones_like(flat, bool), axis=-1)
+        k = sp.density_count(flat.shape[-1], density)
+        return self.sparsify_by_count(flat, k)
+
+    def sparsify_by_count(self, flat, k):
+        return self._batched(self._select, flat, k)
+
+    def __repr__(self):
+        return (f"PallasSelector(block={self.block}, iters={self.iters}, "
+                f"interpret={self.interpret})")

@@ -1,32 +1,72 @@
 """Global Top-K magnitude sparsification (the heart of FLASC).
 
-Two threshold selectors:
+This module holds the two *reference* threshold implementations:
 
 * `threshold_exact` — sort-based (jnp.sort + index).  Exact up to ties; the
   reference used in tests and small-scale experiments.
 * `threshold_histogram` — fixed-depth bisection on |x|: `iters` rounds of
   count-compare halving.  O(n · iters) elementwise work, no sort — the
   TPU-native selector (sorting 17M floats on TPU is far slower than 24
-  fused count passes).  This is the selector used inside the federated
-  round; kernels/topk_mask.py is its Pallas fusion.
+  fused count passes).  `kernels/topk_mask.py` is its Pallas fusion.
 
 Masks keep entries with |x| >= threshold; at density d the expected kept
 fraction is d (ties can keep a few extra entries — communication accounting
 uses the *actual* nnz, never the nominal density).
+
+Selection policy (exact vs histogram vs the fused Pallas production path)
+is dispatched one layer up, in `core/selectors.py`; the `exact=` booleans
+on this module's functions are the low-level switch the selectors build on.
+
+Keep-count contract (clamped in ONE place, `clamp_count`): a traced or
+static count `k` is clipped to [0, n]; `k == 0` keeps nothing on every
+selector; `k == n` keeps every entry the selector can keep (the histogram
+family never keeps exact zeros — its mask is `|x| >= max(thr, TINY)`).
+Density-based entry points keep their floor of one entry
+(`k = max(round(n*d), 1)`), matching the exact path.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
+# smallest *normal* f32: the threshold floor that keeps exact zeros out of
+# histogram-family masks.  A subnormal literal (the old 1e-38) flushes to 0
+# under XLA's CPU FTZ mode, silently turning "keep nothing of an all-zero
+# vector" into "keep everything".
+TINY = float(jnp.finfo(jnp.float32).tiny)
+
+
+def clamp_count(k, n: int) -> jax.Array:
+    """THE keep-count contract: int32 `k` clipped to [0, n].  Every selector
+    (exact, histogram, pallas) routes its count through here so the k=0 /
+    k=n edge behavior cannot drift between paths."""
+    return jnp.clip(jnp.asarray(k, jnp.int32), 0, n)
+
+
+def density_count(n: int, density: float) -> int:
+    """Static density -> keep-count: the whole vector at density >= 1,
+    otherwise `max(round(n*density), 1)` — the min-one-entry floor every
+    density-based entry point (selectors, round plans) shares."""
+    if density >= 1.0:
+        return n
+    return max(int(round(n * density)), 1)
+
+
+def _count_guard(mask: jax.Array, k: jax.Array) -> jax.Array:
+    """k == 0 keeps nothing (applied after thresholding; the bisection
+    itself cannot express an empty keep-set — its threshold converges to
+    the max and still keeps the argmax entries)."""
+    keep = k > 0
+    return jnp.logical_and(mask, keep[..., None] if keep.ndim else keep)
+
+
 def threshold_exact(flat_abs: jax.Array, density: float) -> jax.Array:
     """|x| threshold keeping ~density fraction. flat_abs (n,) f32."""
     n = flat_abs.shape[-1]
-    k = max(int(round(n * density)), 1)
+    k = density_count(n, density)
     if k >= n:
         return jnp.zeros(flat_abs.shape[:-1], flat_abs.dtype)
     srt = jnp.sort(flat_abs, axis=-1)                # ascending
@@ -45,22 +85,36 @@ def threshold_histogram(flat_abs: jax.Array, density: float,
                         iters: int = 24) -> jax.Array:
     """Bisection threshold: keep-fraction(|x| >= t) ~= density."""
     n = flat_abs.shape[-1]
-    k = jnp.asarray(max(int(round(n * density)), 1), jnp.float32)
+    k = density_count(n, density)
     return threshold_histogram_count(flat_abs, k, iters)
 
 
-def threshold_histogram_count(flat_abs: jax.Array, k, iters: int = 24
+def threshold_histogram_count(flat_abs: jax.Array, k, iters: int = 24,
+                              count_fn: Optional[Callable] = None
                               ) -> jax.Array:
     """Bisection threshold keeping ~k entries; `k` may be a traced scalar
-    (the per-client-count form used by the vmapped heterogeneous path)."""
-    k = jnp.asarray(k, jnp.float32)
+    (the per-client-count form used by the vmapped heterogeneous path).
+
+    This is the canonical bisection loop shared by the `histogram` and
+    `pallas` selectors: `count_fn(mid) -> int32 count of |x| >= mid` swaps
+    the jnp elementwise count for one `threshold_count_pallas` streaming
+    pass without touching the lo/hi float math, so the two selectors
+    produce bit-identical thresholds.  Returns `lo`, the largest probed
+    threshold whose count exceeds k (so the kept count is >= k; ties and
+    the 2^-iters probe resolution can keep a few extra entries).
+    """
+    k = clamp_count(k, flat_abs.shape[-1])
+    if count_fn is None:
+        def count_fn(mid):
+            return jnp.sum(flat_abs >= mid[..., None], axis=-1,
+                           dtype=jnp.int32)
     hi = jnp.max(flat_abs, axis=-1)
     lo = jnp.zeros_like(hi)
 
     def body(_, lohi):
         lo, hi = lohi
         mid = 0.5 * (lo + hi)
-        cnt = jnp.sum((flat_abs >= mid[..., None]).astype(jnp.float32), axis=-1)
+        cnt = count_fn(mid)
         # too many kept -> raise threshold
         lo = jnp.where(cnt > k, mid, lo)
         hi = jnp.where(cnt > k, hi, mid)
@@ -83,14 +137,14 @@ def topk_mask(flat: jax.Array, density: float, *, exact: bool = True,
     a = jnp.abs(flat.astype(jnp.float32))
     n = a.shape[-1]
     if exact:
-        k = max(int(round(n * density)), 1)
+        k = density_count(n, density)
         order = jnp.argsort(-a, axis=-1)                # descending by |x|
         mask = jnp.zeros(a.shape, bool)
         return jnp.put_along_axis(mask, order[..., :k],
                                   jnp.ones_like(order[..., :k], bool),
                                   axis=-1, inplace=False)
     thr = threshold_histogram(a, density, iters)
-    return a >= jnp.maximum(thr[..., None], 1e-38)
+    return a >= jnp.maximum(thr[..., None], TINY)
 
 
 def topk_mask_by_count(flat: jax.Array, k, *, exact: bool = True,
@@ -102,10 +156,11 @@ def topk_mask_by_count(flat: jax.Array, k, *, exact: bool = True,
     selection of `topk_mask` cannot be used.  The exact form reproduces
     `topk_mask(exact=True)` bit-for-bit when `k` equals the static count:
     same `argsort(-|x|)` order, same first-k selection, same tie-breaking.
+    Both forms honor the `clamp_count` contract (k=0 keeps nothing).
     """
     a = jnp.abs(flat.astype(jnp.float32))
     n = a.shape[-1]
-    k = jnp.asarray(k, jnp.int32)
+    k = clamp_count(k, n)
     if exact:
         order = jnp.argsort(-a, axis=-1)                # descending by |x|
         k_b = k[..., None] if k.ndim else k             # per-batch counts
@@ -113,7 +168,7 @@ def topk_mask_by_count(flat: jax.Array, k, *, exact: bool = True,
         mask = jnp.zeros(a.shape, bool)
         return jnp.put_along_axis(mask, order, keep, axis=-1, inplace=False)
     thr = threshold_histogram_count(a, k, iters)
-    return a >= jnp.maximum(thr[..., None], 1e-38)
+    return _count_guard(a >= jnp.maximum(thr[..., None], TINY), k)
 
 
 def sparsify(flat: jax.Array, density: float, *, exact: bool = True) -> Tuple[jax.Array, jax.Array]:

@@ -24,12 +24,14 @@ every benchmark.  See `docs/strategies.md` for the per-strategy mask table
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, ClassVar, Dict, Optional, Tuple, Type, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import selectors as sel
 from repro.core import sparsity as sp
 
 KINDS = ("lora", "flasc", "flasc_ef", "sparse_adapter", "fedselect",
@@ -42,7 +44,13 @@ class StrategySpec:
     kind: str = "flasc"
     density_down: float = 0.25
     density_up: float = 0.25
-    exact_topk: bool = True
+    # Top-K selection policy for every mask/upload in the round
+    # (`core.selectors` registry: "exact" | "histogram" | "pallas").
+    # "" means unset; __post_init__ resolves it to "exact" (or to the
+    # exact_topk mapping), so a constructed spec always carries a real name.
+    selector: str = ""
+    # deprecated alias for `selector`: True -> "exact", False -> "histogram"
+    exact_topk: Optional[bool] = None
     # Adapter-LTH schedule
     lth_prune_every: int = 1
     lth_keep: float = 0.98
@@ -62,6 +70,30 @@ class StrategySpec:
             raise ValueError(
                 f"unknown strategy kind {self.kind!r}; known: "
                 f"{tuple(sorted(set(KINDS) | set(_REGISTRY)))}")
+        if self.exact_topk is not None:
+            warnings.warn(
+                "StrategySpec(exact_topk=...) is deprecated; use "
+                "selector=\"exact\" / \"histogram\" instead",
+                DeprecationWarning, stacklevel=3)
+            mapped = "exact" if self.exact_topk else "histogram"
+            if self.selector and self.selector != mapped:
+                raise ValueError(
+                    f"conflicting selection config: selector="
+                    f"{self.selector!r} with exact_topk={self.exact_topk}")
+            object.__setattr__(self, "selector", mapped)
+            # the alias is consumed by the mapping: clearing it lets
+            # dataclasses.replace(spec, selector=...) migrate a legacy
+            # spec, and keeps checkpoints from persisting (and re-warning
+            # about) the deprecated field on every resume
+            object.__setattr__(self, "exact_topk", None)
+        elif not self.selector:
+            object.__setattr__(self, "selector", "exact")
+        if not isinstance(self.selector, str) or \
+                self.selector not in sel.registered_selectors():
+            raise ValueError(
+                f"unknown selector {self.selector!r}; known: "
+                f"{sel.registered_selectors()} (custom Selector instances "
+                "go through transport.TopKSparsify, not the spec)")
 
 
 # ---------------------------------------------------------------------------
@@ -254,8 +286,8 @@ class Flasc(Strategy):
     upload of the delta — the paper's method."""
 
     def download_mask(self, flatP, sstate, round_idx):
-        return sp.topk_mask(flatP, self.spec.density_down,
-                            exact=self.spec.exact_topk)
+        return sel.topk_mask(flatP, self.spec.density_down,
+                             selector=self.spec.selector)
 
     def client_plan(self, m_down, slot, ctx):
         s = self.spec
@@ -274,8 +306,8 @@ class FlascEF(Flasc):
         return {"e": jnp.zeros((p_len,), jnp.float32)}
 
     def download_mask(self, flatP, sstate, round_idx):
-        return sp.topk_mask(flatP + sstate["e"], self.spec.density_down,
-                            exact=self.spec.exact_topk)
+        return sel.topk_mask(flatP + sstate["e"], self.spec.density_down,
+                             selector=self.spec.selector)
 
     def download_base(self, flatP, sstate):
         return flatP + sstate["e"]
@@ -303,8 +335,8 @@ class SparseAdapter(Strategy):
         spec = self.spec
 
         def first(_):
-            return {"mask": sp.topk_mask(flatP, spec.density_down,
-                                         exact=spec.exact_topk),
+            return {"mask": sel.topk_mask(flatP, spec.density_down,
+                                          selector=spec.selector),
                     "initialized": jnp.ones((), jnp.bool_)}
 
         def rest(_):
@@ -319,8 +351,8 @@ class FedSelect(Strategy):
     download, training, and upload."""
 
     def download_mask(self, flatP, sstate, round_idx):
-        return sp.topk_mask(flatP, self.spec.density_down,
-                            exact=self.spec.exact_topk)
+        return sel.topk_mask(flatP, self.spec.density_down,
+                             selector=self.spec.selector)
 
     def client_plan(self, m_down, slot, ctx):
         return RoundPlan(m_down, m_down, UploadRule.fixed(m_down))

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantization as qz
-from repro.core import sparsity as sp
+from repro.core import selectors as sel
 from repro.core.strategies import UploadRule
 
 
@@ -70,18 +70,20 @@ class MaskSparsify(Stage):
 @dataclasses.dataclass
 class TopKSparsify(Stage):
     """Magnitude Top-K.  Exactly one of `density` (static) or `count`
-    (possibly traced, per-client) must be set."""
+    (possibly traced, per-client) must be set.  `selector` names the
+    selection policy (`core.selectors` registry: "exact", "histogram",
+    "pallas") or is a `Selector` instance."""
     density: Optional[float] = None
     count: Any = None
-    exact: bool = True
+    selector: sel.SelectorLike = "exact"
 
     def __call__(self, msg: Message, *, key=None) -> Message:
         assert (self.density is None) != (self.count is None)
+        s = sel.resolve_selector(self.selector)
         if self.density is not None:
-            values, nnz = sp.sparsify(msg.values, self.density, exact=self.exact)
+            values, nnz = s.sparsify(msg.values, self.density)
         else:
-            values, nnz = sp.sparsify_by_count(msg.values, self.count,
-                                               exact=self.exact)
+            values, nnz = s.sparsify_by_count(msg.values, self.count)
         return dataclasses.replace(msg, values=values, nnz=nnz)
 
 
@@ -134,14 +136,16 @@ def download_pipeline(mask, quant_bits: int = 0) -> Pipeline:
 
 
 def upload_pipeline(rule: UploadRule, quant_bits: int = 0, *,
-                    exact: bool = True, count=None) -> Pipeline:
+                    selector: sel.SelectorLike = "exact",
+                    count=None) -> Pipeline:
     """Client -> server from a strategy's `UploadRule`.  Pass `count` to
-    override a topk rule's static density with a (traced) keep-count."""
+    override a topk rule's static density with a (traced) keep-count;
+    `selector` picks the Top-K implementation (`core.selectors`)."""
     if rule.mode == "topk":
         if count is not None:
-            stage: Stage = TopKSparsify(count=count, exact=exact)
+            stage: Stage = TopKSparsify(count=count, selector=selector)
         else:
-            stage = TopKSparsify(density=rule.density, exact=exact)
+            stage = TopKSparsify(density=rule.density, selector=selector)
     else:
         stage = MaskSparsify(rule.mask)
     stages: Tuple[Stage, ...] = (stage,)

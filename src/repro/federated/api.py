@@ -16,6 +16,9 @@ config objects plus the strategy registry:
 `with_strategy` accepts a kind string (+ StrategySpec field overrides), a
 `StrategySpec`, or any registered `Strategy` instance — including user
 strategies added with `@register_strategy` (see docs/strategies.md).
+`.with_strategy(selector="pallas")` swaps every Top-K in the round for the
+fused kernel path (docs/kernels.md); the selector name round-trips through
+checkpoints like every other spec field.
 `runtime.run_experiment` remains as a thin backward-compatible shim over
 this builder.
 

@@ -7,6 +7,13 @@ lane-aligned blocks resident in VMEM, compare against the scalar threshold
 (prefetched to SMEM), write the masked block.  A fused count output feeds
 the histogram threshold-refinement loop so the bisection never re-reads
 the vector from HBM more than once per iteration.
+
+These kernels are the production path behind the `pallas` selector
+(`core/selectors.py`): `threshold_count_pallas` is the per-iteration
+bisection pass, `topk_mask_pallas` materializes the final mask + nnz in
+one go.  The selector layer owns padding to the block multiple, backend
+dispatch (interpret mode off-TPU), and the keep-count contract; callers
+should go through it rather than invoking these raw kernels.
 """
 from __future__ import annotations
 

@@ -3,12 +3,15 @@ if/elif implementation), kept verbatim as the equivalence reference for
 `test_strategy_registry.py`.  Do not modernize this file: its whole value is
 that it reproduces the seed semantics bit-for-bit.
 
-Two mechanical deviations from the seed, neither affecting numerics:
+Three mechanical deviations from the seed, none affecting numerics:
   * imports are routed through the current `sparsity`/`quantization`
     modules (whose seed entry points are unchanged),
   * the seed's `jax.tree.flatten_with_path` call lived in
     `rank_index_map`, which this file reuses from `repro.core.strategies`
-    (the function is unchanged apart from that API-spelling fix).
+    (the function is unchanged apart from that API-spelling fix),
+  * the seed read the selection policy from `spec.exact_topk` (bool);
+    the spec now carries a `selector` name, so `_exact(spec)` derives the
+    same boolean from it ("exact" was / is the default either way).
 """
 import functools
 
@@ -19,6 +22,11 @@ from repro.core import quantization as qz
 from repro.core import sparsity as sp
 from repro.core.fedround import FlatMeta  # unchanged flatten metadata
 from repro.core.strategies import StrategySpec
+
+
+def _exact(spec: StrategySpec) -> bool:
+    """Seed-era selection switch from the current spec surface."""
+    return spec.selector == "exact"
 
 
 # --- seed strategies.py dispatch -------------------------------------------
@@ -37,12 +45,12 @@ def init_strategy_state(spec: StrategySpec, p_len: int):
 
 def download_mask(spec: StrategySpec, flatP, sstate, round_idx):
     if spec.kind == "flasc":
-        return sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk)
+        return sp.topk_mask(flatP, spec.density_down, exact=_exact(spec))
     if spec.kind == "flasc_ef":
         return sp.topk_mask(flatP + sstate["e"], spec.density_down,
-                            exact=spec.exact_topk)
+                            exact=_exact(spec))
     if spec.kind == "fedselect":
-        return sp.topk_mask(flatP, spec.density_down, exact=spec.exact_topk)
+        return sp.topk_mask(flatP, spec.density_down, exact=_exact(spec))
     if spec.kind == "sparse_adapter":
         return sstate["mask"]
     if spec.kind == "adapter_lth":
@@ -74,7 +82,7 @@ def update_strategy_state(spec: StrategySpec, sstate, flatP, round_idx):
     if spec.kind == "sparse_adapter":
         def first(_):
             return {"mask": sp.topk_mask(flatP, spec.density_down,
-                                         exact=spec.exact_topk),
+                                         exact=_exact(spec)),
                     "initialized": jnp.ones((), jnp.bool_)}
 
         def rest(_):
@@ -153,7 +161,7 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
             P_c = qz.quantize_roundtrip(P_c, spec.quant_bits_down,
                                         qkeys[-1] if qkeys is not None else None)
         run = functools.partial(_client_update, loss_of=loss_of, meta=meta,
-                                fed=fed, exact_topk=spec.exact_topk,
+                                fed=fed, exact_topk=_exact(spec),
                                 quant_bits_up=spec.quant_bits_up)
         if qkeys is not None:
             deltas, nnzs, losses = jax.vmap(
@@ -171,7 +179,7 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
             cb = jax.tree.map(lambda x: x[c], client_batches)
             outs.append(_client_update(P_base * m_dn, cb, m_tr, up,
                                        loss_of=loss_of, meta=meta, fed=fed,
-                                       exact_topk=spec.exact_topk))
+                                       exact_topk=_exact(spec)))
         deltas = jnp.stack([o[0] for o in outs])
         nnzs = jnp.stack([o[1] for o in outs])
         losses = jnp.stack([o[2] for o in outs])
