@@ -1,9 +1,14 @@
 """Figure 2: utility vs total communication for LoRA / FLASC /
-SparseAdapter / Adapter-LTH on an image and a text federated task.
+SparseAdapter / Adapter-LTH — plus the two named communication-efficiency
+baselines (docs/baselines.md): FLoCoRA low-rank message compression and
+the two-stage sparsified-orthogonal-update schedule — on an image and a
+text federated task.
 
 Paper claim: FLASC matches dense LoRA at 3-10x less communication;
 SparseAdapter fails to match; Adapter-LTH saves little early and degrades
-late."""
+late.  The baseline curves position FLASC against low-rank *message*
+compression (`flocora`, dense-coded factor bytes) and alternating-factor
+sparsified uploads (`two_stage_ortho`)."""
 from __future__ import annotations
 
 from repro.core.strategies import StrategySpec
@@ -20,6 +25,11 @@ METHODS = {
     "sparse_adapter_d1/4": StrategySpec(kind="sparse_adapter", density_down=0.25),
     "adapter_lth_.98": StrategySpec(kind="adapter_lth", lth_prune_every=1,
                                     lth_keep=0.98),
+    # baselines (docs/baselines.md): low-rank message compression in both
+    # directions, and the alternating A/B schedule with Top-K uploads
+    "flocora_r8": StrategySpec(kind="flocora"),
+    "two_stage_ortho_d1/4": StrategySpec(kind="two_stage_ortho",
+                                         density_up=0.25),
 }
 
 

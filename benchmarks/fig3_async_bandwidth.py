@@ -34,6 +34,12 @@ METHODS = {
     "flasc_1/4_1/64": StrategySpec(kind="flasc", density_down=0.25, density_up=1 / 64),
     "sparse_adapter_1/4": StrategySpec(kind="sparse_adapter", density_down=0.25),
     "adapter_lth_.98": StrategySpec(kind="adapter_lth", lth_keep=0.98),
+    # baselines (docs/baselines.md): both attack the same asymmetric-
+    # bandwidth problem — flocora shrinks every message to dense-coded
+    # low-rank factors; two_stage_ortho halves and Top-K-sparsifies uploads
+    "flocora_r8": StrategySpec(kind="flocora"),
+    "two_stage_ortho_1/16": StrategySpec(kind="two_stage_ortho",
+                                         density_up=1 / 16),
 }
 BW_RATIOS = (1, 4, 16)          # download/upload speed ratio
 DOWN_BW = 1e6                   # bytes/sec; times reported relative to LoRA

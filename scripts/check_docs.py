@@ -9,8 +9,18 @@ Checks, over README.md and every docs/*.md:
   2. inline-code *dotted references* (`module.symbol`, `Class.method`,
      `pkg.module`) resolve against a static AST index of `src/repro` —
      no imports, so the check is fast and jax-free;
-  3. `examples/quickstart.py` still runs (QUICK=1 smoke mode), so the
-     README's copy-paste path can't rot (skip with --no-run).
+  3. *registry names* resolve against the live registries, extracted
+     statically from the `@register_strategy/selector/engine/stage`
+     decorators: every `kind="..."` / `selector="..."` /
+     `with_engine("...")` / `BENCH_ENGINE=...` mention (prose or fenced),
+     and every first-column backticked name in a table whose heading or
+     intro line names a registry (strategies, engines, selectors,
+     transport stages, baselines) — so docs can't drift when a
+     registered name changes;
+  4. `examples/quickstart.py` still runs (QUICK=1 smoke mode), so the
+     README's copy-paste path can't rot, and every ```python fence in
+     `docs/baselines.md` executes (QUICK=1) so the per-baseline snippets
+     stay runnable (skip both with --no-run).
 
 Markdown link targets ([text](path)) are checked as paths too.  Exits 1
 with a per-failure listing when anything is broken.
@@ -34,9 +44,31 @@ EXTERNAL_ROOTS = {"jax", "jnp", "np", "numpy", "os", "json", "heapq",
                   "dataclasses", "pytest"}
 
 
+# decorator name -> registry it populates (extracted statically: the gate
+# stays import-free, so renaming a registered kind breaks the docs check
+# even on a box that cannot import jax)
+REGISTER_FUNCS = {"register_strategy": "strategies",
+                  "register_selector": "selectors",
+                  "register_engine": "engines",
+                  "register_stage": "stages"}
+
+
+def _registered_names(node):
+    """(registry, name) for each register_* decorator on a ClassDef."""
+    for deco in getattr(node, "decorator_list", ()):
+        if isinstance(deco, ast.Call) and isinstance(deco.func, ast.Name) \
+                and deco.func.id in REGISTER_FUNCS and deco.args \
+                and isinstance(deco.args[0], ast.Constant) \
+                and isinstance(deco.args[0].value, str):
+            yield REGISTER_FUNCS[deco.func.id], deco.args[0].value
+
+
 def build_index():
-    """module dotted path -> {"symbols": set, "classes": {name: attrs}}."""
+    """(module index, registries): the dotted-reference index plus
+    {"strategies"/"selectors"/"engines"/"stages": set of registered
+    names}."""
     index = {}
+    registries = {r: set() for r in REGISTER_FUNCS.values()}
     for dirpath, _, files in os.walk(os.path.join(SRC, "repro")):
         for fname in files:
             if not fname.endswith(".py"):
@@ -52,6 +84,8 @@ def build_index():
                 if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                     symbols.add(node.name)
                 elif isinstance(node, ast.ClassDef):
+                    for registry, rname in _registered_names(node):
+                        registries[registry].add(rname)
                     attrs = set()
                     for sub in node.body:
                         if isinstance(sub, (ast.FunctionDef,
@@ -81,7 +115,7 @@ def build_index():
                     symbols.update(t.id for t in node.targets
                                    if isinstance(t, ast.Name))
             index[mod] = {"symbols": symbols, "classes": classes}
-    return index
+    return index, registries
 
 
 def _tail_in_module(parts, info):
@@ -135,6 +169,83 @@ LINK_RE = re.compile(r"\]\(([^)#:\s]+)\)")
 NAME_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*(\.[A-Za-z_][A-Za-z0-9_]*)+$")
 PATH_RE = re.compile(r"^[\w./-]+$")
 
+# registry-name mention patterns (checked over the whole file, fenced
+# snippets included — a stale kind in a copy-paste example is still rot)
+REGISTRY_REF_RES = (
+    (re.compile(r'kind="(\w+)"'), "strategies"),
+    (re.compile(r'\.with_strategy\("(\w+)"'), "strategies"),
+    (re.compile(r'\bresolve\("(\w+)"\)'), "strategies"),
+    (re.compile(r'selector="(\w+)"'), "selectors"),
+    (re.compile(r'\.with_engine\("(\w+)"'), "engines"),
+    (re.compile(r'resolve_engine\("(\w+)"'), "engines"),
+    (re.compile(r"BENCH_ENGINE=([a-z_]+)"), "engines"),
+    (re.compile(r'resolve_stage\("(\w+)"'), "stages"),
+)
+# a table whose nearest heading/intro names one of these gets its
+# first-column backticked names checked against the mapped registries
+TABLE_KEYWORDS = (("selector", ("selectors",)),
+                  ("engine", ("engines",)),
+                  ("transport stage", ("stages",)),
+                  ("strateg", ("strategies",)),
+                  ("kind", ("strategies",)),
+                  ("baseline", ("strategies", "stages")))
+TABLE_NAME_RE = re.compile(r"^\|\s*`([a-z][a-z0-9_]*)`")
+
+
+def _table_registries(context: str):
+    hit = ()
+    low = context.lower()
+    for kw, regs in TABLE_KEYWORDS:
+        if kw in low:
+            hit += tuple(r for r in regs if r not in hit)
+    return hit
+
+
+def check_registry_names(md_path, registries):
+    """Registry-name drift: pattern mentions + registry-table first
+    columns must name live registered kinds."""
+    with open(md_path) as f:
+        text = f.read()
+    rel = os.path.relpath(md_path, ROOT)
+    failures = []
+    # a doc that *registers* an example kind in a fence may then refer to
+    # it: those names are locally valid, everything else must be live
+    registries = {r: set(names) for r, names in registries.items()}
+    for m in re.finditer(r'@register_(strategy|selector|engine|stage)'
+                         r'\("(\w+)"\)', text):
+        registries[REGISTER_FUNCS["register_" + m.group(1)]].add(m.group(2))
+    for pat, registry in REGISTRY_REF_RES:
+        for name in pat.findall(text):
+            if name not in registries[registry]:
+                failures.append(
+                    f"{rel}: `{name}` not a registered "
+                    f"{registry[:-1] if registry != 'strategies' else 'strategy'}"
+                    f" (known: {sorted(registries[registry])})")
+    heading, intro = "", ""
+    # table scan runs on prose only: fenced code must neither register as
+    # tables nor leak 'engine'/'selector' words into the intro context
+    for line in FENCE_RE.sub("", text).splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.startswith("#"):
+            heading, intro = stripped, ""
+            continue
+        if not stripped.startswith("|"):
+            intro = stripped
+            continue
+        m = TABLE_NAME_RE.match(stripped)
+        if not m:
+            continue
+        regs = _table_registries(heading + " " + intro)
+        if not regs:
+            continue
+        name = m.group(1)
+        if not any(name in registries[r] for r in regs):
+            failures.append(f"{rel}: table name `{name}` not registered in "
+                            f"{'/'.join(regs)}")
+    return failures
+
 
 def check_file(md_path, index):
     with open(md_path) as f:
@@ -170,13 +281,17 @@ def check_file(md_path, index):
     return failures
 
 
+def _quick_env():
+    return dict(os.environ, QUICK="1",
+                PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+
+
 def smoke_quickstart():
-    env = dict(os.environ, QUICK="1",
-               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
     try:
         proc = subprocess.run(
             [sys.executable, os.path.join(ROOT, "examples", "quickstart.py")],
-            env=env, cwd=ROOT, capture_output=True, text=True, timeout=600)
+            env=_quick_env(), cwd=ROOT, capture_output=True, text=True,
+            timeout=600)
     except subprocess.TimeoutExpired:
         return ["examples/quickstart.py timed out after 600s (QUICK=1)"]
     if proc.returncode != 0:
@@ -185,8 +300,36 @@ def smoke_quickstart():
     return []
 
 
+SNIPPET_RE = re.compile(r"^```python\n(.*?)^```", re.M | re.S)
+
+
+def run_doc_snippets(md_path):
+    """Execute every ```python fence in `md_path` (QUICK=1): the
+    per-baseline snippets in docs/baselines.md are contractually
+    runnable, not illustrative."""
+    rel = os.path.relpath(md_path, ROOT)
+    if not os.path.exists(md_path):
+        return [f"{rel}: missing (the runnable-baselines doc is part of "
+                "the gate)"]
+    with open(md_path) as f:
+        blocks = SNIPPET_RE.findall(f.read())
+    failures = []
+    for i, code in enumerate(blocks):
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-c", code], env=_quick_env(), cwd=ROOT,
+                capture_output=True, text=True, timeout=600)
+        except subprocess.TimeoutExpired:
+            failures.append(f"{rel}: snippet {i + 1} timed out after 600s")
+            continue
+        if proc.returncode != 0:
+            failures.append(f"{rel}: snippet {i + 1} failed:\n"
+                            f"{proc.stdout[-1500:]}\n{proc.stderr[-1500:]}")
+    return failures
+
+
 def main(argv):
-    index = build_index()
+    index, registries = build_index()
     md_files = [os.path.join(ROOT, "README.md")]
     docs_dir = os.path.join(ROOT, "docs")
     md_files += sorted(os.path.join(docs_dir, f)
@@ -194,8 +337,10 @@ def main(argv):
     failures = []
     for md in md_files:
         failures += check_file(md, index)
+        failures += check_registry_names(md, registries)
     if "--no-run" not in argv:
         failures += smoke_quickstart()
+        failures += run_doc_snippets(os.path.join(docs_dir, "baselines.md"))
     if failures:
         print(f"check_docs: {len(failures)} failure(s)")
         for f in failures:

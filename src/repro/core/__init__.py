@@ -8,8 +8,10 @@ from repro.core.strategies import (Strategy, StrategySpec, RoundPlan,
                                    registered_kinds, resolve,
                                    init_strategy_state)
 from repro.core.transport import (Message, Pipeline, MaskSparsify,
-                                  TopKSparsify, Quantize, download_pipeline,
-                                  upload_pipeline)
+                                  TopKSparsify, Quantize, LowRankCompress,
+                                  register_stage, registered_stages,
+                                  download_pipeline, upload_pipeline,
+                                  wire_format)
 from repro.core.fedround import FlatMeta, federated_round, make_round_fn, init_server
 from repro.core.comm import CommLedger, coded_message_bytes
 
@@ -21,6 +23,7 @@ __all__ = ["topk_mask", "topk_mask_by_count", "sparsify", "sparsify_by_count",
            "PlanContext", "register_strategy", "registered_kinds", "resolve",
            "init_strategy_state",
            "Message", "Pipeline", "MaskSparsify", "TopKSparsify", "Quantize",
-           "download_pipeline", "upload_pipeline",
+           "LowRankCompress", "register_stage", "registered_stages",
+           "download_pipeline", "upload_pipeline", "wire_format",
            "FlatMeta", "federated_round", "make_round_fn", "init_server",
            "CommLedger", "coded_message_bytes"]

@@ -21,11 +21,16 @@ INDEX_BYTES = 4
 
 
 def coded_message_bytes(values: int, per_message_params: int, messages: int,
-                        value_bytes: float = VALUE_BYTES) -> int:
+                        value_bytes: float = VALUE_BYTES,
+                        dense: bool = False) -> int:
     """Wire bytes for `values` transmitted entries spread over `messages`
     sparse messages of `per_message_params` entries each: the cheaper of
     index coding (value + 4B index each) and bitmap coding (value + one
-    n/8-byte bitmap per message)."""
+    n/8-byte bitmap per message).  `dense=True` means entry positions are
+    implicit (a low-rank factor message: `transport.LowRankCompress`), so
+    the wire carries exactly the values — no index/bitmap coding."""
+    if dense:
+        return int(values * value_bytes)
     idx = values * (value_bytes + INDEX_BYTES)
     bitmap = values * value_bytes + (per_message_params // 8) * messages
     return int(min(idx, bitmap))
@@ -41,6 +46,10 @@ class CommLedger:
     up_value_bytes: float = VALUE_BYTES
     down_coded: int = 0                 # cumulative practical wire bytes
     up_coded: int = 0
+    # dense-coded directions (low-rank factor messages): transmitted
+    # entries carry no positions, so coding is exactly nnz * value_bytes
+    down_dense: bool = False
+    up_dense: bool = False
 
     def record_round(self, n_clients: int, down_nnz: float, up_nnz_total: float,
                      *, down_per_message=None, up_per_message=None):
@@ -60,10 +69,12 @@ class CommLedger:
                else [up_nnz_total / max(n_clients, 1)] * n_clients)
         self.down_coded += sum(
             coded_message_bytes(int(v), self.total_params, 1,
-                                self.down_value_bytes) for v in dpm)
+                                self.down_value_bytes, self.down_dense)
+            for v in dpm)
         self.up_coded += sum(
             coded_message_bytes(int(v), self.total_params, 1,
-                                self.up_value_bytes) for v in upm)
+                                self.up_value_bytes, self.up_dense)
+            for v in upm)
         self.rounds += 1
 
     # --- paper-faithful (values only) ---

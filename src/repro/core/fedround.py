@@ -71,9 +71,13 @@ class FlatMeta:
             off += n
         return jax.tree.unflatten(self.treedef, out)
 
-    def plan_context(self, n_clients: int) -> st.PlanContext:
+    def plan_context(self, n_clients: int, round_idx=None) -> st.PlanContext:
+        """Fresh per-round context; `round_idx` (traced scalar) lets
+        schedule-dependent strategies branch on the round, and `meta=self`
+        gives structure-aware hooks flatten/unflatten."""
         return st.PlanContext(p_len=self.p_len, n_clients=n_clients,
-                              rank_idx=self.rank_idx, is_b=self.is_b)
+                              rank_idx=self.rank_idx, is_b=self.is_b,
+                              round_idx=round_idx, meta=self)
 
 
 def init_server(flatP: jax.Array):
@@ -115,7 +119,8 @@ def _keep_count(p_len: int, density: float) -> int:
 
 def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
                  loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
-                 kdown=None, upkeys=None, ax_key=None, spmd_axis_name=None):
+                 kdown=None, upkeys=None, ax_key=None, spmd_axis_name=None,
+                 round_idx=None):
     """Stack per-client `RoundPlan`s onto the vmapped client axis and run
     every client's local update through the transport pipelines.
 
@@ -153,18 +158,25 @@ def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
                 [_keep_count(meta.p_len, d) for d in densities], jnp.int32)
             up_cs, ax_up = up_counts, 0
 
+    # the traced round index folds into random-mode projections so the
+    # compressed subspace rotates across rounds (transport.lowrank_stage)
+    lr_down = tp.lowrank_stage(s, "down", fold=round_idx)
+    lr_up = tp.lowrank_stage(s, "up", fold=round_idx)
+
     def one_client(m_dn, m_tr, up_arg, cb, kup):
-        down = tp.download_pipeline(m_dn, s.quant_bits_down)(P_base, key=kdown)
+        down = tp.download_pipeline(m_dn, s.quant_bits_down,
+                                    lowrank=lr_down)(P_base, key=kdown)
         if up_mode == "fixed":
             rule = st.UploadRule.fixed(up_arg)
             pipe = tp.upload_pipeline(rule, s.quant_bits_up,
-                                      selector=s.selector)
+                                      selector=s.selector, lowrank=lr_up)
         elif up_counts is None:
             pipe = tp.upload_pipeline(plans[0].upload, s.quant_bits_up,
-                                      selector=s.selector)
+                                      selector=s.selector, lowrank=lr_up)
         else:
             pipe = tp.upload_pipeline(plans[0].upload, s.quant_bits_up,
-                                      selector=s.selector, count=up_arg)
+                                      selector=s.selector, count=up_arg,
+                                      lowrank=lr_up)
         values, nnz, loss = _client_update(down.values, cb, m_tr, pipe,
                                            loss_of=loss_of, meta=meta, fed=fed,
                                            up_key=kup)
@@ -197,7 +209,7 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
 
     m_down_global = strat.download_mask(flatP, sstate, round_idx)
     P_base = strat.download_base(flatP, sstate)
-    ctx = meta.plan_context(n_clients)
+    ctx = meta.plan_context(n_clients, round_idx=round_idx)
     plans = [strat.client_plan(m_down_global, c, ctx) for c in range(n_clients)]
 
     # --- per-message quantization keys (stochastic rounding) --------------
@@ -209,9 +221,14 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
     (deltas, nnzs, losses, down_nnzs), (m_down_cs, ax_down) = _run_clients(
         P_base, plans, client_batches, s, loss_of=loss_of, meta=meta, fed=fed,
         kdown=kdown, upkeys=upkeys, ax_key=ax_key,
-        spmd_axis_name=spmd_axis_name)
+        spmd_axis_name=spmd_axis_name, round_idx=round_idx)
 
-    if ax_down is None:     # shared mask: bill the global mask support
+    lr_down = tp.lowrank_stage(s, "down")
+    if lr_down is not None and lr_down.active(meta.p_len):
+        # low-rank download: every message is the factor matrices, not the
+        # masked support — bill what the transport actually transmitted
+        down_nnz = jnp.mean(down_nnzs)
+    elif ax_down is None:   # shared mask: bill the global mask support
         down_nnz = jnp.sum(jnp.asarray(m_down_cs).astype(jnp.float32))
     else:                   # per-client masks: average per-client size
         down_nnz = jnp.mean(down_nnzs)
@@ -237,8 +254,9 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
         flatP = flatP - fed.server_lr * pseudo_grad
         opt = server_state["opt"]
 
-    sstate, flatP = strat.post_round(sstate, flatP, P_base=P_base,
-                                     m_down=m_down_global, round_idx=round_idx)
+    sstate, flatP = st.call_post_round(strat, sstate, flatP, P_base=P_base,
+                                       m_down=m_down_global,
+                                       round_idx=round_idx, ctx=ctx)
     server_state = {"opt": opt, "round": round_idx + 1}
 
     metrics = {
@@ -336,7 +354,7 @@ def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
     def fn(flatP, sstate, round_idx, client_batches, rng):
         m_down_global = strat.download_mask(flatP, sstate, round_idx)
         P_base = strat.download_base(flatP, sstate)
-        ctx = meta.plan_context(fed.n_clients)
+        ctx = meta.plan_context(fed.n_clients, round_idx=round_idx)
         plans = [strat.client_plan(m_down_global, c, ctx) for c in slots]
 
         use_keys = rng is not None and (s.quant_bits_up or s.quant_bits_down)
@@ -351,7 +369,8 @@ def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
 
         (deltas, nnzs, losses, down_nnzs), _ = _run_clients(
             P_base, plans, client_batches, s, loss_of=loss_of, meta=meta,
-            fed=fed, kdown=kdown, upkeys=upkeys, ax_key=ax_key)
+            fed=fed, kdown=kdown, upkeys=upkeys, ax_key=ax_key,
+            round_idx=round_idx)
         return deltas, nnzs, losses, down_nnzs
     return fn
 
@@ -385,7 +404,7 @@ def make_server_phase_fn(meta: FlatMeta, fed: FederatedConfig,
         round_idx = server_state["round"]
         m_down = strat.download_mask(flatP, sstate, round_idx)
         P_base = strat.download_base(flatP, sstate)
-        ctx = meta.plan_context(fed.n_clients)
+        ctx = meta.plan_context(fed.n_clients, round_idx=round_idx)
         pseudo_grad = strat.aggregate(deltas * weights[:, None], ctx)
 
         if fed.server_opt == "adam":
@@ -396,7 +415,8 @@ def make_server_phase_fn(meta: FlatMeta, fed: FederatedConfig,
             flatP2 = flatP - fed.server_lr * pseudo_grad
             opt = server_state["opt"]
 
-        sstate2, flatP2 = strat.post_round(sstate, flatP2, P_base=P_base,
-                                           m_down=m_down, round_idx=round_idx)
+        sstate2, flatP2 = st.call_post_round(strat, sstate, flatP2,
+                                             P_base=P_base, m_down=m_down,
+                                             round_idx=round_idx, ctx=ctx)
         return flatP2, {"opt": opt, "round": round_idx + 1}, sstate2
     return fn

@@ -73,14 +73,6 @@ def threshold_exact(flat_abs: jax.Array, density: float) -> jax.Array:
     return srt[..., n - k]
 
 
-def threshold_exact_dynamic(flat_abs: jax.Array, density) -> jax.Array:
-    """Like threshold_exact but `density` may be a traced scalar."""
-    n = flat_abs.shape[-1]
-    k = jnp.clip(jnp.round(n * density).astype(jnp.int32), 1, n - 1)
-    srt = jnp.sort(flat_abs, axis=-1)
-    return jnp.take(srt, n - k, axis=-1)
-
-
 def threshold_histogram(flat_abs: jax.Array, density: float,
                         iters: int = 24) -> jax.Array:
     """Bisection threshold: keep-fraction(|x| >= t) ~= density."""

@@ -24,6 +24,7 @@ every benchmark.  See `docs/strategies.md` for the per-strategy mask table
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import warnings
 from typing import Any, ClassVar, Dict, Optional, Tuple, Type, Union
 
@@ -62,6 +63,18 @@ class StrategySpec:
     # message quantization (0 = off); composes with Top-K: mask -> quantize
     quant_bits_down: int = 0
     quant_bits_up: int = 0
+    # FLoCoRA-style low-rank *message* compression (transport.LowRankCompress,
+    # docs/baselines.md): factor rank per direction (0 = off — except under
+    # kind="flocora", whose whole point is both-direction compression, so
+    # there each 0 means "default to 8"; use any other kind for
+    # single-direction compression).  "random" transmits only the
+    # seeded-projection coefficients; "learned" transmits both SVD factors.
+    # Quantization bits for a compressed direction apply to the transmitted
+    # factors.
+    lowrank_down: int = 0
+    lowrank_up: int = 0
+    lowrank_mode: str = "random"
+    lowrank_seed: int = 0
 
     def __post_init__(self):
         # user strategies enter the registry after import time, so accept
@@ -94,6 +107,13 @@ class StrategySpec:
                 f"unknown selector {self.selector!r}; known: "
                 f"{sel.registered_selectors()} (custom Selector instances "
                 "go through transport.TopKSparsify, not the spec)")
+        if self.lowrank_mode not in ("random", "learned"):
+            raise ValueError(
+                f"unknown lowrank_mode {self.lowrank_mode!r}; "
+                "known: ('random', 'learned')")
+        if self.lowrank_down < 0 or self.lowrank_up < 0:
+            raise ValueError("lowrank ranks must be >= 0 (0 = off); got "
+                             f"{self.lowrank_down}/{self.lowrank_up}")
 
 
 # ---------------------------------------------------------------------------
@@ -141,11 +161,19 @@ class RoundPlan:
 
 @dataclasses.dataclass(frozen=True)
 class PlanContext:
-    """Static per-round facts available to `client_plan`."""
+    """Per-round facts available to `client_plan` / `aggregate` /
+    `post_round`.  A fresh context is built per round trace, so strategies
+    may key caches on its identity (see `FFALoRA`/`TwoStageOrtho`)."""
     p_len: int
     n_clients: int
     rank_idx: Optional[np.ndarray] = None       # per-entry LoRA rank component
     is_b: Optional[np.ndarray] = None           # per-entry "is a B-matrix entry"
+    # traced scalar: the server round counter (schedule-dependent
+    # strategies branch on it with jnp.where, never python `if`)
+    round_idx: Any = None
+    # the `fedround.FlatMeta` of the trainable tree — gives structure-aware
+    # strategies (per-leaf QR in `two_stage_ortho`) flatten/unflatten
+    meta: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -194,13 +222,29 @@ class Strategy:
         return False so the round function can refuse dp_clip > 0."""
         return True
 
-    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
+    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx,
+                   ctx: Optional[PlanContext] = None):
         """End-of-round transition; returns (sstate', flatP') — strategies
-        may permanently zero pruned weights."""
+        may permanently zero pruned weights.  `ctx` is the round's
+        `PlanContext` (None from legacy callers that predate it)."""
         return sstate, flatP
 
     def __repr__(self):
         return f"{type(self).__name__}({self.spec})"
+
+
+def call_post_round(strat: "Strategy", sstate, flatP, *, P_base, m_down,
+                    round_idx, ctx: Optional[PlanContext]):
+    """Invoke `strat.post_round`, passing `ctx=` only when the override
+    accepts it — out-of-tree strategies written against the pre-ctx hook
+    signature keep working (the round loop calls through here)."""
+    params = inspect.signature(type(strat).post_round).parameters
+    if "ctx" in params or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                              for p in params.values()):
+        return strat.post_round(sstate, flatP, P_base=P_base, m_down=m_down,
+                                round_idx=round_idx, ctx=ctx)
+    return strat.post_round(sstate, flatP, P_base=P_base, m_down=m_down,
+                            round_idx=round_idx)
 
 
 _REGISTRY: Dict[str, Type[Strategy]] = {}
@@ -312,7 +356,8 @@ class FlascEF(Flasc):
     def download_base(self, flatP, sstate):
         return flatP + sstate["e"]
 
-    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
+    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx,
+                   ctx=None):
         return {"e": P_base * (1.0 - m_down)}, flatP     # unsent residual
 
 
@@ -331,7 +376,8 @@ class SparseAdapter(Strategy):
     def client_plan(self, m_down, slot, ctx):
         return RoundPlan(m_down, m_down, UploadRule.fixed(m_down))
 
-    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
+    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx,
+                   ctx=None):
         spec = self.spec
 
         def first(_):
@@ -373,14 +419,23 @@ class AdapterLTH(Strategy):
     def client_plan(self, m_down, slot, ctx):
         return RoundPlan(m_down, m_down, UploadRule.fixed(m_down))
 
-    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
+    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx,
+                   ctx=None):
         spec = self.spec
+        n = flatP.shape[-1]
 
         def prune(_):
             dens = jnp.maximum(sstate["density"] * spec.lth_keep, 1e-4)
             masked = jnp.where(sstate["mask"], jnp.abs(flatP), 0.0)
-            thr = sp.threshold_exact_dynamic(masked, dens)
-            mask = masked >= jnp.maximum(thr, 1e-38)
+            # traced keep-count through the selector layer (same k clip the
+            # seed's threshold path used); `masked > 0` keeps the permanent-
+            # pruning invariant under the exact selector, whose rank
+            # selection would otherwise resurrect zeroed entries on ties
+            # (the histogram family's TINY threshold floor already excludes
+            # exact zeros, so there it is a no-op)
+            k = jnp.clip(jnp.round(n * dens).astype(jnp.int32), 1, n - 1)
+            mask = sel.topk_mask_by_count(masked, k,
+                                          selector=spec.selector) & (masked > 0)
             return {"mask": mask, "density": dens}
 
         def keep(_):
@@ -446,6 +501,102 @@ class HetLoRA(Strategy):
     @property
     def uniform_aggregation(self) -> bool:
         return not self.spec.hetlora_weighted
+
+
+# ---------------------------------------------------------------------------
+# the named communication-efficiency baselines (docs/baselines.md)
+# ---------------------------------------------------------------------------
+
+@register_strategy("flocora")
+class FloCoRA(DenseLoRA):
+    """FLoCoRA (Grativol et al., arXiv:2406.14082): dense LoRA rounds whose
+    *messages* are low-rank compressed by the `transport.LowRankCompress`
+    stage in both directions — the whole method lives in the transport
+    pipeline, so the strategy itself is dense LoRA.  The method
+    compresses *both* directions, so each unset (zero) rank defaults to
+    8 independently; mode "random" ships only the seeded-projection
+    coefficients (the paper's shared-random-matrix trick), "learned"
+    ships both SVD factors.  For single-direction compression use any
+    other kind with the `lowrank_*` spec fields."""
+
+    DEFAULT_RANK = 8
+
+    def __init__(self, spec: Optional[StrategySpec] = None):
+        spec = spec if spec is not None else StrategySpec(kind="flocora")
+        spec = dataclasses.replace(
+            spec, lowrank_down=spec.lowrank_down or self.DEFAULT_RANK,
+            lowrank_up=spec.lowrank_up or self.DEFAULT_RANK)
+        super().__init__(spec)
+
+
+@register_strategy("two_stage_ortho")
+class TwoStageOrtho(Strategy):
+    """Two-stage sparsified-orthogonal updates (Kim & Choi,
+    arXiv:2505.00333): the A and B factors of every adapter alternate
+    communication phases — even rounds train and upload only the A
+    entries, odd rounds only the B entries (non-LoRA leaves, e.g. a
+    classification head, ride the B phase: `rank_index_map` marks them
+    is_b) — so each upload moves roughly half the vector before
+    sparsification.  Uploads are magnitude Top-K at `density_up` through
+    the selector layer; the delta is zero off the phase mask, so Top-K
+    selects within the active factor with no extra machinery.  After
+    every A phase the server orthogonalizes each aggregated A factor
+    (reduced QR) and folds the triangular factor into B, keeping the
+    adapter product A·B bit-for-bit unchanged in exact arithmetic while
+    renormalizing the basis the next B phase trains against.  Download
+    stays dense (clients need both factors to run the model); compose
+    with `lowrank_down` for download compression."""
+
+    _phase_cache = None
+
+    def _phase_mask(self, ctx: PlanContext) -> jax.Array:
+        assert ctx.is_b is not None, \
+            "two_stage_ortho needs FlatMeta rank metadata"
+        assert ctx.round_idx is not None, \
+            "two_stage_ortho needs PlanContext.round_idx"
+        # one array per round trace (keyed on the fresh-per-round ctx), so
+        # every client's plan shares it and the round function broadcasts
+        # instead of stacking copies
+        if self._phase_cache is None or self._phase_cache[0] is not ctx:
+            is_b = jnp.asarray(ctx.is_b == 1)
+            phase_b = (ctx.round_idx % 2) == 1
+            self._phase_cache = (ctx, jnp.where(phase_b, is_b, ~is_b))
+        return self._phase_cache[1]
+
+    def client_plan(self, m_down, slot, ctx):
+        m_train = self._phase_mask(ctx)
+        return RoundPlan(m_down, m_train,
+                         UploadRule.topk(self.spec.density_up))
+
+    def post_round(self, sstate, flatP, *, P_base, m_down, round_idx,
+                   ctx=None):
+        assert ctx is not None and ctx.meta is not None, \
+            "two_stage_ortho.post_round needs PlanContext.meta"
+        meta = ctx.meta
+
+        def orthogonalize(flat):
+            return meta.flatten(_ortho_lora_pairs(meta.unflatten(flat)))
+
+        was_a_phase = (round_idx % 2) == 0
+        flatP = jax.lax.cond(was_a_phase, orthogonalize, lambda f: f, flatP)
+        return sstate, flatP
+
+
+def _ortho_lora_pairs(tree):
+    """Reduced-QR every {'a', 'b'} LoRA pair in a mirrored tree:
+    a -> Q, b -> R @ b (product-preserving reparameterization; batched
+    over any leading stacked-layer dims)."""
+    if isinstance(tree, dict) and {"a", "b"} <= set(tree) \
+            and not isinstance(tree["a"], dict):
+        a, b = tree["a"], tree["b"]
+        if a.shape[-2] < a.shape[-1]:   # wide A: reduced QR would reshape it
+            return tree
+        q, r = jnp.linalg.qr(a.astype(jnp.float32))
+        return {**tree, "a": q.astype(a.dtype),
+                "b": (r @ b.astype(jnp.float32)).astype(b.dtype)}
+    if isinstance(tree, dict):
+        return {k: _ortho_lora_pairs(v) for k, v in tree.items()}
+    return tree
 
 
 # ---------------------------------------------------------------------------

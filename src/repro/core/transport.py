@@ -4,30 +4,36 @@ A message is a dense-embedded sparse vector plus its accounting metadata;
 a `Pipeline` is an ordered tuple of stages applied inside the (possibly
 vmapped) round function:
 
-    topk-mask / fixed-mask  ->  quantize  ->  [index/bitmap coding]
+    topk-mask / fixed-mask  ->  quantize | lowrank  ->  [coding]
 
-The first two stages transform values on-device; coding never changes
-values — it determines the *wire* size of the message, which
-`CommLedger.record_round` accumulates via `comm.coded_message_bytes`
-(min of index-coded and bitmap-coded forms).
+The value-transforming stages run on-device; coding never changes values
+— it determines the *wire* size of the message, which
+`CommLedger.record_round` accumulates via `comm.coded_message_bytes`.
+Sparse messages code as the min of index-coded and bitmap-coded forms;
+a `LowRankCompress`ed message transmits dense factor matrices whose
+positions are implicit, so it codes as exactly
+`transmitted_entries * value_bytes` (`dense_coded`).
 
 Stages are tiny dataclasses so they can close over traced per-client
 arrays (a client's download mask, its Top-K keep-count) when constructed
 inside `jax.vmap`.  Build pipelines directly, or from a strategy's
 `UploadRule` via `upload_pipeline` / from a download mask via
-`download_pipeline`.
+`download_pipeline`.  Stages are registered like strategies/selectors/
+engines (`@register_stage("lowrank")`, `registered_stages()`), which is
+what the docs gate cross-checks stage names against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+import math
+from typing import Any, Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import quantization as qz
 from repro.core import selectors as sel
-from repro.core.strategies import UploadRule
+from repro.core.strategies import StrategySpec, UploadRule
 
 
 @dataclasses.dataclass
@@ -45,10 +51,48 @@ class Message:
 class Stage:
     """Transport stage protocol: Message -> Message."""
 
+    stage_name: str = "base"
+
     def __call__(self, msg: Message, *, key=None) -> Message:
         raise NotImplementedError
 
+    def wire(self, n: int, value_bits: float, dense: bool
+             ) -> Tuple[float, bool]:
+        """Static mirror of what this stage does to the wire format of an
+        n-entry message: (per-value bit width, dense-coded flag)."""
+        return value_bits, dense
 
+
+_STAGES: Dict[str, Type[Stage]] = {}
+
+
+def register_stage(name: str):
+    """Class decorator: `@register_stage("lowrank")` enters the stage in
+    the transport registry (`registered_stages()`), the lookup table the
+    docs gate validates stage names against."""
+    def deco(cls: Type[Stage]) -> Type[Stage]:
+        assert issubclass(cls, Stage), cls
+        cls.stage_name = name
+        _STAGES[name] = cls
+        return cls
+    return deco
+
+
+def registered_stages() -> Tuple[str, ...]:
+    return tuple(sorted(_STAGES))
+
+
+def resolve_stage(name: str) -> Type[Stage]:
+    """Registered stage name -> Stage class (construct it yourself: stages
+    are configuration-carrying dataclasses, not singletons)."""
+    try:
+        return _STAGES[name]
+    except KeyError:
+        raise KeyError(f"no transport stage registered as {name!r}; "
+                       f"known: {registered_stages()}") from None
+
+
+@register_stage("mask")
 @dataclasses.dataclass
 class MaskSparsify(Stage):
     """Multiply by a fixed mask.  `count_mask=True` bills the mask support
@@ -67,6 +111,7 @@ class MaskSparsify(Stage):
         return dataclasses.replace(msg, values=values, nnz=nnz)
 
 
+@register_stage("topk")
 @dataclasses.dataclass
 class TopKSparsify(Stage):
     """Magnitude Top-K.  Exactly one of `density` (static) or `count`
@@ -87,6 +132,7 @@ class TopKSparsify(Stage):
         return dataclasses.replace(msg, values=values, nnz=nnz)
 
 
+@register_stage("quantize")
 @dataclasses.dataclass
 class Quantize(Stage):
     """Uniform symmetric b-bit quantization of the surviving values
@@ -99,6 +145,112 @@ class Quantize(Stage):
         values = qz.quantize_roundtrip(msg.values, self.bits, key)
         return dataclasses.replace(msg, values=values,
                                    value_bits=float(self.bits))
+
+    def wire(self, n, value_bits, dense):
+        return (float(self.bits) if self.bits else value_bits), dense
+
+
+def _factor_dims(n: int, rows: int = 0) -> Tuple[int, int]:
+    """Near-square (rows, cols) embedding of an n-vector: rows = ceil(√n)
+    unless pinned, cols = ceil(n / rows); the trailing rows*cols - n
+    entries are zero padding."""
+    assert n >= 1, n
+    rows = int(rows) if rows else math.isqrt(n - 1) + 1
+    return rows, -(-n // rows)
+
+
+@register_stage("lowrank")
+@dataclasses.dataclass
+class LowRankCompress(Stage):
+    """FLoCoRA-style low-rank compression of the *message itself*
+    (Grativol et al., arXiv:2406.14082): the flat vector is embedded in a
+    near-square matrix M (`_factor_dims`, zero-padded) and replaced by a
+    rank-`rank` factorization; the receiver reconstructs the product.
+
+    mode "random":  M -> (M Q) Qᵀ for a *seeded* orthonormalized Gaussian
+                    Q (cols × rank).  Both ends regenerate Q from the
+                    shared seed, so only the coefficient matrix M Q crosses
+                    the wire: `rows * rank` transmitted entries.  `fold`
+                    (a traced scalar, e.g. the round index — what the
+                    round loop passes) is folded into the projection key
+                    so the dropped subspace rotates across rounds and the
+                    compression error averages out instead of pinning the
+                    run to one fixed rank-`rank` subspace; `fold=None`
+                    keeps a run-static projection.
+    mode "learned": truncated SVD M ≈ (U_r Σ_r) V_rᵀ.  Both factors cross
+                    the wire: `rank * (rows + cols)` transmitted entries
+                    (Σ folded into the left factor).
+
+    `bits` quantizes the *transmitted factors* (stochastic rounding under a
+    key, like `Quantize`) before reconstruction — this is how quantization
+    composes with low-rank compression on a real wire, where a `Quantize`
+    stage placed after this one would act on the reconstruction the
+    receiver already has.  Factor messages are dense (positions implicit),
+    so they are billed at exactly nnz * value_bytes — no index/bitmap
+    coding (`comm.coded_message_bytes(..., dense=True)`).
+
+    `rank <= 0` and `rank >= min(rows, cols)` (no rank to remove) are
+    no-ops that degrade to a plain `Quantize(bits)`.
+    """
+    rank: int
+    mode: str = "random"                # "random" | "learned"
+    seed: int = 0
+    bits: int = 0                       # factor quantization (0 = f32)
+    rows: int = 0                       # matrix embedding rows (0 = auto)
+    fold: Any = None                    # traced round index (see above)
+
+    def __post_init__(self):
+        assert self.mode in ("random", "learned"), self.mode
+
+    def active(self, n: int) -> bool:
+        rows, cols = _factor_dims(n, self.rows)
+        return 0 < self.rank < min(rows, cols)
+
+    def _projection(self, cols: int) -> jax.Array:
+        key = jax.random.PRNGKey(self.seed)
+        if self.fold is not None:
+            key = jax.random.fold_in(key, self.fold)
+        g = jax.random.normal(key, (cols, self.rank), jnp.float32)
+        q, _ = jnp.linalg.qr(g)         # orthonormal columns
+        return q
+
+    def _quant(self, factor, key):
+        if not self.bits:
+            return factor
+        flat = qz.quantize_roundtrip(factor.reshape(-1), self.bits, key)
+        return flat.reshape(factor.shape)
+
+    def __call__(self, msg: Message, *, key=None) -> Message:
+        n = msg.values.shape[-1]
+        if not self.active(n):
+            if not self.bits:
+                return msg
+            return Quantize(self.bits)(msg, key=key)
+        rows, cols = _factor_dims(n, self.rows)
+        x = msg.values.astype(jnp.float32)
+        if rows * cols != n:
+            x = jnp.pad(x, (0, rows * cols - n))
+        m = x.reshape(rows, cols)
+        if self.mode == "random":
+            q = self._projection(cols)
+            rec = self._quant(m @ q, key) @ q.T
+            sent = rows * self.rank
+        else:
+            u, s, vt = jnp.linalg.svd(m, full_matrices=False)
+            left = u[:, :self.rank] * s[:self.rank]
+            right = vt[:self.rank]
+            key2 = None if key is None else jax.random.fold_in(key, 1)
+            rec = self._quant(left, key) @ self._quant(right, key2)
+            sent = self.rank * (rows + cols)
+        values = rec.reshape(-1)[:n].astype(msg.values.dtype)
+        return dataclasses.replace(
+            msg, values=values, nnz=jnp.asarray(sent, jnp.float32),
+            value_bits=float(self.bits) if self.bits else 32.0)
+
+    def wire(self, n, value_bits, dense):
+        if not self.active(n):
+            return (float(self.bits) if self.bits else value_bits), dense
+        return (float(self.bits) if self.bits else 32.0), True
 
 
 @dataclasses.dataclass
@@ -113,13 +265,24 @@ class Pipeline:
             msg = stage(msg, key=key)
         return msg
 
+    def wire(self, n: int) -> Tuple[float, bool]:
+        """Static wire format of an n-entry message after all stages:
+        (per-value bit width, dense-coded flag).  Dense coding means the
+        transmitted entries carry no positions (low-rank factors), so the
+        ledger bills them at exactly nnz * value_bytes."""
+        bits, dense = 32.0, False
+        for stage in self.stages:
+            bits, dense = stage.wire(n, bits, dense)
+        return bits, dense
+
     @property
     def value_bits(self) -> float:
-        """Wire width per value after all stages (32 unless quantized)."""
+        """Wire width per value after all stages (32 unless a stage
+        narrows it); shape-independent — use `wire(n)` when a stage's
+        effect depends on the message length (`LowRankCompress`)."""
         bits = 32.0
         for stage in self.stages:
-            if isinstance(stage, Quantize) and stage.bits:
-                bits = float(stage.bits)
+            bits, _ = stage.wire(1 << 30, bits, False)
         return bits
 
     @property
@@ -127,20 +290,64 @@ class Pipeline:
         return self.value_bits / 8.0
 
 
-def download_pipeline(mask, quant_bits: int = 0) -> Pipeline:
-    """Server -> client: mask the weight vector, optionally quantize."""
+def lowrank_stage(spec: StrategySpec, direction: str, *,
+                  fold=None) -> Optional[LowRankCompress]:
+    """The spec-configured `LowRankCompress` stage for one message
+    direction ("down" | "up"), or None when the spec does not opt in.
+    The stage absorbs the direction's quantization bits (factors are what
+    a real wire quantizes), the two directions derive distinct projection
+    seeds from `lowrank_seed`, and the round loop passes the traced round
+    index as `fold` so random-mode projections refresh every round."""
+    assert direction in ("down", "up"), direction
+    down = direction == "down"
+    rank = spec.lowrank_down if down else spec.lowrank_up
+    if rank <= 0:
+        return None
+    return LowRankCompress(
+        rank=rank, mode=spec.lowrank_mode,
+        seed=2 * spec.lowrank_seed + (0 if down else 1),
+        bits=spec.quant_bits_down if down else spec.quant_bits_up,
+        fold=fold)
+
+
+def wire_format(spec: StrategySpec, p_len: int, direction: str
+                ) -> Tuple[float, bool]:
+    """(value_bytes, dense_coded) for one direction's messages under
+    `spec`'s transport configuration — the single source the `CommLedger`
+    (via `Experiment.build_ledger`) and the async engine's wire-time
+    billing both read, so billed seconds and billed bytes cannot drift."""
+    lr = lowrank_stage(spec, direction)
+    quant = spec.quant_bits_down if direction == "down" else spec.quant_bits_up
+    stages: Tuple[Stage, ...] = ()
+    if lr is not None:
+        stages = (lr,)
+    elif quant:
+        stages = (Quantize(quant),)
+    bits, dense = Pipeline(stages).wire(p_len)
+    return bits / 8.0, dense
+
+
+def download_pipeline(mask, quant_bits: int = 0, *,
+                      lowrank: Optional[LowRankCompress] = None) -> Pipeline:
+    """Server -> client: mask the weight vector, then optionally compress
+    (`lowrank` carries its own factor quantization) or quantize."""
     stages: Tuple[Stage, ...] = (MaskSparsify(mask, count_mask=True),)
-    if quant_bits:
+    if lowrank is not None:
+        stages += (lowrank,)
+    elif quant_bits:
         stages += (Quantize(quant_bits),)
     return Pipeline(stages)
 
 
 def upload_pipeline(rule: UploadRule, quant_bits: int = 0, *,
                     selector: sel.SelectorLike = "exact",
-                    count=None) -> Pipeline:
+                    count=None,
+                    lowrank: Optional[LowRankCompress] = None) -> Pipeline:
     """Client -> server from a strategy's `UploadRule`.  Pass `count` to
     override a topk rule's static density with a (traced) keep-count;
-    `selector` picks the Top-K implementation (`core.selectors`)."""
+    `selector` picks the Top-K implementation (`core.selectors`);
+    `lowrank` appends a `LowRankCompress` stage (which then also owns the
+    direction's quantization)."""
     if rule.mode == "topk":
         if count is not None:
             stage: Stage = TopKSparsify(count=count, selector=selector)
@@ -149,6 +356,8 @@ def upload_pipeline(rule: UploadRule, quant_bits: int = 0, *,
     else:
         stage = MaskSparsify(rule.mask)
     stages: Tuple[Stage, ...] = (stage,)
-    if quant_bits:
+    if lowrank is not None:
+        stages += (lowrank,)
+    elif quant_bits:
         stages += (Quantize(quant_bits),)
     return Pipeline(stages)

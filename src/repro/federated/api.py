@@ -227,14 +227,17 @@ class Experiment:
         return trainable, fedround.FlatMeta.of(trainable), self.lora.scale
 
     def build_ledger(self, p_len: int) -> comm_mod.CommLedger:
-        """Ledger whose per-value wire widths come from the transport
-        pipelines' quantization stages."""
+        """Ledger whose per-value wire widths and coding (sparse
+        index/bitmap vs dense low-rank factors) come from the spec's
+        transport configuration (`transport.wire_format`)."""
         spec = self.strategy.spec
-        down = tp.Pipeline((tp.Quantize(spec.quant_bits_down),))
-        up = tp.Pipeline((tp.Quantize(spec.quant_bits_up),))
+        down_vb, down_dense = tp.wire_format(spec, p_len, "down")
+        up_vb, up_dense = tp.wire_format(spec, p_len, "up")
         return comm_mod.CommLedger(total_params=p_len,
-                                   down_value_bytes=down.value_bytes,
-                                   up_value_bytes=up.value_bytes)
+                                   down_value_bytes=down_vb,
+                                   up_value_bytes=up_vb,
+                                   down_dense=down_dense,
+                                   up_dense=up_dense)
 
     # --- the experiment loop ----------------------------------------------
     def _default_data(self) -> eng.DataProvider:

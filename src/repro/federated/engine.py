@@ -52,6 +52,7 @@ import numpy as np
 from repro.core import comm as comm_mod
 from repro.core import fedround
 from repro.core import strategies as st
+from repro.core import transport as tp
 from repro.federated import async_clock as ac
 from repro.models.config import FederatedConfig
 
@@ -671,8 +672,12 @@ class AsyncEngine(Engine):
                 "allow_version_repeats=False")
         prof = self.profile
         spec = plan.strategy.spec
-        down_vb = (spec.quant_bits_down or 32) / 8.0
-        up_vb = (spec.quant_bits_up or 32) / 8.0
+        # per-direction wire format from the transport config — the same
+        # (value_bytes, dense-coded) pair the CommLedger bills, so job
+        # durations and ledger bytes stay mutually consistent for every
+        # spec (quantized, low-rank-compressed, or plain f32 sparse)
+        down_vb, down_dense = tp.wire_format(spec, meta.p_len, "down")
+        up_vb, up_dense = tp.wire_format(spec, meta.p_len, "up")
         base_key = jax.random.key(plan.seed + 2)
         server_fn = jax.jit(
             fedround.make_server_phase_fn(meta, fed, plan.strategy))
@@ -720,10 +725,10 @@ class AsyncEngine(Engine):
             for i, c in enumerate(slots):
                 dn, un = float(down_nnzs[i]), float(up_nnzs[i])
                 dur = (prof.down_time(c, comm_mod.coded_message_bytes(
-                           int(dn), meta.p_len, 1, down_vb))
+                           int(dn), meta.p_len, 1, down_vb, down_dense))
                        + prof.compute_time(c, fed.local_steps)
                        + prof.up_time(c, comm_mod.coded_message_bytes(
-                           int(un), meta.p_len, 1, up_vb)))
+                           int(un), meta.p_len, 1, up_vb, up_dense)))
                 clock.submit(ac.Job(
                     slot=c, version=version, seq=clock.next_seq(),
                     t_start=clock.now, t_finish=clock.now + dur,

@@ -29,6 +29,17 @@ def _exact(spec: StrategySpec) -> bool:
     return spec.selector == "exact"
 
 
+def _threshold_exact_dynamic(flat_abs, density):
+    """Verbatim copy of the seed's `sparsity.threshold_exact_dynamic`
+    (deleted from the live module when `adapter_lth`'s dynamic prune moved
+    onto the selector layer): sort-based |x| threshold with a traced
+    density."""
+    n = flat_abs.shape[-1]
+    k = jnp.clip(jnp.round(n * density).astype(jnp.int32), 1, n - 1)
+    srt = jnp.sort(flat_abs, axis=-1)
+    return jnp.take(srt, n - k, axis=-1)
+
+
 # --- seed strategies.py dispatch -------------------------------------------
 
 def init_strategy_state(spec: StrategySpec, p_len: int):
@@ -93,7 +104,7 @@ def update_strategy_state(spec: StrategySpec, sstate, flatP, round_idx):
         def prune(_):
             dens = jnp.maximum(sstate["density"] * spec.lth_keep, 1e-4)
             masked = jnp.where(sstate["mask"], jnp.abs(flatP), 0.0)
-            thr = sp.threshold_exact_dynamic(masked, dens)
+            thr = _threshold_exact_dynamic(masked, dens)
             mask = masked >= jnp.maximum(thr, 1e-38)
             return {"mask": mask, "density": dens}
 

@@ -3,8 +3,8 @@
   * sync-equivalence: with full concurrency, a full buffer, and a uniform
     `ClientSystemProfile` (the defaults), the async backend reproduces
     SimEngine bit for bit — history records, final weights, strategy
-    state, eval accuracy, and ledger totals — for all 8 registered
-    strategy kinds;
+    state, eval accuracy, and ledger totals — for the 8 paper strategy
+    kinds plus the `flocora` and `two_stage_ortho` baselines;
   * staleness-weight and system-profile unit math;
   * event-queue checkpoint/resume: a genuinely-async run (small buffer,
     tiered speeds, jobs mid-flight at the snapshot) resumes bit-exactly;
@@ -29,6 +29,9 @@ N_CLIENTS = 4
 ROUNDS = 4
 EVAL_EVERY = 2
 
+# the last two entries enroll the PR 5 baselines (low-rank message
+# compression, the two-stage sparsified-orthogonal schedule) in the
+# identical sync-equivalence anchor as the 8 paper kinds
 KIND_KWARGS = {
     "lora": {},
     "flasc": {},
@@ -38,6 +41,8 @@ KIND_KWARGS = {
     "adapter_lth": dict(lth_prune_every=2, lth_keep=0.9),
     "ffa": {},
     "hetlora": dict(hetlora_ranks=(1, 2, 3, 4)),
+    "flocora": dict(lowrank_down=4, lowrank_up=4),
+    "two_stage_ortho": {},
 }
 
 # keys only the async engine writes into history records

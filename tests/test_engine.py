@@ -2,7 +2,7 @@
 
   * SimEngine vs the frozen pre-refactor `Experiment.run()` loop —
     bit-identical round outputs, final weights, strategy state, and
-    ledger totals for all 8 registered strategy kinds;
+    ledger totals for the 8 legacy strategy kinds;
   * ShardedEngine end-to-end on 1 CPU device (per-round and scan-chunked),
     agreeing with SimEngine on ledger totals and losses;
   * checkpoint round-trip: save mid-run via CheckpointCallback + StopRun,
@@ -158,6 +158,25 @@ def test_sharded_engine_end_to_end_single_device(task, rounds_per_call):
     # eval rounds must land at the cadence even when chunked
     assert [h["round"] for h in sh.history if "acc" in h] == \
         [h["round"] for h in sim.history if "acc" in h]
+    assert sh.final_acc == pytest.approx(sim.final_acc, abs=1e-6)
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("flocora", dict(lowrank_down=4, lowrank_up=4)),
+    ("two_stage_ortho", {}),
+])
+def test_baseline_kinds_run_under_sharded_engine(task, kind, kw):
+    """The two named baselines (low-rank message compression / two-stage
+    sparsified-orthogonal updates) run under the SPMD backend with zero
+    engine edits: same ledger totals and history as SimEngine."""
+    sim = _experiment(task, kind, **kw).run()
+    sh = _experiment(task, kind, **kw).with_engine("sharded").run()
+    assert [h["round"] for h in sh.history] == \
+        [h["round"] for h in sim.history]
+    for a, b in zip(sh.history, sim.history):
+        assert a["loss"] == pytest.approx(b["loss"], rel=1e-5)
+    for attr in LEDGER_ATTRS:
+        assert getattr(sh.ledger, attr) == getattr(sim.ledger, attr), attr
     assert sh.final_acc == pytest.approx(sim.final_acc, abs=1e-6)
 
 

@@ -1,5 +1,7 @@
 """FLASC core invariants: sparsity selectors, strategy masks, the federated
 round, DP, and communication accounting (unit + hypothesis properties)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -140,6 +142,128 @@ def test_sparse_adapter_freezes_after_first_round():
     sstate2, _ = strat.post_round(sstate, flatP * 2, P_base=None, m_down=None,
                                   round_idx=jnp.asarray(1))
     assert bool(jnp.all(sstate2["mask"] == sstate["mask"]))  # frozen
+
+
+@pytest.mark.fast
+def test_adapter_lth_prune_selector_parity():
+    """The dynamic-density prune routes through the selector layer: exact
+    keeps exactly k entries, histogram and pallas stay bit-identical to
+    each other, and pruned (zeroed) entries never resurrect."""
+    p_len = 1000
+    flatP = jax.random.normal(jax.random.key(0), (p_len,))
+    masks = {}
+    for selector in ("exact", "histogram", "pallas"):
+        strat = st.resolve(st.StrategySpec(kind="adapter_lth",
+                                           lth_prune_every=1, lth_keep=0.5,
+                                           selector=selector))
+        sstate = strat.init_state(p_len)
+        sstate, flat2 = strat.post_round(sstate, flatP, P_base=None,
+                                         m_down=None,
+                                         round_idx=jnp.asarray(1))
+        masks[selector] = np.asarray(sstate["mask"])
+        # permanent pruning: the surviving vector is supported on the mask
+        assert bool(jnp.all((flat2 != 0) <= sstate["mask"]))
+    assert masks["exact"].sum() == 500          # exactly k
+    np.testing.assert_array_equal(masks["histogram"], masks["pallas"])
+    assert masks["histogram"].sum() >= 500      # threshold family: >= k
+
+
+@pytest.mark.fast
+def test_two_stage_ortho_phase_masks_alternate():
+    trainable = {"lora": {"l": {"a": jnp.ones((8, 4)),
+                                "b": jnp.zeros((4, 8))}}}
+    meta = fedround.FlatMeta.of(trainable)
+    strat = st.resolve(st.StrategySpec(kind="two_stage_ortho"))
+    m_down = jnp.ones((meta.p_len,), bool)
+    ctx0 = meta.plan_context(2, round_idx=jnp.asarray(0))
+    plan0 = strat.client_plan(m_down, 0, ctx0)
+    assert plan0.upload.mode == "topk"
+    assert int(jnp.sum(plan0.m_train)) == 8 * 4          # A entries only
+    assert bool(jnp.all(plan0.m_down))                   # download is dense
+    # one shared mask per round: the second client reuses the same array
+    assert strat.client_plan(m_down, 1, ctx0).m_train is plan0.m_train
+    ctx1 = meta.plan_context(2, round_idx=jnp.asarray(1))
+    plan1 = strat.client_plan(m_down, 0, ctx1)
+    assert int(jnp.sum(plan1.m_train)) == 4 * 8          # B entries only
+    assert not bool(jnp.any(plan0.m_train & plan1.m_train))
+
+
+@pytest.mark.fast
+def test_two_stage_ortho_qr_preserves_adapter_product():
+    a0 = 0.3 * jax.random.normal(jax.random.key(4), (16, 4))
+    b0 = 0.2 * jax.random.normal(jax.random.key(5), (4, 8))
+    trainable = {"lora": {"l": {"a": a0, "b": b0}}}
+    meta = fedround.FlatMeta.of(trainable)
+    strat = st.resolve(st.StrategySpec(kind="two_stage_ortho"))
+    flatP = meta.flatten(trainable)
+    # even round (A phase just ended): A comes back orthonormal, A@B intact
+    ctx = meta.plan_context(2, round_idx=jnp.asarray(0))
+    _, flat2 = strat.post_round({}, flatP, P_base=None, m_down=None,
+                                round_idx=jnp.asarray(0), ctx=ctx)
+    pair = meta.unflatten(flat2)["lora"]["l"]
+    np.testing.assert_allclose(np.asarray(pair["a"].T @ pair["a"]),
+                               np.eye(4), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pair["a"] @ pair["b"]),
+                               np.asarray(a0 @ b0), atol=1e-5)
+    # odd round (B phase): weights pass through untouched
+    ctx1 = meta.plan_context(2, round_idx=jnp.asarray(1))
+    _, flat3 = strat.post_round({}, flatP, P_base=None, m_down=None,
+                                round_idx=jnp.asarray(1), ctx=ctx1)
+    np.testing.assert_array_equal(np.asarray(flat3), np.asarray(flatP))
+
+
+@pytest.mark.fast
+def test_flocora_kind_defaults_lowrank_ranks():
+    strat = st.resolve("flocora")
+    assert strat.spec.lowrank_down == strat.spec.lowrank_up == 8
+    # each direction defaults independently (the method compresses both:
+    # tuning one rank must not silently disable the other direction), and
+    # the defaulted spec round-trips through the checkpoint dict form
+    # without re-defaulting surprises
+    custom = st.resolve(st.StrategySpec(kind="flocora", lowrank_up=4))
+    assert (custom.spec.lowrank_down, custom.spec.lowrank_up) == (8, 4)
+    sj = dataclasses.asdict(strat.spec)
+    for k in ("client_densities", "hetlora_ranks"):
+        sj[k] = tuple(sj[k])
+    back = st.resolve(st.StrategySpec(**sj))
+    assert back.spec == strat.spec
+
+
+@pytest.mark.fast
+def test_post_round_ctx_is_optional_for_old_overrides():
+    """Out-of-tree strategies written against the pre-ctx hook signature
+    still run: the round loop's `call_post_round` passes ctx only to
+    overrides that accept it."""
+    class OldStyle(st.Strategy):
+        kind = "lora"
+
+        def post_round(self, sstate, flatP, *, P_base, m_down, round_idx):
+            return sstate, flatP + 1.0
+
+    flatP = jnp.zeros((4,))
+    ctx = st.PlanContext(p_len=4, n_clients=1)
+    _, out = st.call_post_round(OldStyle(st.StrategySpec(kind="lora")), {},
+                                flatP, P_base=None, m_down=None,
+                                round_idx=0, ctx=ctx)
+    np.testing.assert_array_equal(np.asarray(out), np.ones(4))
+    # ctx-aware overrides (the built-ins) receive the real context
+    strat = st.resolve(st.StrategySpec(kind="two_stage_ortho"))
+    trainable = {"lora": {"l": {"a": jnp.ones((4, 2)),
+                                "b": jnp.ones((2, 4))}}}
+    meta = fedround.FlatMeta.of(trainable)
+    _, out2 = st.call_post_round(strat, {}, meta.flatten(trainable),
+                                 P_base=None, m_down=None,
+                                 round_idx=jnp.asarray(1),
+                                 ctx=meta.plan_context(1, round_idx=1))
+    assert out2.shape == (meta.p_len,)
+
+
+@pytest.mark.fast
+def test_spec_rejects_bad_lowrank_config():
+    with pytest.raises(ValueError, match="lowrank_mode"):
+        st.StrategySpec(kind="flasc", lowrank_mode="svdish")
+    with pytest.raises(ValueError, match="lowrank ranks"):
+        st.StrategySpec(kind="flasc", lowrank_up=-1)
 
 
 # ---------------------------------------------------------------------------

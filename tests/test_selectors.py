@@ -8,7 +8,7 @@ Covers, per ISSUE 4:
     and vmapped *traced* per-client keep-counts;
   * tie-tolerance agreement of `pallas`/`histogram` with `exact`;
   * the `StrategySpec.selector` field: deprecation of `exact_topk=`,
-    checkpoint-shaped round-trip, and all 8 strategy kinds running one
+    checkpoint-shaped round-trip, and every registered strategy kind running one
     federated round under every selector.
 """
 import dataclasses
@@ -261,7 +261,7 @@ def test_selector_spec_checkpoint_roundtrip():
 
 
 # ---------------------------------------------------------------------------
-# strategy level: all 8 kinds x all selectors through one federated round
+# strategy level: every registered kind x all selectors through one round
 # ---------------------------------------------------------------------------
 
 def _tiny_problem():
@@ -293,8 +293,9 @@ def _one_round(spec, meta, fed, loss_of, batches, flat0):
 @pytest.mark.parametrize("selector", SELECTORS)
 def test_all_kinds_run_under_every_selector(selector):
     meta, fed, loss_of, batches, flat0 = _tiny_problem()
-    kind_kw = {kind: {} for kind in st.KINDS}
+    kind_kw = {kind: {} for kind in st.registered_kinds()}
     kind_kw["hetlora"] = dict(hetlora_ranks=(1, 2, 3, 5))
+    kind_kw["flocora"] = dict(lowrank_down=2, lowrank_up=2)
     for kind, kw in kind_kw.items():
         spec = st.StrategySpec(kind=kind, selector=selector, **kw)
         flatP, server, sstate, m = _one_round(spec, meta, fed, loss_of,
