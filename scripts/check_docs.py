@@ -10,13 +10,17 @@ Checks, over README.md and every docs/*.md:
      `pkg.module`) resolve against a static AST index of `src/repro` —
      no imports, so the check is fast and jax-free;
   3. *registry names* resolve against the live registries, extracted
-     statically from the `@register_strategy/selector/engine/stage`
-     decorators: every `kind="..."` / `selector="..."` /
-     `with_engine("...")` / `BENCH_ENGINE=...` mention (prose or fenced),
-     and every first-column backticked name in a table whose heading or
-     intro line names a registry (strategies, engines, selectors,
-     transport stages, baselines) — so docs can't drift when a
-     registered name changes;
+     statically from the `@register_strategy/selector/engine/stage/rule`
+     decorators (by `tools/reprolint/astindex.py` — the same indexer the
+     lint rules use, so the two gates cannot disagree): every
+     `kind="..."` / `selector="..."` / `with_engine("...")` /
+     `BENCH_ENGINE=...` / `reprolint: disable=...` mention (prose or
+     fenced), and every first-column backticked name in a table whose
+     heading or intro line names a registry (strategies, engines,
+     selectors, transport stages, baselines, reprolint rules) — so docs
+     can't drift when a registered name changes; the reprolint rule
+     table in docs/analysis.md must also be *complete* (every
+     registered rule documented);
   4. `examples/quickstart.py` still runs (QUICK=1 smoke mode), so the
      README's copy-paste path can't rot, and every ```python fence in
      `docs/baselines.md` executes (QUICK=1) so the per-baseline snippets
@@ -27,7 +31,6 @@ with a per-failure listing when anything is broken.
 """
 from __future__ import annotations
 
-import ast
 import os
 import re
 import subprocess
@@ -35,6 +38,10 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")
+
+sys.path.insert(0, ROOT)    # tools/ is a repo-root package
+from tools.reprolint.astindex import (  # noqa: E402
+    REGISTER_FUNCS, build_index, rule_names)
 
 PATH_SUFFIXES = (".py", ".md", ".sh", ".json", ".txt", ".ini")
 # bare filenames with these suffixes are run-time artifacts, not repo files
@@ -44,78 +51,8 @@ EXTERNAL_ROOTS = {"jax", "jnp", "np", "numpy", "os", "json", "heapq",
                   "dataclasses", "pytest"}
 
 
-# decorator name -> registry it populates (extracted statically: the gate
-# stays import-free, so renaming a registered kind breaks the docs check
-# even on a box that cannot import jax)
-REGISTER_FUNCS = {"register_strategy": "strategies",
-                  "register_selector": "selectors",
-                  "register_engine": "engines",
-                  "register_stage": "stages"}
-
-
-def _registered_names(node):
-    """(registry, name) for each register_* decorator on a ClassDef."""
-    for deco in getattr(node, "decorator_list", ()):
-        if isinstance(deco, ast.Call) and isinstance(deco.func, ast.Name) \
-                and deco.func.id in REGISTER_FUNCS and deco.args \
-                and isinstance(deco.args[0], ast.Constant) \
-                and isinstance(deco.args[0].value, str):
-            yield REGISTER_FUNCS[deco.func.id], deco.args[0].value
-
-
-def build_index():
-    """(module index, registries): the dotted-reference index plus
-    {"strategies"/"selectors"/"engines"/"stages": set of registered
-    names}."""
-    index = {}
-    registries = {r: set() for r in REGISTER_FUNCS.values()}
-    for dirpath, _, files in os.walk(os.path.join(SRC, "repro")):
-        for fname in files:
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fname)
-            mod = os.path.relpath(path, SRC)[:-3].replace(os.sep, ".")
-            if mod.endswith(".__init__"):
-                mod = mod[: -len(".__init__")]
-            with open(path) as f:
-                tree = ast.parse(f.read(), filename=path)
-            symbols, classes = set(), {}
-            for node in tree.body:
-                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                    symbols.add(node.name)
-                elif isinstance(node, ast.ClassDef):
-                    for registry, rname in _registered_names(node):
-                        registries[registry].add(rname)
-                    attrs = set()
-                    for sub in node.body:
-                        if isinstance(sub, (ast.FunctionDef,
-                                            ast.AsyncFunctionDef)):
-                            attrs.add(sub.name)
-                            # instance attrs: self.x = ... anywhere inside
-                            for stmt in ast.walk(sub):
-                                for t in getattr(stmt, "targets",
-                                                 [getattr(stmt, "target",
-                                                          None)]):
-                                    if isinstance(t, ast.Attribute) and \
-                                            isinstance(t.value, ast.Name) \
-                                            and t.value.id == "self":
-                                        attrs.add(t.attr)
-                        elif isinstance(sub, ast.AnnAssign) and \
-                                isinstance(sub.target, ast.Name):
-                            attrs.add(sub.target.id)
-                        elif isinstance(sub, ast.Assign):
-                            attrs.update(t.id for t in sub.targets
-                                         if isinstance(t, ast.Name))
-                    classes[node.name] = attrs
-                    symbols.add(node.name)
-                elif isinstance(node, ast.AnnAssign) and \
-                        isinstance(node.target, ast.Name):
-                    symbols.add(node.target.id)
-                elif isinstance(node, ast.Assign):
-                    symbols.update(t.id for t in node.targets
-                                   if isinstance(t, ast.Name))
-            index[mod] = {"symbols": symbols, "classes": classes}
-    return index, registries
+# registry extraction lives in tools/reprolint/astindex (shared with the
+# lint rules); this gate only layers the docs-side pattern matching on top
 
 
 def _tail_in_module(parts, info):
@@ -180,6 +117,8 @@ REGISTRY_REF_RES = (
     (re.compile(r'resolve_engine\("(\w+)"'), "engines"),
     (re.compile(r"BENCH_ENGINE=([a-z_]+)"), "engines"),
     (re.compile(r'resolve_stage\("(\w+)"'), "stages"),
+    # suppression comments name rules (comma-separated; 'all' is builtin)
+    (re.compile(r"reprolint:\s*disable=([\w,-]+)"), "rules"),
 )
 # a table whose nearest heading/intro names one of these gets its
 # first-column backticked names checked against the mapped registries
@@ -188,8 +127,11 @@ TABLE_KEYWORDS = (("selector", ("selectors",)),
                   ("transport stage", ("stages",)),
                   ("strateg", ("strategies",)),
                   ("kind", ("strategies",)),
-                  ("baseline", ("strategies", "stages")))
-TABLE_NAME_RE = re.compile(r"^\|\s*`([a-z][a-z0-9_]*)`")
+                  ("baseline", ("strategies", "stages")),
+                  # 'reprolint', not bare 'rule': the transport docs say
+                  # "upload rule" in prose and must not bind to this
+                  ("reprolint", ("rules",)))
+TABLE_NAME_RE = re.compile(r"^\|\s*`([a-z][a-z0-9_-]*)`")
 
 
 def _table_registries(context: str):
@@ -211,16 +153,18 @@ def check_registry_names(md_path, registries):
     # a doc that *registers* an example kind in a fence may then refer to
     # it: those names are locally valid, everything else must be live
     registries = {r: set(names) for r, names in registries.items()}
-    for m in re.finditer(r'@register_(strategy|selector|engine|stage)'
-                         r'\("(\w+)"\)', text):
+    registries["rules"].add("all")      # `disable=all` is builtin
+    for m in re.finditer(r'@register_(strategy|selector|engine|stage|rule)'
+                         r'\("([\w-]+)"\)', text):
         registries[REGISTER_FUNCS["register_" + m.group(1)]].add(m.group(2))
     for pat, registry in REGISTRY_REF_RES:
-        for name in pat.findall(text):
-            if name not in registries[registry]:
-                failures.append(
-                    f"{rel}: `{name}` not a registered "
-                    f"{registry[:-1] if registry != 'strategies' else 'strategy'}"
-                    f" (known: {sorted(registries[registry])})")
+        for match in pat.findall(text):
+            for name in match.split(","):   # disable=a,b lists several
+                if name and name not in registries[registry]:
+                    failures.append(
+                        f"{rel}: `{name}` not a registered "
+                        f"{registry[:-1] if registry != 'strategies' else 'strategy'}"
+                        f" (known: {sorted(registries[registry])})")
     heading, intro = "", ""
     # table scan runs on prose only: fenced code must neither register as
     # tables nor leak 'engine'/'selector' words into the intro context
@@ -245,6 +189,23 @@ def check_registry_names(md_path, registries):
             failures.append(f"{rel}: table name `{name}` not registered in "
                             f"{'/'.join(regs)}")
     return failures
+
+
+def check_rule_table_complete(md_path, registries):
+    """docs/analysis.md is the reprolint reference: every registered
+    rule must appear as a first-column backticked table name there (the
+    per-mention direction is covered by check_registry_names)."""
+    rel = os.path.relpath(md_path, ROOT)
+    if not os.path.exists(md_path):
+        return [f"{rel}: missing (the reprolint rule reference is part "
+                "of the gate)"]
+    with open(md_path) as f:
+        documented = {m.group(1) for m in
+                      (TABLE_NAME_RE.match(line.strip())
+                       for line in f) if m}
+    missing = sorted(registries["rules"] - documented)
+    return [f"{rel}: registered lint rule `{name}` has no row in the "
+            "rule table" for name in missing]
 
 
 def check_file(md_path, index):
@@ -329,7 +290,10 @@ def run_doc_snippets(md_path):
 
 
 def main(argv):
-    index, registries = build_index()
+    index, registries = build_index(SRC)
+    # the lint-rule registry lives under tools/, not src/repro
+    registries["rules"] |= rule_names(
+        os.path.join(ROOT, "tools", "reprolint"))
     md_files = [os.path.join(ROOT, "README.md")]
     docs_dir = os.path.join(ROOT, "docs")
     md_files += sorted(os.path.join(docs_dir, f)
@@ -338,6 +302,8 @@ def main(argv):
     for md in md_files:
         failures += check_file(md, index)
         failures += check_registry_names(md, registries)
+    failures += check_rule_table_complete(
+        os.path.join(docs_dir, "analysis.md"), registries)
     if "--no-run" not in argv:
         failures += smoke_quickstart()
         failures += run_doc_snippets(os.path.join(docs_dir, "baselines.md"))

@@ -1,16 +1,33 @@
 #!/usr/bin/env bash
-# Fast CI signal: the fast tier-1 subset (strategy-registry
-# equivalence, sparsity + Top-K selector layer incl. the interpret-mode
-# pallas parity/contract tests from tests/test_selectors.py and the
-# exact_topk deprecation check, communication ledger, engine
-# registry/callback/chunking units from tests/test_engine.py and
-# tests/test_async_engine.py) — everything tagged @pytest.mark.fast —
-# followed by the docs gate (scripts/check_docs.py: README/docs code
-# references must resolve, examples/quickstart.py must run).  The full
-# tier-1 suite (ROADMAP.md) still covers the slow model-training paths.
+# Fast CI signal, in dependency-free-first order:
+#
+#   1. repro-lint (tools/reprolint, docs/analysis.md): the AST
+#      invariant gate — tracer hygiene, PRNG rotation, bit-exact
+#      reductions, registry contracts, pallas kernel contracts,
+#      donation safety.  Pure stdlib, sub-second; findings must exactly
+#      match tools/reprolint/baseline.json.  The JSON artifact lands in
+#      experiments/reprolint.json (git-ignored).
+#   2. pyright (scripts/typecheck.sh) over src/repro/core — skipped
+#      with a notice when pyright is not installed.
+#   3. the fast tier-1 subset (strategy-registry equivalence, sparsity
+#      + Top-K selector layer incl. the interpret-mode pallas
+#      parity/contract tests from tests/test_selectors.py and the
+#      exact_topk deprecation check, communication ledger, engine
+#      registry/callback/chunking units from tests/test_engine.py and
+#      tests/test_async_engine.py, the reprolint rule fixtures) —
+#      everything tagged @pytest.mark.fast.
+#   4. the docs gate (scripts/check_docs.py: README/docs code
+#      references and registry tables must resolve,
+#      examples/quickstart.py must run).
+#
+# The full tier-1 suite (ROADMAP.md) still covers the slow
+# model-training paths.
 #
 #   scripts/ci_fast.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
+mkdir -p experiments
+python -m tools.reprolint src tests --json experiments/reprolint.json
+scripts/typecheck.sh
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m fast "$@"
 python scripts/check_docs.py

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Optional static type gate: pyright in basic mode over src/repro/core/
+# (pyrightconfig.json).  The CI container does not ship node/pyright, so
+# this skips with a notice when the binary is absent — advisory there,
+# binding on dev boxes that have it installed.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+if ! command -v pyright >/dev/null 2>&1; then
+    echo "typecheck: pyright not installed — skipping (see pyrightconfig.json)"
+    exit 0
+fi
+pyright --project pyrightconfig.json "$@"

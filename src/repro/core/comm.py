@@ -67,11 +67,13 @@ class CommLedger:
                else [down_nnz] * n_clients)
         upm = (up_per_message if up_per_message is not None
                else [up_nnz_total / max(n_clients, 1)] * n_clients)
-        self.down_coded += sum(
+        # builtin sum() is fine here — and only here — because byte counts
+        # are exact integers: no association-dependent rounding to pin down
+        self.down_coded += sum(  # reprolint: disable=host-reduction -- integer bytes
             coded_message_bytes(int(v), self.total_params, 1,
                                 self.down_value_bytes, self.down_dense)
             for v in dpm)
-        self.up_coded += sum(
+        self.up_coded += sum(  # reprolint: disable=host-reduction -- integer bytes
             coded_message_bytes(int(v), self.total_params, 1,
                                 self.up_value_bytes, self.up_dense)
             for v in upm)

@@ -241,7 +241,11 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
             raise NotImplementedError(
                 f"{strat.kind}: non-uniform Strategy.aggregate is "
                 "unsupported with DP clipping (dp_clip > 0)")
-        key = rng if rng is not None else jax.random.key(0)
+        # the fallback key must still rotate with the round: a bare
+        # key(0) replays the identical noise draw every round, which is
+        # not DP — it is a fixed bias the server optimizer learns around
+        key = (rng if rng is not None
+               else jax.random.fold_in(jax.random.key(0), round_idx))
         pseudo_grad, _ = dp_mod.dp_aggregate(deltas, fed.dp_clip, fed.dp_noise, key)
     else:
         pseudo_grad = strat.aggregate(deltas, ctx)

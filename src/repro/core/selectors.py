@@ -41,7 +41,8 @@ pallas path falls back to interpret mode.
 """
 from __future__ import annotations
 
-from typing import Callable, ClassVar, Dict, Tuple, Type, Union
+from typing import (Callable, ClassVar, Dict, Optional, Tuple,
+                    Type, Union)
 
 import jax
 import jax.numpy as jnp
@@ -197,7 +198,8 @@ class PallasSelector(Selector):
 
     _INTERPRET_BLOCK_CAP = 1 << 26          # 256 MiB f32 single block
 
-    def __init__(self, block=None, iters: int = 24, interpret=None):
+    def __init__(self, block: Optional[int] = None, iters: int = 24,
+                 interpret: Optional[bool] = None):
         self.block = block
         self.iters = iters
         self.interpret = interpret

@@ -452,7 +452,7 @@ class FFALoRA(Strategy):
     matrices (A frozen at init) — halves upload and fixes DP aggregation
     bias."""
 
-    _mask_cache = None
+    _mask_cache: Optional[Tuple[PlanContext, jax.Array]] = None
 
     def client_plan(self, m_down, slot, ctx):
         assert ctx.is_b is not None, "ffa needs FlatMeta rank metadata"
@@ -547,7 +547,7 @@ class TwoStageOrtho(Strategy):
     stays dense (clients need both factors to run the model); compose
     with `lowrank_down` for download compression."""
 
-    _phase_cache = None
+    _phase_cache: Optional[Tuple[PlanContext, jax.Array]] = None
 
     def _phase_mask(self, ctx: PlanContext) -> jax.Array:
         assert ctx.is_b is not None, \

@@ -110,6 +110,12 @@ class MaskSparsify(Stage):
             nnz = jnp.sum((values != 0).astype(jnp.float32))
         return dataclasses.replace(msg, values=values, nnz=nnz)
 
+    def wire(self, n, value_bits, dense):
+        # identity on purpose: masking changes nnz, never the per-value
+        # width or coding — stated explicitly so the ledger contract is
+        # authored, not inherited
+        return value_bits, dense
+
 
 @register_stage("topk")
 @dataclasses.dataclass
@@ -130,6 +136,11 @@ class TopKSparsify(Stage):
         else:
             values, nnz = s.sparsify_by_count(msg.values, self.count)
         return dataclasses.replace(msg, values=values, nnz=nnz)
+
+    def wire(self, n, value_bits, dense):
+        # identity on purpose: Top-K changes nnz, never the per-value
+        # width or coding (see MaskSparsify.wire)
+        return value_bits, dense
 
 
 @register_stage("quantize")

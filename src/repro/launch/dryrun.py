@@ -129,7 +129,20 @@ def lower_combo(arch: str, shape_name: str, mesh, *, lora_rank: int = 16,
         cost = cost[0] if cost else {}
     chips = mesh_chip_count(mesh)
     hlo = compiled.as_text()
-    coll = hloprof.profile(hlo, default_group=chips)  # trip-count aware
+    try:
+        coll = hloprof.profile(hlo, default_group=chips)  # trip-count aware
+    except ValueError as e:
+        # hloprof's parser is strict by design (see sanity_check): an HLO
+        # line it cannot parse means the stats are untrustworthy, not that
+        # the compile failed — so surface it through the SUSPECT channel
+        # (counted as a failure, listed with the sanity regressions)
+        # rather than the generic FAIL path that hides which half broke
+        stats = _hloprof_suspect(
+            {"arch": arch, "shape": shape_name, "mesh": dict(mesh.shape),
+             "chips": chips, "compile_s": round(t_compile, 1)}, e)
+        if _keep:
+            stats["_compiled"] = compiled
+        return stats
 
     stats = {
         "arch": arch, "shape": shape_name, "status": "OK",
@@ -154,6 +167,13 @@ def lower_combo(arch: str, shape_name: str, mesh, *, lora_rank: int = 16,
     if _keep:
         stats["_compiled"] = compiled
     return stats
+
+
+def _hloprof_suspect(base: dict, err: Exception) -> dict:
+    """SUSPECT stats for an hloprof parse failure: lowering + compile
+    succeeded, the profile did not."""
+    return {**base, "status": "SUSPECT",
+            "sanity": [f"hloprof parse failed: {err}"]}
 
 
 def sanity_check(stats: dict) -> list:
@@ -219,7 +239,19 @@ def main():
             path = os.path.join(args.out, f"{arch}__{shape}__{mesh_tag}.json")
             try:
                 stats = lower_combo(arch, shape, mesh, lora_rank=args.lora_rank)
-            except Exception as e:  # noqa: BLE001
+            # the concrete failure modes of lowering + compile — anything
+            # else (KeyboardInterrupt, a typo-NameError in the framework)
+            # should crash the sweep loudly, not become a FAIL artifact:
+            #   KeyError        unknown arch/shape/rule lookups
+            #   ValueError      sharding/spec mismatch at jit time
+            #   TypeError       bad step-builder signatures
+            #   AssertionError  mesh/step invariants
+            #   RuntimeError    XlaRuntimeError: compile failure / OOM
+            #   MemoryError     host OOM while lowering
+            # (hloprof parse errors never reach here: lower_combo converts
+            # them to SUSPECT stats so the sanity channel reports them)
+            except (KeyError, ValueError, TypeError, AssertionError,
+                    RuntimeError, MemoryError) as e:
                 traceback.print_exc()
                 stats = {"arch": arch, "shape": shape, "status": "FAIL",
                          "error": f"{type(e).__name__}: {e}"}

@@ -342,3 +342,29 @@ def test_logging_callback_formats(capsys):
     eng.LoggingCallback(verbose=True).on_eval(ev)
     out = capsys.readouterr().out
     assert "round    5" in out and "acc=0.5000" in out and "2.00MB" in out
+
+
+@pytest.mark.fast
+def test_dp_fallback_key_rotates_per_round():
+    """With rng=None and DP noise on, the fallback key must fold the
+    round index: the draw at round r+1 has to differ from round r (the
+    old fixed key(0) replayed the identical noise every round, turning
+    "noise" into a constant bias the server optimizer learns around)."""
+    from repro.models.config import FederatedConfig
+    tree = {"w": {"a": jnp.zeros((2, 4)), "b": jnp.zeros((4, 3))}}
+    meta = fedround.FlatMeta.of(tree)
+    fed = FederatedConfig(n_clients=2, local_batch=2, local_steps=1,
+                          dp_clip=1.0, dp_noise=0.5)
+    flatP = meta.flatten(tree)
+    batches = {"x": jnp.zeros((2, 1, 2, 1))}
+    kw = dict(loss_of=lambda t, mb: jnp.sum(t["w"]["a"] ** 2), meta=meta,
+              fed=fed, strategy=st.StrategySpec(kind="lora"))
+    server0 = fedround.init_server(flatP)
+    out_a = fedround.federated_round(flatP, server0, {}, batches, None, **kw)
+    out_b = fedround.federated_round(flatP, server0, {}, batches, None, **kw)
+    # deterministic at a fixed round...
+    assert jnp.array_equal(out_a[0], out_b[0])
+    # ...but a different round index must draw different noise
+    server1 = dict(server0, round=jnp.asarray(1, jnp.int32))
+    out_c = fedround.federated_round(flatP, server1, {}, batches, None, **kw)
+    assert not jnp.array_equal(out_a[0], out_c[0])

@@ -197,3 +197,73 @@ def test_fed_for_mesh():
     mesh2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
     fed2 = fed_for_mesh(mesh2, INPUT_SHAPES["train_4k"])
     assert fed2.n_clients == 32 and fed2.local_batch == 8
+
+
+# ---------------------------------------------------------------------------
+# dryrun failure channels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+def test_dryrun_hloprof_suspect_stats():
+    """An hloprof parse failure is a SUSPECT artifact (the compile
+    succeeded), carrying the compile-side facts plus the parse error."""
+    from repro.launch import dryrun
+    stats = dryrun._hloprof_suspect(
+        {"arch": "a", "shape": "s", "mesh": {"data": 2}, "chips": 2,
+         "compile_s": 1.5}, ValueError("cannot parse operand"))
+    assert stats["status"] == "SUSPECT"
+    assert stats["sanity"] == ["hloprof parse failed: cannot parse operand"]
+    assert stats["chips"] == 2 and stats["compile_s"] == 1.5
+
+
+@pytest.mark.fast
+def test_dryrun_main_exception_narrowing(tmp_path, monkeypatch):
+    """main() catches only the concrete lowering/compile failure modes
+    (written as FAIL artifacts); anything outside that set — and the
+    SUSPECT stats lower_combo returns for hloprof parse errors — takes
+    its own channel instead of vanishing into a blanket except."""
+    import json
+    import sys
+
+    from repro.configs.registry import ARCH_IDS
+    from repro.launch import dryrun
+    from repro.models.config import INPUT_SHAPES
+
+    arch, shape = ARCH_IDS[0], next(iter(INPUT_SHAPES))
+    out = tmp_path / "dryrun"
+    monkeypatch.setattr(dryrun, "make_production_mesh",
+                        lambda multi_pod=False: None)
+    monkeypatch.setattr(sys, "argv", ["dryrun", "--arch", arch, "--shape",
+                                      shape, "--out", str(out)])
+    artifact = out / f"{arch}__{shape}__pod1.json"
+
+    def raising(exc):
+        def fn(*a, **k):
+            raise exc
+        return fn
+
+    # a concrete failure type -> FAIL artifact + nonzero exit
+    monkeypatch.setattr(dryrun, "lower_combo",
+                        raising(ValueError("sharding mismatch")))
+    with pytest.raises(SystemExit, match="1 combos failed"):
+        dryrun.main()
+    stats = json.loads(artifact.read_text())
+    assert stats["status"] == "FAIL"
+    assert "ValueError: sharding mismatch" in stats["error"]
+
+    # hloprof parse failures surface through the SUSPECT/sanity channel
+    monkeypatch.setattr(
+        dryrun, "lower_combo",
+        lambda *a, **k: dryrun._hloprof_suspect(
+            {"arch": arch, "shape": shape, "mesh": {}, "chips": 1,
+             "compile_s": 0.1}, ValueError("bad dot")))
+    with pytest.raises(SystemExit, match="1 combos failed"):
+        dryrun.main()
+    stats = json.loads(artifact.read_text())
+    assert stats["status"] == "SUSPECT"
+    assert "hloprof parse failed: bad dot" in stats["sanity"][0]
+
+    # anything outside the concrete set still crashes the sweep loudly
+    monkeypatch.setattr(dryrun, "lower_combo", raising(KeyboardInterrupt()))
+    with pytest.raises(KeyboardInterrupt):
+        dryrun.main()

@@ -1,0 +1,15 @@
+"""repro-lint: the repo's invariant-checking static-analysis suite.
+
+Run it from the repo root (this is the CI gate in scripts/ci_fast.sh):
+
+    python -m tools.reprolint src tests
+
+See docs/analysis.md for the rule table, suppression syntax, and the
+add-a-rule recipe.
+"""
+from tools.reprolint.core import (Finding, Module, Project, Rule,     # noqa: F401
+                                  diff_baseline, lint_paths,
+                                  lint_sources, load_baseline,
+                                  register_rule, registered_rules,
+                                  resolve_rule, run_rules,
+                                  write_baseline)

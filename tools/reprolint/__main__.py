@@ -1,0 +1,85 @@
+"""CLI: `python -m tools.reprolint [paths...]`.
+
+Exit 0 when every finding is either suppressed inline or present in the
+checked-in baseline AND no baseline entry is stale; exit 1 otherwise.
+`--write-baseline` regenerates the baseline from a fresh run (the only
+sanctioned way to change it), `--json` writes the machine-readable
+artifact ci_fast.sh archives for trend tracking.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import os
+import sys
+
+from tools.reprolint import core
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repro-lint: invariant-checking static analysis "
+                    "(rules: docs/analysis.md)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to lint (default: src tests)")
+    ap.add_argument("--baseline", default=core.DEFAULT_BASELINE,
+                    help="baseline file (default: tools/reprolint/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignore the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="snapshot the current findings as the baseline")
+    ap.add_argument("--json", dest="json_out", metavar="FILE",
+                    help="write findings + baseline diff as JSON")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in core.registered_rules():
+            doc = (core.resolve_rule(name).__doc__ or "").strip()
+            print(f"{name:22s} {doc.splitlines()[0] if doc else ''}")
+        return 0
+
+    _, findings = core.lint_paths(args.paths)
+
+    if args.write_baseline:
+        core.write_baseline(args.baseline, findings)
+        print(f"reprolint: wrote {len(findings)} finding(s) to "
+              f"{os.path.relpath(args.baseline, core.ROOT)}")
+        return 0
+
+    baseline = []
+    if not args.no_baseline and os.path.exists(args.baseline):
+        baseline = core.load_baseline(args.baseline)
+    new, stale = core.diff_baseline(findings, baseline)
+
+    for f in new:
+        print(f)
+    for b in stale:
+        print(f"{b.path}:{b.line}: {b.rule}: stale baseline entry (the "
+              "finding no longer reproduces — regenerate with "
+              "--write-baseline)")
+
+    if args.json_out:
+        counts = collections.Counter(f.rule for f in findings)
+        payload = {"findings": [f.to_dict() for f in findings],
+                   "new": [f.to_dict() for f in new],
+                   "stale": [b.to_dict() for b in stale],
+                   "counts": dict(sorted(counts.items())),
+                   "baselined": len(findings) - len(new)}
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+
+    ok = not new and not stale
+    print(f"reprolint: {len(findings)} finding(s) "
+          f"({len(findings) - len(new)} baselined, {len(new)} new, "
+          f"{len(stale)} stale) over {len(args.paths)} path(s) — "
+          f"{'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+"""The one static AST indexer shared by repro-lint and the docs gate.
+
+`scripts/check_docs.py` used to carry its own `register_*` extraction;
+that logic lives here now so the lint rules (registry completeness,
+stage/engine contracts) and the docs checks can never disagree about
+what is registered.  Everything is `ast`-only: no imports of the code
+under inspection, no jax, so both gates run on any box in well under a
+second.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterator, List, Set, Tuple
+
+# decorator name -> registry it populates (extracted statically: the
+# gates stay import-free, so renaming a registered kind breaks CI even
+# on a box that cannot import jax).  `register_rule` is repro-lint's own
+# registry (tools/reprolint/rules/), mirrored here so the docs gate can
+# validate the rule table in docs/analysis.md the same way.
+REGISTER_FUNCS = {"register_strategy": "strategies",
+                  "register_selector": "selectors",
+                  "register_engine": "engines",
+                  "register_stage": "stages",
+                  "register_rule": "rules"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Registration:
+    """One `@register_*("name")` site."""
+    registry: str
+    name: str
+    class_name: str
+    path: str       # repo-relative, posix separators
+    line: int
+
+
+def registered_names(node: ast.AST) -> Iterator[Tuple[str, str]]:
+    """(registry, name) for each register_* decorator on a ClassDef."""
+    for deco in getattr(node, "decorator_list", ()):
+        if isinstance(deco, ast.Call) and isinstance(deco.func, ast.Name) \
+                and deco.func.id in REGISTER_FUNCS and deco.args \
+                and isinstance(deco.args[0], ast.Constant) \
+                and isinstance(deco.args[0].value, str):
+            yield REGISTER_FUNCS[deco.func.id], deco.args[0].value
+
+
+def iter_py_files(root: str) -> Iterator[str]:
+    for dirpath, dirnames, files in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fname in sorted(files):
+            if fname.endswith(".py"):
+                yield os.path.join(dirpath, fname)
+
+
+def registrations(root: str, rel_to: str) -> List[Registration]:
+    """Every register_* site under `root`, paths relative to `rel_to`."""
+    out = []
+    for path in iter_py_files(root):
+        with open(path) as f:
+            tree = ast.parse(f.read(), filename=path)
+        rel = os.path.relpath(path, rel_to).replace(os.sep, "/")
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                for registry, name in registered_names(node):
+                    out.append(Registration(registry, name, node.name,
+                                            rel, node.lineno))
+    return out
+
+
+def build_index(src: str):
+    """(module index, registries): the dotted-reference index used by the
+    docs gate plus {registry: set of registered names}.  `src` is the
+    directory containing the `repro` package."""
+    index: Dict[str, Dict[str, object]] = {}
+    registries: Dict[str, Set[str]] = {r: set()
+                                       for r in REGISTER_FUNCS.values()}
+    for path in iter_py_files(os.path.join(src, "repro")):
+        mod = os.path.relpath(path, src)[:-3].replace(os.sep, ".")
+        if mod.endswith(".__init__"):
+            mod = mod[: -len(".__init__")]
+        with open(path) as f:
+            tree = ast.parse(f.read(), filename=path)
+        symbols, classes = set(), {}
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                symbols.add(node.name)
+            elif isinstance(node, ast.ClassDef):
+                for registry, rname in registered_names(node):
+                    registries[registry].add(rname)
+                attrs = set()
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        attrs.add(sub.name)
+                        # instance attrs: self.x = ... anywhere inside
+                        for stmt in ast.walk(sub):
+                            for t in getattr(stmt, "targets",
+                                             [getattr(stmt, "target",
+                                                      None)]):
+                                if isinstance(t, ast.Attribute) and \
+                                        isinstance(t.value, ast.Name) \
+                                        and t.value.id == "self":
+                                    attrs.add(t.attr)
+                    elif isinstance(sub, ast.AnnAssign) and \
+                            isinstance(sub.target, ast.Name):
+                        attrs.add(sub.target.id)
+                    elif isinstance(sub, ast.Assign):
+                        attrs.update(t.id for t in sub.targets
+                                     if isinstance(t, ast.Name))
+                classes[node.name] = attrs
+                symbols.add(node.name)
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name):
+                symbols.add(node.target.id)
+            elif isinstance(node, ast.Assign):
+                symbols.update(t.id for t in node.targets
+                               if isinstance(t, ast.Name))
+        index[mod] = {"symbols": symbols, "classes": classes}
+    return index, registries
+
+
+def rule_names(reprolint_root: str) -> Set[str]:
+    """Names registered via `@register_rule` under tools/reprolint/ —
+    extracted statically, same as every other registry."""
+    return {r.name
+            for r in registrations(reprolint_root, reprolint_root)
+            if r.registry == "rules"}

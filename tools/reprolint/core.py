@@ -1,0 +1,266 @@
+"""repro-lint rule framework: Finding, rule registry, per-line
+suppressions, baseline handling, and the runner.
+
+The registry mirrors the repo's own `@register_*` idiom (strategies,
+selectors, engines, stages): rules are classes entered into a module
+table by a `@register_rule("name")` decorator, resolved by name, and the
+docs gate validates the rule table in docs/analysis.md against the same
+statically-extracted registry (`tools/reprolint/astindex.py`).
+
+Suppressing a finding: append `# reprolint: disable=<rule>` to the
+flagged line (comma-separate several rules; everything after the names
+is the justification and is required by convention).  Grandfathered
+findings live in `tools/reprolint/baseline.json`, which must exactly
+match a fresh run — the runner fails on *stale* entries too, so the
+baseline can only shrink by actually fixing things.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import (ClassVar, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple, Type)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")
+
+DISABLE_RE = re.compile(r"#\s*reprolint:\s*disable=([\w,-]+)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation, anchored to a repo-relative path + line."""
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def key(self) -> Tuple[str, int, str]:
+        return (self.path, self.line, self.rule)
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d) -> "Finding":
+        return cls(path=d["path"], line=int(d["line"]), rule=d["rule"],
+                   message=d.get("message", ""))
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file plus its per-line suppression table."""
+    rel: str                      # repo-relative, posix separators
+    src: str
+    tree: ast.Module
+    suppressions: Dict[int, set]  # line -> rule names ('all' = every rule)
+
+    @classmethod
+    def from_source(cls, rel: str, src: str) -> "Module":
+        tree = ast.parse(src, filename=rel)
+        sup: Dict[int, set] = {}
+        for i, line in enumerate(src.splitlines(), start=1):
+            m = DISABLE_RE.search(line)
+            if m:
+                sup[i] = {n for n in m.group(1).split(",") if n}
+        return cls(rel=rel, src=src, tree=tree, suppressions=sup)
+
+    def suppressed(self, finding: Finding) -> bool:
+        names = self.suppressions.get(finding.line, ())
+        return finding.rule in names or "all" in names
+
+
+class Project:
+    """Everything a rule may inspect: the parsed modules under lint plus
+    (for project-scope rules) the repo's docs and test sources."""
+
+    def __init__(self, modules: Sequence[Module], root: Optional[str] = ROOT,
+                 docs_text: Optional[str] = None,
+                 tests_text: Optional[str] = None):
+        self.modules = list(modules)
+        self.root = root
+        self._docs_text = docs_text
+        self._tests_text = tests_text
+
+    @property
+    def src_modules(self) -> List[Module]:
+        return [m for m in self.modules if m.rel.startswith("src/")]
+
+    def _read_all(self, paths: Iterable[str]) -> str:
+        chunks = []
+        for p in paths:
+            try:
+                with open(p) as f:
+                    chunks.append(f.read())
+            except OSError:
+                pass
+        return "\n".join(chunks)
+
+    @property
+    def docs_text(self) -> str:
+        if self._docs_text is None:
+            paths = [os.path.join(self.root, "README.md")]
+            docs = os.path.join(self.root, "docs")
+            if os.path.isdir(docs):
+                paths += [os.path.join(docs, f) for f in sorted(
+                    os.listdir(docs)) if f.endswith(".md")]
+            self._docs_text = self._read_all(paths)
+        return self._docs_text
+
+    @property
+    def tests_text(self) -> str:
+        if self._tests_text is None:
+            tests = os.path.join(self.root, "tests")
+            paths = ([os.path.join(tests, f) for f in sorted(
+                os.listdir(tests)) if f.endswith(".py")]
+                if os.path.isdir(tests) else [])
+            self._tests_text = self._read_all(paths)
+        return self._tests_text
+
+
+class Rule:
+    """Base rule.  Module-scope rules implement `check(mod, project)`;
+    project-scope rules (scope = "project") implement
+    `check_project(project)` and run once per lint invocation."""
+
+    name: ClassVar[str] = "base"
+    scope: ClassVar[str] = "module"
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        return iter(())
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        return iter(())
+
+
+_RULES: Dict[str, Type[Rule]] = {}
+
+
+def register_rule(name: str):
+    """Class decorator: `@register_rule("host-reduction")` enters the
+    rule in the registry (`registered_rules()`), the table the docs gate
+    validates docs/analysis.md against."""
+    def deco(cls: Type[Rule]) -> Type[Rule]:
+        assert issubclass(cls, Rule), cls
+        cls.name = name
+        _RULES[name] = cls
+        return cls
+    return deco
+
+
+def _load_rules() -> None:
+    from tools.reprolint import rules as _  # noqa: F401  (registration)
+
+
+def registered_rules() -> Tuple[str, ...]:
+    _load_rules()
+    return tuple(sorted(_RULES))
+
+
+def resolve_rule(name: str) -> Type[Rule]:
+    _load_rules()
+    try:
+        return _RULES[name]
+    except KeyError:
+        raise KeyError(f"no lint rule registered as {name!r}; known: "
+                       f"{registered_rules()}") from None
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def collect_modules(paths: Sequence[str], root: str = ROOT) -> List[Module]:
+    """Parse every .py under `paths` (files or directories, resolved
+    against `root` when relative)."""
+    from tools.reprolint.astindex import iter_py_files
+    files: List[str] = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isdir(full):
+            files.extend(iter_py_files(full))
+        elif full.endswith(".py"):
+            files.append(full)
+        else:
+            raise FileNotFoundError(f"reprolint: no such path: {p}")
+    mods = []
+    for path in files:
+        with open(path) as f:
+            src = f.read()
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        mods.append(Module.from_source(rel, src))
+    return mods
+
+
+def run_rules(project: Project,
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """All unsuppressed findings, sorted by (path, line, rule)."""
+    _load_rules()
+    names = registered_rules() if rules is None else rules
+    by_rel = {m.rel: m for m in project.modules}
+    findings: List[Finding] = []
+    for name in names:
+        rule = resolve_rule(name)()
+        if rule.scope == "project":
+            found: Iterable[Finding] = rule.check_project(project)
+        else:
+            found = [f for mod in project.modules
+                     for f in rule.check(mod, project)]
+        for f in found:
+            mod = by_rel.get(f.path)
+            if mod is not None and mod.suppressed(f):
+                continue
+            findings.append(f)
+    return sorted(set(findings))
+
+
+def lint_paths(paths: Sequence[str], root: str = ROOT,
+               rules: Optional[Sequence[str]] = None
+               ) -> Tuple[Project, List[Finding]]:
+    project = Project(collect_modules(paths, root), root=root)
+    return project, run_rules(project, rules)
+
+
+def lint_sources(sources: Dict[str, str], rules: Sequence[str],
+                 docs_text: str = "", tests_text: str = "") -> List[Finding]:
+    """Test hook: lint in-memory {relpath: source} with selected rules."""
+    project = Project([Module.from_source(rel, src)
+                       for rel, src in sources.items()],
+                      root=None, docs_text=docs_text, tests_text=tests_text)
+    return run_rules(project, rules)
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str) -> List[Finding]:
+    with open(path) as f:
+        return [Finding.from_dict(d) for d in json.load(f)]
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    with open(path, "w") as f:
+        json.dump([f_.to_dict() for f_ in sorted(findings)], f, indent=1)
+        f.write("\n")
+
+
+def diff_baseline(findings: Sequence[Finding],
+                  baseline: Sequence[Finding]
+                  ) -> Tuple[List[Finding], List[Finding]]:
+    """(new findings, stale baseline entries) — matched on
+    (path, line, rule), so an edit that moves a grandfathered finding
+    forces the baseline to be regenerated consciously."""
+    fkeys = {f.key() for f in findings}
+    bkeys = {b.key() for b in baseline}
+    new = [f for f in findings if f.key() not in bkeys]
+    stale = [b for b in baseline if b.key() not in fkeys]
+    return new, stale

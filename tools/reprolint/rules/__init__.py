@@ -1,0 +1,3 @@
+"""Rule modules — importing this package populates the rule registry."""
+from tools.reprolint.rules import (bitexact, donation, pallas, prng,  # noqa: F401
+                                   registry, tracer)

@@ -1,0 +1,90 @@
+"""Shared AST helpers for the rule modules."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+FUNC_TYPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """`jax.random.fold_in` for the matching Name/Attribute chain."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted(call.func)
+
+
+def walk_functions(tree: ast.AST) -> Iterator[FuncNode]:
+    for node in ast.walk(tree):
+        if isinstance(node, FUNC_TYPES):
+            yield node
+
+
+def func_name(fn: FuncNode) -> str:
+    return getattr(fn, "name", "<lambda>")
+
+
+def arg_names(fn: FuncNode) -> List[str]:
+    a = fn.args
+    args = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+    if a.vararg:
+        args.append(a.vararg)
+    if a.kwarg:
+        args.append(a.kwarg)
+    return [x.arg for x in args]
+
+
+def assigned_names(stmt: ast.stmt) -> List[str]:
+    """Plain-Name targets bound by an assignment statement (tuple
+    unpacking included)."""
+    out: List[str] = []
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    for t in targets:
+        if isinstance(t, ast.Name):
+            out.append(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            out.extend(e.id for e in t.elts if isinstance(e, ast.Name))
+    return out
+
+
+def name_tokens(fn: FuncNode) -> set:
+    """Lower-cased underscore-split tokens of every identifier bound or
+    loaded in `fn` (its own name + parameters + Name nodes, nested
+    functions included)."""
+    idents = set(arg_names(fn))
+    if not isinstance(fn, ast.Lambda):
+        idents.add(fn.name)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            idents.add(node.id)
+        elif isinstance(node, FUNC_TYPES) and node is not fn:
+            idents.update(arg_names(node))
+            if not isinstance(node, ast.Lambda):
+                idents.add(node.name)
+    tokens = set()
+    for ident in idents:
+        tokens.update(t for t in ident.lower().split("_") if t)
+    return tokens
+
+
+def calls_matching(tree: ast.AST, names) -> Iterator[Tuple[ast.Call, str]]:
+    names = set(names)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            n = call_name(node)
+            if n in names:
+                yield node, n

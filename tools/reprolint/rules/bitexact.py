@@ -1,0 +1,106 @@
+"""Bit-exactness rules.
+
+The sim==async bit-equality anchor (PR 3) rests on every recorded
+metric being reduced by the canonical host-side sequential float32
+reductions `engine._mean_f32` / `engine._sum_f32` — XLA picks a fused
+reduction's association per program, and Python's `sum()` /
+`statistics.mean` accumulate in float64, so either one silently breaks
+cross-backend equality.  Pytree construction from unordered iteration
+is the same failure by another door: set iteration order is
+hash-seed-dependent, so a pytree stacked from a set comprehension can
+change leaf order between runs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint.core import Finding, Module, Project, Rule, register_rule
+from tools.reprolint.rules import _util as u
+
+REDUCTIONS = {"sum", "statistics.mean", "statistics.fmean",
+              "statistics.fsum", "math.fsum", "np.mean", "np.sum",
+              "numpy.mean", "numpy.sum"}
+CANONICAL = ("_mean_f32", "_sum_f32")
+# engine/ledger paths where recorded metrics flow
+PATHS = ("src/repro/federated/", "src/repro/core/comm.py",
+         "src/repro/core/fedround.py")
+
+TREE_BUILDERS = {"jnp.stack", "jnp.concatenate", "jnp.asarray", "jnp.array",
+                 "np.stack", "np.concatenate", "jax.tree.map",
+                 "jax.tree_util.tree_map", "jnp.hstack", "jnp.vstack"}
+
+
+@register_rule("host-reduction")
+class HostReduction(Rule):
+    """Non-canonical float reductions in engine/ledger metric paths."""
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        if not mod.rel.startswith(PATHS[:1]) and mod.rel not in PATHS[1:]:
+            return
+        canonical_spans = []
+        for fn in u.walk_functions(mod.tree):
+            if u.func_name(fn) in CANONICAL:
+                canonical_spans.append((fn.lineno, fn.end_lineno))
+        # int(sum(...)) is integer accounting: associativity-exact, not
+        # a float-metric reduction
+        int_wrapped = {id(call.args[0]) for call, _ in
+                       u.calls_matching(mod.tree, ("int",))
+                       if call.args and isinstance(call.args[0], ast.Call)}
+        for call, name in u.calls_matching(mod.tree, REDUCTIONS):
+            if any(lo <= call.lineno <= hi for lo, hi in canonical_spans):
+                continue    # the canonical reductions themselves
+            if id(call) in int_wrapped:
+                continue
+            yield Finding(
+                mod.rel, call.lineno, self.name,
+                f"{name}() over metric values in an engine/ledger path — "
+                "use engine._mean_f32/_sum_f32 (fixed-order f32) so "
+                "records stay bit-identical across backends")
+
+
+@register_rule("unordered-pytree")
+class UnorderedPytree(Rule):
+    """Set / unordered iteration feeding pytree or array construction."""
+
+    def _set_like(self, node, set_names) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call) and \
+                u.call_name(node) in ("set", "frozenset"):
+            return True
+        if isinstance(node, ast.Name) and node.id in set_names:
+            return True
+        return False
+
+    def _from_set(self, node, set_names) -> bool:
+        """`node` iterates an unordered collection (sorted() exempts)."""
+        if self._set_like(node, set_names):
+            return True
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+            return any(self._set_like(g.iter, set_names)
+                       for g in node.generators)
+        if isinstance(node, ast.Call) and u.call_name(node) == "list" \
+                and node.args:
+            return self._set_like(node.args[0], set_names)
+        return False
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        # names bound to set expressions, module-wide (cheap and local
+        # enough: sets are rare in this codebase by design)
+        set_names = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and \
+                    self._set_like(node.value, ()):
+                set_names.update(u.assigned_names(node))
+        for call, name in u.calls_matching(mod.tree, TREE_BUILDERS):
+            for arg in list(call.args) + [k.value for k in call.keywords]:
+                elts = arg.elts if isinstance(arg, (ast.List,
+                                                    ast.Tuple)) else [arg]
+                for e in elts:
+                    if self._from_set(e, set_names):
+                        yield Finding(
+                            mod.rel, call.lineno, self.name,
+                            f"{name}() fed from set/unordered iteration — "
+                            "leaf order is hash-seed-dependent; sort first "
+                            "(sorted(...)) or keep a list")

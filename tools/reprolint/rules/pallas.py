@@ -1,0 +1,134 @@
+"""Pallas kernel-contract rules (see docs/kernels.md and
+/opt-style accelerator guides: dynamic slices, grid tiling, interpret
+fallback).
+
+`pallas-raw-index`: raw scalar indices in `pl.load`/`pl.store` — the
+exact bug class repaired in PR 2's flash-attention kernel, where an
+integer index (instead of `pl.ds(i, 1)`) broke interpret-mode
+discharge and produced silently wrong reads on the fallback path.
+
+`pallas-interpret`: a `pl.pallas_call` with no `interpret=` kwarg can
+never run on the CPU CI container; every kernel here dispatches
+`interpret=not _on_tpu()`.
+
+`pallas-grid-guard`: a grid built with `n // block` silently drops the
+tail when `n % block != 0`; the kernel must assert divisibility (or pad
+upstream, with the assert documenting the contract).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.reprolint.core import Finding, Module, Project, Rule, register_rule
+from tools.reprolint.rules import _util as u
+
+LOAD_STORE = {"pl.load", "pl.store", "pallas.load", "pallas.store"}
+PALLAS_CALL = {"pl.pallas_call", "pallas.pallas_call"}
+DS = {"pl.ds", "pl.dslice", "pallas.ds", "pallas.dslice", "slice"}
+
+
+def _uses_pallas(mod: Module) -> bool:
+    return "pallas" in mod.src
+
+
+def _index_ok(e: ast.expr) -> bool:
+    if isinstance(e, ast.Slice):
+        return True
+    if isinstance(e, ast.Constant) and e.value is Ellipsis:
+        return True
+    if isinstance(e, ast.Call) and u.call_name(e) in DS:
+        return True
+    if isinstance(e, ast.Starred):
+        return _index_ok(e.value)
+    return False
+
+
+@register_rule("pallas-raw-index")
+class PallasRawIndex(Rule):
+    """Raw scalar indices in pl.load/pl.store index tuples."""
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        if not mod.rel.startswith("src/") or not _uses_pallas(mod):
+            return
+        for call, name in u.calls_matching(mod.tree, LOAD_STORE):
+            if len(call.args) < 2:
+                continue
+            idx = call.args[1]
+            elems = idx.elts if isinstance(idx, ast.Tuple) else [idx]
+            for e in elems:
+                if not _index_ok(e):
+                    yield Finding(
+                        mod.rel, e.lineno, self.name,
+                        f"raw scalar index in {name}() — use pl.ds(i, 1) "
+                        "/ slice(None): integer indices break "
+                        "interpret-mode discharge (the PR 2 "
+                        "flash-attention bug class)")
+
+
+@register_rule("pallas-interpret")
+class PallasInterpret(Rule):
+    """pl.pallas_call without an interpret= fallback kwarg."""
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        if not mod.rel.startswith("src/") or not _uses_pallas(mod):
+            return
+        for call, name in u.calls_matching(mod.tree, PALLAS_CALL):
+            if not any(k.arg == "interpret" for k in call.keywords):
+                yield Finding(
+                    mod.rel, call.lineno, self.name,
+                    f"{name}() has no interpret= kwarg — the kernel "
+                    "cannot run on non-TPU backends (CI is CPU); thread "
+                    "an interpret flag through like the other kernels")
+
+
+@register_rule("pallas-grid-guard")
+class PallasGridGuard(Rule):
+    """`n // block` in a grid without a divisibility guard."""
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        if not mod.rel.startswith("src/") or not _uses_pallas(mod):
+            return
+        for fn in u.walk_functions(mod.tree):
+            if isinstance(fn, ast.Lambda):
+                continue
+            calls = [c for c, _ in u.calls_matching(fn, PALLAS_CALL)]
+            if not calls:
+                continue
+            # divisors proven safe anywhere in the function: `x % d` in
+            # an assert/if, or pl.cdiv-built grids
+            guarded = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.BinOp) and \
+                        isinstance(node.op, ast.Mod):
+                    guarded.add(ast.unparse(node.right))
+            # grid divisions: inspect the grid kwarg and, one hop out,
+            # plain `name = a // b` assignments feeding it
+            div_assigns = {}
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and \
+                        isinstance(node.value, ast.BinOp) and \
+                        isinstance(node.value.op, ast.FloorDiv):
+                    for nm in u.assigned_names(node):
+                        div_assigns[nm] = node.value
+            for call in calls:
+                grid = next((k.value for k in call.keywords
+                             if k.arg == "grid"), None)
+                if grid is None:
+                    continue
+                divs = []
+                for node in ast.walk(grid):
+                    if isinstance(node, ast.BinOp) and \
+                            isinstance(node.op, ast.FloorDiv):
+                        divs.append(node)
+                    elif isinstance(node, ast.Name) and \
+                            node.id in div_assigns:
+                        divs.append(div_assigns[node.id])
+                for d in divs:
+                    if ast.unparse(d.right) not in guarded:
+                        yield Finding(
+                            mod.rel, d.lineno, self.name,
+                            f"grid uses `{ast.unparse(d)}` with no "
+                            f"`% {ast.unparse(d.right)}` divisibility "
+                            "guard in the function — the tail block is "
+                            "silently dropped when it does not divide")

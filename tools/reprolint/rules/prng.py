@@ -1,0 +1,146 @@
+"""PRNG-discipline rules.
+
+The repo's key schedule (documented in `federated/engine.py`) derives
+every round's randomness as `fold_in(base_key, round_idx)`; baselines
+like FLoCoRA's seeded projections silently break if a key stops folding
+the round/version index (the projection freezes and the "random" part
+of the estimator becomes a fixed bias).
+
+`prng-constant-key`: a key built from a constant seed inside a function
+with round/step/version semantics, never folded — the exact bug class
+of a DP-noise draw that replays the same noise every round.
+
+`prng-key-reuse`: the same key consumed by two sampling calls in a
+straight line — correlated draws that look random but are not.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator
+
+from tools.reprolint.core import Finding, Module, Project, Rule, register_rule
+from tools.reprolint.rules import _util as u
+
+KEY_FNS = {"jax.random.PRNGKey", "jax.random.key"}
+FOLD_FNS = {"jax.random.fold_in", "jax.random.split"}
+ROUND_TOKENS = {"round", "rounds", "version", "replica", "epoch", "step",
+                "steps"}
+SAMPLE_FNS = {"jax.random." + s for s in (
+    "normal", "uniform", "bernoulli", "randint", "truncated_normal",
+    "gumbel", "laplace", "exponential", "categorical", "choice",
+    "permutation", "rademacher", "bits", "split", "fold_in")}
+
+
+@register_rule("prng-constant-key")
+class PRNGConstantKey(Rule):
+    """Constant-seed key in a round/step/version context with no fold."""
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        if not mod.rel.startswith("src/"):
+            return
+        seen = set()
+        for fn in u.walk_functions(mod.tree):
+            if isinstance(fn, ast.Lambda):
+                continue
+            if not (u.name_tokens(fn) & ROUND_TOKENS):
+                continue
+            # a key is "folded" only if ITS value reaches fold_in: either
+            # the construction is nested inside a fold_in call, or it is
+            # bound to a name that is later a fold_in argument.  A
+            # fold_in/split of some OTHER key does not rotate this one.
+            folded_ids = set()
+            folded_names = set()
+            for fold, _ in u.calls_matching(fn, ("jax.random.fold_in",)):
+                for arg in fold.args:
+                    folded_ids.update(id(n) for n in ast.walk(arg))
+                    if isinstance(arg, ast.Name):
+                        folded_names.add(arg.id)
+            for call, name in u.calls_matching(fn, KEY_FNS):
+                if id(call) in seen:
+                    continue
+                seen.add(id(call))
+                if id(call) in folded_ids:
+                    continue
+                bound = set()
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Assign) and any(
+                            n is call for n in ast.walk(node.value)):
+                        bound.update(u.assigned_names(node))
+                if bound & folded_names:
+                    continue
+                if call.args and all(isinstance(a, ast.Constant)
+                                     for a in call.args):
+                    yield Finding(
+                        mod.rel, call.lineno, self.name,
+                        f"{name}(constant) in `{u.func_name(fn)}` (which "
+                        "has round/step/version semantics) is never "
+                        "fold_in'd — the draw replays identically every "
+                        "round; fold the round/version index into the key")
+
+
+@register_rule("prng-key-reuse")
+class PRNGKeyReuse(Rule):
+    """Same key Name consumed by two sampling calls, straight-line."""
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        if not mod.rel.startswith("src/"):
+            return
+        for fn in u.walk_functions(mod.tree):
+            body = getattr(fn, "body", None)
+            if isinstance(body, list):
+                yield from self._scan(body, {}, mod)
+
+    def _key_arg(self, call: ast.Call):
+        for kw in call.keywords:
+            if kw.arg == "key" and isinstance(kw.value, ast.Name):
+                return kw.value.id
+        if call.args and isinstance(call.args[0], ast.Name):
+            return call.args[0].id
+        return None
+
+    def _straight_line(self, node) -> Iterator[ast.AST]:
+        """Walk `node` without descending into nested functions or into
+        compound-statement bodies (those are scanned separately)."""
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            yield n
+            for child in ast.iter_child_nodes(n):
+                if isinstance(child, u.FUNC_TYPES):
+                    continue
+                if isinstance(child, ast.stmt):
+                    continue
+                stack.append(child)
+
+    def _consume(self, expr, used: Dict[str, int], mod) -> Iterator[Finding]:
+        for node in self._straight_line(expr):
+            if isinstance(node, ast.Call) and \
+                    u.call_name(node) in SAMPLE_FNS:
+                key = self._key_arg(node)
+                if key is None:
+                    continue
+                if key in used:
+                    yield Finding(
+                        mod.rel, node.lineno, self.name,
+                        f"key `{key}` already consumed by a sampling "
+                        f"call on line {used[key]} — split or fold_in "
+                        "before drawing again")
+                else:
+                    used[key] = node.lineno
+
+    def _scan(self, body, used: Dict[str, int], mod) -> Iterator[Finding]:
+        for stmt in body:
+            yield from self._consume(stmt, used, mod)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue    # their bodies are scanned as their own scope
+            # nested bodies restart from a copy: branch-local reuse is
+            # caught, cross-branch aliasing is not second-guessed
+            for sub in (getattr(stmt, "body", []),
+                        getattr(stmt, "orelse", []),
+                        getattr(stmt, "finalbody", [])):
+                if sub and isinstance(sub, list) and \
+                        all(isinstance(s, ast.stmt) for s in sub):
+                    yield from self._scan(sub, dict(used), mod)
+            for name in u.assigned_names(stmt):
+                used.pop(name, None)

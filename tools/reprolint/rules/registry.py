@@ -1,0 +1,116 @@
+"""Registry-contract rules (project scope).
+
+The registries are the repo's extension surface: a `@register_*` name
+that no doc mentions and no test exercises is dead weight that will rot
+(the docs gate only checks names docs *do* mention — this closes the
+other direction).  The stage/engine structural contracts guard the two
+silent-corruption paths: a transport stage that forgets `wire` inherits
+the identity wire format and mis-bills every byte the ledger records
+(PR 5), and an engine whose `config()` omits a constructor knob cannot
+round-trip through checkpoint resume
+(`resolve_engine(name, **config())`).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from tools.reprolint.astindex import registered_names
+from tools.reprolint.core import Finding, Project, Rule, register_rule
+
+
+def _src_classes(project: Project):
+    for mod in project.src_modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                yield mod, node
+
+
+def _own_method(cls: ast.ClassDef, name: str):
+    for sub in cls.body:
+        if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                sub.name == name:
+            return sub
+    return None
+
+
+@register_rule("registry-coverage")
+class RegistryCoverage(Rule):
+    """Every registered name must appear in docs and in some test."""
+
+    scope = "project"
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        for mod, cls in _src_classes(project):
+            for registry, name in registered_names(cls):
+                pat = re.compile(r"\b%s\b" % re.escape(name))
+                kind = registry[:-1] if registry != "strategies" \
+                    else "strategy"
+                if not pat.search(project.docs_text):
+                    yield Finding(
+                        mod.rel, cls.lineno, self.name,
+                        f"registered {kind} {name!r} is not mentioned in "
+                        "README.md or docs/*.md")
+                if not pat.search(project.tests_text):
+                    yield Finding(
+                        mod.rel, cls.lineno, self.name,
+                        f"registered {kind} {name!r} is not exercised by "
+                        "any test in tests/")
+
+
+@register_rule("stage-wire")
+class StageWire(Rule):
+    """Every @register_stage class must define `wire` in its own body."""
+
+    scope = "project"
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        for mod, cls in _src_classes(project):
+            regs = [n for r, n in registered_names(cls) if r == "stages"]
+            if regs and _own_method(cls, "wire") is None:
+                yield Finding(
+                    mod.rel, cls.lineno, self.name,
+                    f"transport stage {regs[0]!r} ({cls.name}) inherits "
+                    "the identity wire format implicitly — declare "
+                    "`wire` explicitly (identity is fine, silence is "
+                    "not: the ledger bills whatever this returns)")
+
+
+@register_rule("engine-config")
+class EngineConfig(Rule):
+    """Every @register_engine class must round-trip its constructor
+    through `config()` (checkpoint resume contract)."""
+
+    scope = "project"
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        for mod, cls in _src_classes(project):
+            regs = [n for r, n in registered_names(cls) if r == "engines"]
+            if not regs:
+                continue
+            cfg = _own_method(cls, "config")
+            if cfg is None:
+                yield Finding(
+                    mod.rel, cls.lineno, self.name,
+                    f"engine {regs[0]!r} ({cls.name}) does not define "
+                    "config() — resolve_engine(name, **config()) must "
+                    "rebuild it on checkpoint resume")
+                continue
+            init = _own_method(cls, "__init__")
+            if init is None:
+                continue
+            params = [a.arg for a in (init.args.posonlyargs
+                                      + init.args.args
+                                      + init.args.kwonlyargs)
+                      if a.arg != "self"]
+            keys = {c.value for c in ast.walk(cfg)
+                    if isinstance(c, ast.Constant)
+                    and isinstance(c.value, str)}
+            missing = [p for p in params if p not in keys]
+            if missing:
+                yield Finding(
+                    mod.rel, cfg.lineno, self.name,
+                    f"engine {regs[0]!r}: config() omits constructor "
+                    f"parameter(s) {missing} — they will not survive a "
+                    "checkpoint round-trip")

@@ -1,0 +1,215 @@
+"""Tracer-hygiene rules.
+
+`host-sync-in-traced`: `float()`/`int()`/`bool()`/`.item()`/
+`np.asarray()` applied to a traced value inside a function that jax
+traces (jitted, vmapped, scanned, cond'd, ...) either fails at trace
+time or silently constant-folds a tracer — the bug class the
+fedround/engine hot paths must never reacquire.
+
+`host-pull-in-loop`: per-element `float(x[i])` pulls on device arrays
+inside engine loops (or `[float(v) for v in device_array]`) sync the
+device stream once per element; batch the transfer with one
+`np.asarray` first.  Scoped to src/repro/federated/ — the engine drain
+loops are exactly where this cost compounds with cohort size.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from tools.reprolint.core import Finding, Module, Project, Rule, register_rule
+from tools.reprolint.rules import _util as u
+
+TRACE_WRAPPERS = {
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.custom_vjp", "jax.custom_jvp",
+    "jax.lax.scan", "jax.lax.cond", "jax.lax.while_loop",
+    "jax.lax.fori_loop", "jax.lax.switch", "jax.lax.map",
+    "jax.lax.associative_scan",
+}
+HOST_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+              "jax.device_get"}
+HOST_ATTR_CALLS = {"item", "block_until_ready", "tolist"}
+CASTS = {"float", "int", "bool"}
+
+
+def _is_trace_wrapper(node: ast.AST) -> bool:
+    """`jax.jit` / `functools.partial(jax.jit, ...)` expression."""
+    if u.dotted(node) in TRACE_WRAPPERS:
+        return True
+    if isinstance(node, ast.Call) and \
+            u.dotted(node.func) in ("functools.partial", "partial") and \
+            node.args and u.dotted(node.args[0]) in TRACE_WRAPPERS:
+        return True
+    return False
+
+
+def _static_arg(arg: ast.expr) -> bool:
+    """Shape-like / python-static expressions that float()/int() may
+    legitimately touch inside a traced function."""
+    if isinstance(arg, ast.Constant):
+        return True
+    if isinstance(arg, ast.Attribute) and arg.attr in ("shape", "ndim",
+                                                       "size", "dtype"):
+        return True
+    if isinstance(arg, ast.Subscript):
+        return _static_arg(arg.value)
+    if isinstance(arg, ast.Call):
+        n = u.call_name(arg) or ""
+        if n in ("len", "round", "min", "max") or \
+                n.startswith(("np.", "numpy.", "math.")):
+            return True
+        return False
+    if isinstance(arg, ast.BinOp):
+        return _static_arg(arg.left) and _static_arg(arg.right)
+    if isinstance(arg, ast.UnaryOp):
+        return _static_arg(arg.operand)
+    return False
+
+
+def _traced_functions(tree: ast.Module) -> Set[u.FuncNode]:
+    """Functions jax traces: decorated with a trace wrapper, passed as an
+    argument to one (resolved module-wide by name for plain Names), or
+    defined lexically inside another traced function."""
+    defs_by_name = {}
+    for fn in u.walk_functions(tree):
+        if not isinstance(fn, ast.Lambda):
+            defs_by_name.setdefault(fn.name, []).append(fn)
+
+    traced: Set[u.FuncNode] = set()
+    for fn in u.walk_functions(tree):
+        for deco in getattr(fn, "decorator_list", ()):
+            if _is_trace_wrapper(deco):
+                traced.add(fn)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_trace_wrapper(node.func):
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(arg, u.FUNC_TYPES):
+                    traced.add(arg)
+                elif isinstance(arg, ast.Name):
+                    traced.update(defs_by_name.get(arg.id, ()))
+    # closure: nested defs run under the enclosing trace
+    changed = True
+    while changed:
+        changed = False
+        for fn in list(traced):
+            for sub in u.walk_functions(fn):
+                if sub is not fn and sub not in traced:
+                    traced.add(sub)
+                    changed = True
+    return traced
+
+
+@register_rule("host-sync-in-traced")
+class HostSyncInTraced(Rule):
+    """Host-sync / trace-leak calls inside jax-traced functions."""
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        if not mod.rel.startswith("src/"):
+            return
+        traced = _traced_functions(mod.tree)
+        seen = set()
+        for fn in traced:
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call) or id(node) in seen:
+                    continue
+                seen.add(id(node))
+                name = u.call_name(node)
+                bad = None
+                if name in CASTS and node.args and \
+                        not _static_arg(node.args[0]):
+                    bad = (f"{name}() on a (potentially) traced value "
+                           "inside a jax-traced function")
+                elif name in HOST_CALLS:
+                    bad = (f"{name}() materializes on host inside a "
+                           "jax-traced function")
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in HOST_ATTR_CALLS and not node.args:
+                    bad = (f".{node.func.attr}() forces a host sync "
+                           "inside a jax-traced function")
+                if bad:
+                    yield Finding(mod.rel, node.lineno, self.name,
+                                  bad + " (move it outside the traced "
+                                  "region or use jnp ops)")
+
+
+@register_rule("host-pull-in-loop")
+class HostPullInLoop(Rule):
+    """Per-element device->host pulls in federated engine loops."""
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        if not mod.rel.startswith("src/repro/federated/"):
+            return
+        # names bound from np.* calls are host arrays: indexing them in
+        # a loop is free, so they are exempt (module-wide — closures pull
+        # host rngs/arrays from enclosing scopes)
+        host_names = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    (u.call_name(node.value) or "").startswith(
+                        ("np.", "numpy.")):
+                host_names.update(u.assigned_names(node))
+        for fn in u.walk_functions(mod.tree):
+            if isinstance(fn, ast.Lambda):
+                continue
+            yield from self._check_body(fn, mod, host_names, in_loop=False)
+
+    def _check_body(self, node, mod, host_names, in_loop):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, u.FUNC_TYPES) and node is not child:
+                continue    # nested defs get their own pass
+            loop_now = in_loop or isinstance(child, (ast.For, ast.While))
+            if isinstance(child, ast.Call):
+                name = u.call_name(child)
+                if name in ("float", "int") and child.args:
+                    arg = child.args[0]
+                    # d["key"] is a dict lookup (host), not array indexing
+                    dict_sub = (isinstance(arg, ast.Subscript)
+                                and isinstance(arg.slice, ast.Constant)
+                                and isinstance(arg.slice.value, str))
+                    if in_loop and not dict_sub and \
+                            isinstance(arg, ast.Subscript) and \
+                            isinstance(arg.value, ast.Name) and \
+                            arg.value.id not in host_names:
+                        yield Finding(
+                            mod.rel, child.lineno, self.name,
+                            f"per-element {name}(x[i]) in a loop syncs "
+                            "the device once per element — hoist one "
+                            "np.asarray(x) above the loop")
+            if isinstance(child, (ast.ListComp, ast.SetComp,
+                                  ast.GeneratorExp)):
+                yield from self._check_comp(child, mod, host_names)
+            yield from self._check_body(child, mod, host_names, loop_now)
+
+    def _check_comp(self, comp, mod, host_names):
+        targets = set()
+        host_iter = True
+        for gen in comp.generators:
+            targets.update([gen.target.id]
+                           if isinstance(gen.target, ast.Name) else [])
+            it = gen.iter
+            if isinstance(it, ast.Name) and it.id in host_names:
+                continue
+            if isinstance(it, ast.Call):
+                n = u.call_name(it) or ""
+                if n.startswith(("np.", "numpy.")) or \
+                        n in ("range", "enumerate", "sorted", "zip", "list"):
+                    continue
+                # method call on a host-bound object (rng.lognormal(...))
+                if isinstance(it.func, ast.Attribute) and \
+                        isinstance(it.func.value, ast.Name) and \
+                        it.func.value.id in host_names:
+                    continue
+            host_iter = False
+        if host_iter:
+            return
+        elt = comp.elt
+        if isinstance(elt, ast.Call) and u.call_name(elt) in ("float", "int") \
+                and elt.args and isinstance(elt.args[0], ast.Name) \
+                and elt.args[0].id in targets:
+            yield Finding(
+                mod.rel, elt.lineno, self.name,
+                "[float(v) for v in x] over a device array pulls one "
+                "element at a time — np.asarray(x, np.float32).tolist() "
+                "is one transfer with identical values")
