@@ -1,0 +1,122 @@
+"""Multi-tenant serving sweep: cache size vs throughput vs hit-rate.
+
+Runs the continuous-batching engine over the SAME seeded Zipf trace at
+several paged-cache sizes and records, per cache size, the adapters
+resident on device, the generated-token throughput, and the cache
+hit/miss/eviction profile.  On this CPU container the grouped decode
+path runs the jnp gather kernel (the off-TPU production default — see
+docs/kernels.md dispatch rules), so tokens/s is a CPU plumbing number,
+not a TPU figure; hit-rate and eviction counts are exact and
+hardware-independent.
+
+Writes `BENCH_serving.json` at the repo root: one row per cache size.
+Future PRs regress hit-rate/eviction counts against this file — they are
+deterministic given the trace seed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import QUICK, emit, row
+from repro.models import lora as lora_mod
+from repro.models import model as mdl
+from repro.models.config import LoRAConfig, ModelConfig
+from repro.models.layers import init_params
+from repro.serving import (HostAdapterStore, PagedAdapterCache, ServingEngine,
+                           synth_trace)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_serving.json")
+
+CFG = ModelConfig(name="serve-bench", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=256, param_dtype="float32",
+                  compute_dtype="float32")
+
+N_CLIENTS = 12
+N_LANES = 4
+MAX_LEN = 24
+PAGE_SWEEP = (2, 4) if QUICK else (2, 4, 8, 12)
+N_REQUESTS = 24 if QUICK else 96
+
+
+def _adapters(lcfg):
+    store = HostAdapterStore()
+    akey = jax.random.key(1)
+    for c in range(N_CLIENTS):
+        kc = jax.random.fold_in(akey, c)
+        lt = lora_mod.init_lora(CFG, lcfg, kc)
+        lt = jax.tree.map(
+            lambda x: x + 0.02 * jax.random.normal(
+                jax.random.fold_in(kc, 7), x.shape, x.dtype), lt)
+        store.put(c, lt)
+    return store
+
+
+def serving_sweep(rows):
+    lcfg = LoRAConfig(rank=4, alpha=8, dtype="float32")
+    params = init_params(mdl.model_spec(CFG), jax.random.key(0))
+    store = _adapters(lcfg)
+    trace = synth_trace(N_REQUESTS, N_CLIENTS, CFG.vocab_size, seed=7,
+                        prompt_buckets=(4, 8), gen_range=(3, 10))
+    jrows = []
+    for pages in PAGE_SWEEP:
+        cache = PagedAdapterCache(store, store.get(0), pages=pages)
+        eng = ServingEngine(params, CFG, cache, n_lanes=N_LANES,
+                            lora_scale=lcfg.scale, max_len=MAX_LEN)
+        t0 = time.perf_counter()
+        rep = eng.run(trace)
+        wall = time.perf_counter() - t0
+        st = rep.cache
+        label = f"pages{pages}_lanes{N_LANES}"
+        rows.append(row("serving", label, "tokens_per_s", rep.tokens_per_s))
+        rows.append(row("serving", label, "cache_hit_rate", st["hit_rate"]))
+        rows.append(row("serving", label, "evictions", st["evictions"]))
+        jrows.append({
+            "pages": pages, "lanes": N_LANES, "tenants": N_CLIENTS,
+            "requests": rep.requests,
+            "adapters_resident": st["resident"],
+            "tokens_per_s": round(rep.tokens_per_s, 1),
+            "generated_tokens": rep.generated_tokens,
+            "hit_rate": round(st["hit_rate"], 4),
+            "hits": st["hits"], "misses": st["misses"],
+            "evictions": st["evictions"],
+            "admission_stalls": rep.stalls,
+            "mean_occupancy": round(rep.mean_occupancy, 3),
+            "wall_s": round(wall, 3),
+        })
+    return jrows
+
+
+def write_bench_json(jrows):
+    payload = {
+        "bench": "multi_tenant_serving_sweep",
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "note": ("tokens/s is a CPU plumbing number (grouped gather decode "
+                 "path); hit-rate/evictions are deterministic for the trace "
+                 "seed and regressable on any backend"),
+        "quick": QUICK,
+        "trace": {"requests": N_REQUESTS, "tenants": N_CLIENTS, "seed": 7,
+                  "zipf_a": 1.1},
+        "rows": jrows,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {BENCH_JSON} ({len(jrows)} rows)", flush=True)
+
+
+def main():
+    rows = []
+    jrows = serving_sweep(rows)
+    write_bench_json(jrows)
+    return emit(rows, "Multi-tenant serving (paged adapter cache sweep)")
+
+
+if __name__ == "__main__":
+    main()

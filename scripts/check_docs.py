@@ -113,6 +113,8 @@ REGISTRY_REF_RES = (
     (re.compile(r'\.with_strategy\("(\w+)"'), "strategies"),
     (re.compile(r'\bresolve\("(\w+)"\)'), "strategies"),
     (re.compile(r'selector="(\w+)"'), "selectors"),
+    (re.compile(r'kernel="(\w+)"'), "grouped_kernels"),
+    (re.compile(r'resolve_grouped_kernel\("(\w+)"'), "grouped_kernels"),
     (re.compile(r'\.with_engine\("(\w+)"'), "engines"),
     (re.compile(r'resolve_engine\("(\w+)"'), "engines"),
     (re.compile(r"BENCH_ENGINE=([a-z_]+)"), "engines"),
@@ -123,6 +125,7 @@ REGISTRY_REF_RES = (
 # a table whose nearest heading/intro names one of these gets its
 # first-column backticked names checked against the mapped registries
 TABLE_KEYWORDS = (("selector", ("selectors",)),
+                  ("grouped kernel", ("grouped_kernels",)),
                   ("engine", ("engines",)),
                   ("transport stage", ("stages",)),
                   ("strateg", ("strategies",)),
@@ -154,8 +157,8 @@ def check_registry_names(md_path, registries):
     # it: those names are locally valid, everything else must be live
     registries = {r: set(names) for r, names in registries.items()}
     registries["rules"].add("all")      # `disable=all` is builtin
-    for m in re.finditer(r'@register_(strategy|selector|engine|stage|rule)'
-                         r'\("([\w-]+)"\)', text):
+    for m in re.finditer(r'@register_(strategy|selector|grouped_kernel|'
+                         r'engine|stage|rule)\("([\w-]+)"\)', text):
         registries[REGISTER_FUNCS["register_" + m.group(1)]].add(m.group(2))
     for pat, registry in REGISTRY_REF_RES:
         for match in pat.findall(text):

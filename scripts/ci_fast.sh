@@ -19,6 +19,8 @@
 #   4. the docs gate (scripts/check_docs.py: README/docs code
 #      references and registry tables must resolve,
 #      examples/quickstart.py must run).
+#   5. a multi-tenant serving smoke: the continuous-batching engine over
+#      a tiny arch, 4 adapters, 8 requests (repro.launch.serve).
 #
 # The full tier-1 suite (ROADMAP.md) still covers the slow
 # model-training paths.
@@ -31,3 +33,5 @@ python -m tools.reprolint src tests --json experiments/reprolint.json
 scripts/typecheck.sh
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m fast "$@"
 python scripts/check_docs.py
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.launch.serve \
+    --arch yi-9b --clients 4 --pages 2 --lanes 2 --requests 8 --max-len 32

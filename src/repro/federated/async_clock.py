@@ -113,9 +113,12 @@ def staleness_weight(staleness: int, alpha: float) -> float:
 class Job:
     """One client's local update in flight on the virtual clock.
 
-    `delta`/`loss` hold the already-computed device results (the engine
-    runs the client phase eagerly at job start — the client's view of the
-    server is frozen then, so virtual completion time is pure bookkeeping).
+    `delta`/`loss` hold the already-computed results as HOST numpy rows
+    (the engine runs the client phase eagerly at job start — the client's
+    view of the server is frozen then, so virtual completion time is pure
+    bookkeeping — and bulk-transfers the cohort outputs once; keeping
+    device rows here would pin the stacked device result until the last
+    straggler aggregates).
     """
     slot: int                   # global client index
     version: int                # server version (round) the job started from

@@ -743,10 +743,14 @@ class AsyncEngine(Engine):
             deltas, up_nnzs, losses, down_nnzs = client_fn(slots, repeats)(
                 state.flatP, state.sstate, jnp.asarray(version, jnp.int32),
                 batch, rng)
-            # one bulk pull per direction: per-index float() on the device
-            # arrays would sync the stream once per job in this loop
+            # one bulk pull per output: per-index float()/row indexing on
+            # the device arrays would sync the stream once per job in this
+            # loop, and device rows held in Jobs would pin the whole stacked
+            # cohort result until the last straggler aggregates
             down_host = np.asarray(down_nnzs, np.float32)
             up_host = np.asarray(up_nnzs, np.float32)
+            delta_host = np.asarray(deltas, np.float32)
+            loss_host = np.asarray(losses, np.float32)
             for i, c in enumerate(slots):
                 dn, un = float(down_host[i]), float(up_host[i])
                 dur = (prof.down_time(c, comm_mod.coded_message_bytes(
@@ -757,7 +761,7 @@ class AsyncEngine(Engine):
                 clock.submit(ac.Job(
                     slot=c, version=version, seq=clock.next_seq(),
                     t_start=clock.now, t_finish=clock.now + dur,
-                    delta=deltas[i], loss=losses[i],
+                    delta=delta_host[i], loss=loss_host[i],
                     down_nnz=dn, up_nnz=un))
                 clock.job_counts[c] += 1
 
@@ -831,7 +835,10 @@ class AsyncEngine(Engine):
         weights = jnp.asarray(
             [ac.staleness_weight(s, self.staleness_alpha) for s in staleness],
             jnp.float32)
-        deltas = jnp.stack([j.delta for j in jobs])
+        # jobs carry host rows (see launch): one H2D upload of the stacked
+        # buffer, instead of stacking per-job device remnants
+        deltas = jnp.asarray(np.stack([np.asarray(j.delta, np.float32)
+                                       for j in jobs]))
         state.flatP, state.server, state.sstate = server_fn(
             state.flatP, state.server, state.sstate, deltas, weights)
         drop_down, drop_up = clock.take_drops()

@@ -1,15 +1,44 @@
-"""Pallas TPU kernel: fused LoRA matmul  y = x @ W + scale * (x @ a) @ b.
+"""Pallas TPU kernels: fused LoRA matmul + the grouped multi-adapter delta.
 
-Serving/training hot path for every adapter-bearing linear.  MXU tiling:
-grid (M/bm, N/bn, K/bk) with an f32 VMEM accumulator; the low-rank path
-(xa @ b, rank r padded to the 128 lane width) is added in the K-epilogue so
-the LoRA contribution costs one extra (bm, r) x (r, bn) MXU pass per output
-tile instead of a separate kernel launch + HBM round-trip for the xW result.
-`xa = x @ a` (M x r, tiny) is computed outside and passed in.
+Two serving/training hot paths live here:
+
+* `lora_matmul_pallas` — single-adapter fused  y = x @ W + scale*(x@a)@b.
+  MXU tiling: grid (M/bm, N/bn, K/bk) with an f32 VMEM accumulator; the
+  low-rank path (xa @ b, rank r padded to the 128 lane width) is added in
+  the K-epilogue so the LoRA contribution costs one extra (bm, r) x (r, bn)
+  MXU pass per output tile instead of a separate kernel launch + HBM
+  round-trip for the xW result.  `xa = x @ a` (M x r, tiny) is computed
+  outside and passed in.
+
+* the **grouped-kernel registry** — the multi-tenant serving path
+  (punica / S-LoRA-style BGMV): one batch whose rows belong to *different*
+  clients' adapters, applied in a single fused gather+matmul.  A
+  `GroupedLoraKernel` computes  delta[m] = scale * (x[m] @ a[g[m]]) @ b[g[m]]
+  for a page pool a (G, K, R), b (G, R, N) and per-row page indices
+  g (M,).  Implementations register behind `@register_grouped_kernel`
+  (the `core.selectors` registry idiom):
+
+    - ``grouped_ref``    — per-row reference loop (`lax.map`).  The
+      bit-exact semantics the serving tests freeze.
+    - ``grouped_gather`` — batched `jnp.take` + einsum, pure jnp.  The
+      CPU/GPU production path (XLA batches the row matmuls).
+    - ``grouped_pallas`` — scalar-prefetch Pallas kernel: the page
+      indices arrive as a `PrefetchScalarGridSpec` scalar operand so each
+      row's (K, R)/(R, bn) pages are gathered by the BlockSpec index maps
+      while the row is multiplied — one fused pass, no (M, K, R) gather
+      materialized in HBM.  Bit-identical to ``grouped_ref`` by
+      construction (same two-dot f32 contraction per row); off TPU it
+      runs under Pallas interpret mode automatically.
+
+`models.layers.linear` dispatches here whenever a LoRA dict carries a
+`gidx` leaf (see `serving.cache.paged_lora`), so the whole model stack —
+attention, MLP, SSM projections — serves mixed-adapter batches without
+threading any new argument.  See docs/serving.md.
 """
 from __future__ import annotations
 
 import functools
+from typing import ClassVar, Dict, Optional, Tuple, Type, Union
 
 import jax
 import jax.numpy as jnp
@@ -60,3 +89,190 @@ def lora_matmul_pallas(x, w, a, b, scale: float, *, bm=128, bn=128, bk=512,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],   # f32 accumulator
         interpret=interpret,
     )(x, w, xa, b, scale_arr)
+
+
+# ---------------------------------------------------------------------------
+# grouped multi-adapter delta (the multi-tenant serving hot path)
+# ---------------------------------------------------------------------------
+
+class GroupedLoraKernel:
+    """Batched-adapter LoRA delta protocol.
+
+    `delta(x, a, b, gidx, scale)` with x (M, K), page pools a (G, K, R) /
+    b (G, R, N), and per-row page indices gidx (M,) int32 returns the
+    (M, N) LoRA contribution  scale * (x[m] @ a[g]) @ b[g]  in x.dtype.
+    Implementations must be pure jax (jit-safe) and must not reorder the
+    per-row contraction: two dots per row, f32 accumulation, scale applied
+    to the second product — the contract `grouped_ref` freezes and
+    `grouped_pallas` matches bit-for-bit.
+    """
+
+    name: ClassVar[str] = "base"
+
+    def delta(self, x: jax.Array, a: jax.Array, b: jax.Array,
+              gidx: jax.Array, scale) -> jax.Array:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+_GROUPED_REGISTRY: Dict[str, Type[GroupedLoraKernel]] = {}
+_GROUPED_DEFAULTS: Dict[str, GroupedLoraKernel] = {}
+
+
+def register_grouped_kernel(name: str):
+    """Class decorator: `@register_grouped_kernel("grouped_gather")` makes
+    the kernel reachable from every `kernel=` seam in the serving stack."""
+    def deco(cls: Type[GroupedLoraKernel]) -> Type[GroupedLoraKernel]:
+        assert issubclass(cls, GroupedLoraKernel), cls
+        cls.name = name
+        _GROUPED_REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def registered_grouped_kernels() -> Tuple[str, ...]:
+    return tuple(sorted(_GROUPED_REGISTRY))
+
+
+GroupedKernelLike = Union[str, GroupedLoraKernel]
+
+
+def resolve_grouped_kernel(obj: Optional[GroupedKernelLike]
+                           ) -> GroupedLoraKernel:
+    """Kernel name or instance -> instance; None -> the backend default
+    (`grouped_pallas` on TPU, `grouped_gather` everywhere else — the
+    interpreter's per-block cost makes the jnp gather path the faster CPU
+    production path, mirroring the selector dispatch rules)."""
+    if obj is None:
+        obj = ("grouped_pallas" if jax.default_backend() == "tpu"
+               else "grouped_gather")
+    if isinstance(obj, GroupedLoraKernel):
+        return obj
+    if isinstance(obj, str):
+        if obj not in _GROUPED_REGISTRY:
+            raise KeyError(f"no grouped kernel registered for {obj!r}; "
+                           f"known: {registered_grouped_kernels()}")
+        if obj not in _GROUPED_DEFAULTS:
+            _GROUPED_DEFAULTS[obj] = _GROUPED_REGISTRY[obj]()
+        return _GROUPED_DEFAULTS[obj]
+    raise TypeError(f"cannot resolve {obj!r} to a GroupedLoraKernel")
+
+
+def grouped_lora_delta(x, a, b, gidx, scale,
+                       kernel: Optional[GroupedKernelLike] = None):
+    """Dispatch helper: x (..., K) with gidx broadcastable to the leading
+    dims (one adapter per row; a (B,)-shaped gidx serves a (B, S, K)
+    prefill batch with one adapter per sequence).  Returns (..., N) in
+    a.dtype (callers cast back, like the single-adapter path in
+    `models.layers.linear`)."""
+    kern = resolve_grouped_kernel(kernel)
+    lead = x.shape[:-1]
+    gidx = jnp.asarray(gidx, jnp.int32)
+    g = jnp.broadcast_to(
+        gidx.reshape(gidx.shape + (1,) * (len(lead) - gidx.ndim)), lead)
+    x2 = x.reshape(-1, x.shape[-1]).astype(a.dtype)
+    out = kern.delta(x2, a, b, g.reshape(-1), scale)
+    return out.reshape(lead + (b.shape[-1],))
+
+
+@register_grouped_kernel("grouped_ref")
+class RefGroupedKernel(GroupedLoraKernel):
+    """Per-row reference loop — the bit-exact semantics.  One `lax.map`
+    step per row: xa = x_m @ a[g_m] (f32), delta = scale * (xa @ b[g_m])."""
+
+    def delta(self, x, a, b, gidx, scale):
+        scale = jnp.asarray(scale, jnp.float32)
+
+        def row(args):
+            xr, g = args
+            xa = jnp.dot(xr[None], a[g], preferred_element_type=jnp.float32)
+            y = scale * jnp.dot(xa, b[g], preferred_element_type=jnp.float32)
+            return y[0].astype(x.dtype)
+
+        return jax.lax.map(row, (x, gidx))
+
+
+@register_grouped_kernel("grouped_gather")
+class GatherGroupedKernel(GroupedLoraKernel):
+    """Batched gather + einsum, pure jnp.  XLA turns the per-row matmuls
+    into one batched contraction; the (M, K, R) gather is materialized,
+    which is fine at serving batch sizes (M = lanes)."""
+
+    def delta(self, x, a, b, gidx, scale):
+        ag = jnp.take(a, gidx, axis=0)              # (M, K, R)
+        bg = jnp.take(b, gidx, axis=0)              # (M, R, N)
+        xa = jnp.einsum("mk,mkr->mr", x, ag,
+                        preferred_element_type=jnp.float32)
+        y = jnp.asarray(scale, jnp.float32) * jnp.einsum(
+            "mr,mrn->mn", xa, bg, preferred_element_type=jnp.float32)
+        return y.astype(x.dtype)
+
+
+def _grouped_kernel(gidx_ref, x_ref, a_ref, b_ref, scale_ref, o_ref):
+    # gidx_ref is the scalar-prefetch operand: consumed by the BlockSpec
+    # index maps (the gather), not read here.
+    del gidx_ref
+    xa = jnp.dot(x_ref[...], a_ref[0], preferred_element_type=jnp.float32)
+    o_ref[...] = (scale_ref[0] * jnp.dot(xa, b_ref[0],
+                                         preferred_element_type=jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+@register_grouped_kernel("grouped_pallas")
+class PallasGroupedKernel(GroupedLoraKernel):
+    """Scalar-prefetch fused gather+matmul (the TPU production path).
+
+    The page indices ride `pltpu.PrefetchScalarGridSpec`
+    (num_scalar_prefetch=1), so the index maps pick row m's (K, R) /
+    (R, bn) pages straight out of the pools while the MXU consumes them —
+    the gather never round-trips through HBM.  Grid (M, N/bn): one row and
+    one bn-wide output tile per program.  N is zero-padded to the bn
+    multiple internally (padded columns are sliced off; padding cannot
+    perturb the surviving columns, each output tile is an independent
+    (1,R) x (R,bn) product).  `interpret=None` auto-detects: native on
+    TPU, Pallas interpret mode everywhere else — results are bit-identical
+    to ``grouped_ref`` either way.
+    """
+
+    def __init__(self, bn: int = 128, interpret: Optional[bool] = None):
+        self.bn = bn
+        self.interpret = interpret
+
+    def _interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return bool(self.interpret)
+
+    def delta(self, x, a, b, gidx, scale):
+        M, K = x.shape
+        G, R, N = b.shape
+        bn = min(self.bn, N)
+        pad = -N % bn
+        if pad:
+            b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+        n_pad = N + pad
+        assert n_pad % bn == 0, (N, bn)     # padded above; grid drops no tail
+        scale_arr = jnp.full((1,), scale, jnp.float32)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(M, n_pad // bn),
+            in_specs=[
+                pl.BlockSpec((1, K), lambda i, j, g: (i, 0)),        # x row
+                pl.BlockSpec((1, K, R), lambda i, j, g: (g[i], 0, 0)),  # a page
+                pl.BlockSpec((1, R, bn), lambda i, j, g: (g[i], 0, j)),  # b page
+                pl.BlockSpec((1,), lambda i, j, g: (0,)),            # scale
+            ],
+            out_specs=pl.BlockSpec((1, bn), lambda i, j, g: (i, j)),
+        )
+        out = pl.pallas_call(
+            _grouped_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((M, n_pad), x.dtype),
+            interpret=self._interpret(),
+        )(gidx, x, a, b, scale_arr)
+        return out[:, :N]
+
+    def __repr__(self):
+        return f"PallasGroupedKernel(bn={self.bn}, interpret={self.interpret})"

@@ -33,6 +33,8 @@ def main():
     ap.add_argument("--rounds-per-call", type=int, default=1,
                     help="scan-chunk k rounds into one device call (sharded)")
     ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds param init and the synthetic data stream")
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
@@ -61,12 +63,12 @@ def main():
     print(f"[train] {args.arch} (reduced: {cfg.num_layers}L d{cfg.d_model}) "
           f"strategy={args.strategy} d={args.density} r={args.rank} "
           f"engine={args.engine}")
-    params = init_params(mdl.model_spec(cfg), jax.random.key(0))
+    params = init_params(mdl.model_spec(cfg), jax.random.key(args.seed))
     fed = FederatedConfig(n_clients=args.clients, local_batch=4, local_steps=1,
                           client_lr=1e-3, server_lr=2e-3)
 
     S = 32
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
 
     def batch_for_round(r):
         b = {"tokens": jnp.asarray(rng.integers(

@@ -191,14 +191,17 @@ def _grouped_out_f32(probs, v):
 def decode_attention(q1, k, v, scale, *, valid=None):
     """Single-token decode: q1 (B,1,H,hd), k/v (B,T,KV,hd) (T may be
     seq-sharded over the `model` axis; the softmax reductions lower to
-    cheap all-reduces rather than a cache gather).  `valid` (T,) bool masks
-    unfilled cache slots."""
+    cheap all-reduces rather than a cache gather).  `valid` bool masks
+    unfilled cache slots: (T,) shared, or (B, T) per-row (continuous
+    batching serves lanes at different positions)."""
     B, _, H, hd = q1.shape
     T, KV = k.shape[1], k.shape[2]
     hdv = v.shape[-1]
     qg = q1.reshape(B, 1, KV, H // KV, hd)
     s = _grouped_scores(qg, k, scale)                 # (B,KV,G,1,T)
     if valid is not None:
+        if valid.ndim == 2:
+            valid = valid[:, None, None, None, :]     # (B,1,1,1,T)
         s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = _grouped_out(p, v).reshape(B, 1, H, hdv)
@@ -207,8 +210,29 @@ def decode_attention(q1, k, v, scale, *, valid=None):
 
 def cache_valid_mask(T: int, pos):
     """Valid cache slots after writing at slot (pos % T): every slot j <= pos,
-    or all slots once a rolling buffer has wrapped (pos >= T)."""
-    return (jnp.arange(T) <= pos) | (pos >= T)
+    or all slots once a rolling buffer has wrapped (pos >= T).  pos () ->
+    (T,); pos (B,) -> (B, T) per-row masks."""
+    pos = jnp.asarray(pos)
+    return (jnp.arange(T) <= pos[..., None]) | (pos[..., None] >= T)
+
+
+def _decode_positions(pos):
+    """Rope positions for one decode step: () -> (1,) shared; (B,) ->
+    (B, 1) per-row (each lane rotates by its own position)."""
+    return pos[None] if pos.ndim == 0 else pos[:, None]
+
+
+def _cache_write(cache, new, pos):
+    """Write this step's (B, 1, ...) entry at slot pos % T.  Scalar pos
+    keeps the seed `dynamic_update_slice` path (bit-exact anchor); a (B,)
+    pos scatters one slot per row (continuous-batching lanes)."""
+    T = cache.shape[1]
+    slot = (pos % T).astype(jnp.int32)
+    if slot.ndim:
+        return cache.at[jnp.arange(cache.shape[0]), slot].set(
+            new[:, 0].astype(cache.dtype))
+    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
+                                               slot, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -264,7 +288,9 @@ def gqa_forward(params, x, cfg: ModelConfig, *, lora=None, lora_scale=1.0,
 def gqa_decode(params, x1, cache, pos, cfg: ModelConfig, *, lora=None,
                lora_scale=1.0, window=None, update_cache=True):
     """One-token decode. cache = (k, v) with k/v (B, T, KV, hd); for
-    sliding-window archs T == window (rolling buffer, slot = pos % window)."""
+    sliding-window archs T == window (rolling buffer, slot = pos % window).
+    pos is () shared across the batch, or (B,) per-row (continuous
+    batching: each lane decodes at its own position)."""
     B, _, D = x1.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
     lget = (lora or {}).get
@@ -274,12 +300,11 @@ def gqa_decode(params, x1, cache, pos, cfg: ModelConfig, *, lora=None,
     k = linear(x1, params["wk"], lget("wk"), lora_scale).reshape(B, 1, KV, hd)
     v = linear(x1, params["wv"], lget("wv"), lora_scale).reshape(B, 1, KV, hd)
     q, k = _maybe_qk_norm(params, q, k, cfg)
-    q = apply_rope(q, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
-    k = apply_rope(k, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    q = apply_rope(q, _decode_positions(pos), cfg.rope_theta)
+    k = apply_rope(k, _decode_positions(pos), cfg.rope_theta)
     if update_cache:
-        slot = (pos % T).astype(jnp.int32)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, 1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, 1)
+        k_cache = _cache_write(k_cache, k, pos)
+        v_cache = _cache_write(v_cache, v, pos)
     scale = 1.0 / math.sqrt(hd)
     out = decode_attention(q, k_cache, v_cache, scale,
                            valid=cache_valid_mask(T, pos))
@@ -373,15 +398,14 @@ def mla_decode(params, x1, cache, pos, cfg: ModelConfig, *, lora=None,
     T = c_cache.shape[1]
 
     q_nope, q_rope = _mla_q(params, x1, cfg, lget, lora_scale)
-    q_rope = apply_rope(q_rope, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, _decode_positions(pos), cfg.rope_theta)
 
     kv = linear(x1, params["wkv_a"], lget("wkv_a"), lora_scale)
     c_new = rms_norm(kv[..., :R], params["kv_norm"], cfg.norm_eps)
-    r_new = apply_rope(kv[..., R:], pos[None] if pos.ndim == 0 else pos, cfg.rope_theta, head_axis=False)
+    r_new = apply_rope(kv[..., R:], _decode_positions(pos), cfg.rope_theta, head_axis=False)
     if update_cache:
-        slot = (pos % T).astype(jnp.int32)
-        c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new.astype(c_cache.dtype), slot, 1)
-        r_cache = jax.lax.dynamic_update_slice_in_dim(r_cache, r_new.astype(r_cache.dtype), slot, 1)
+        c_cache = _cache_write(c_cache, c_new, pos)
+        r_cache = _cache_write(r_cache, r_new, pos)
 
     wk_b = params["wk_b"].reshape(R, H, nope)
     wv_b = params["wv_b"].reshape(R, H, vd)
@@ -392,7 +416,8 @@ def mla_decode(params, x1, cache, pos, cfg: ModelConfig, *, lora=None,
     s += jnp.einsum("bshd,btd->bhst", q_rope, r_cache,
                     preferred_element_type=jnp.float32)
     s *= 1.0 / math.sqrt(nope + rope_d)
-    s = jnp.where(cache_valid_mask(T, pos), s, NEG_INF)
+    vm = cache_valid_mask(T, pos)                      # (T,) or (B,T)
+    s = jnp.where(vm if vm.ndim == 1 else vm[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o_c = jnp.einsum("bhst,btr->bshr", p.astype(c_cache.dtype), c_cache)
     out = jnp.einsum("bshr,rhd->bshd", o_c, wv_b.astype(o_c.dtype))

@@ -85,11 +85,24 @@ def rms_norm(x, weight, eps=1e-6):
 
 
 def linear(x, w, lora=None, scale=1.0):
-    """y = x @ w (+ LoRA path). w: (d_in, d_out); lora: {'a': (d_in, r), 'b': (r, d_out)}."""
+    """y = x @ w (+ LoRA path). w: (d_in, d_out); lora: {'a': (d_in, r), 'b': (r, d_out)}.
+
+    A lora dict carrying a `gidx` leaf is a *paged* adapter: 'a'/'b' are
+    page pools (G, d_in, r) / (G, r, d_out) and gidx assigns one page per
+    leading-dim row (the multi-tenant serving path; see
+    `serving.cache.paged_lora`).  The delta dispatches through the
+    grouped-kernel registry in `kernels.lora_matmul`.
+    """
     y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
     if lora is not None:
-        xa = jnp.einsum("...i,ir->...r", x.astype(lora["a"].dtype), lora["a"])
-        y = y + (scale * jnp.einsum("...r,ro->...o", xa, lora["b"])).astype(y.dtype)
+        if "gidx" in lora:
+            from repro.kernels.lora_matmul import grouped_lora_delta
+            delta = grouped_lora_delta(x, lora["a"], lora["b"],
+                                       lora["gidx"], scale)
+            y = y + delta.astype(y.dtype)
+        else:
+            xa = jnp.einsum("...i,ir->...r", x.astype(lora["a"].dtype), lora["a"])
+            y = y + (scale * jnp.einsum("...r,ro->...o", xa, lora["b"])).astype(y.dtype)
     return y
 
 

@@ -478,8 +478,12 @@ def prefill(params, cfg: ModelConfig, batch, *, lora=None, lora_scale=1.0,
 
 def decode_step(params, cfg: ModelConfig, token, pos, cache, *, lora=None,
                 lora_scale: float = 1.0, window=None):
-    """token (B,) int32; pos () int32; cache as returned by prefill or
-    cache_spec. Returns (logits (B,1,V), new_cache)."""
+    """token (B,) int32; pos () int32 shared, or (B,) int32 per-row (the
+    continuous-batching serving path: each lane at its own position);
+    cache as returned by prefill or cache_spec.  A paged lora tree (leaf
+    dicts carrying `gidx`, see `serving.cache.paged_lora`) serves a
+    different adapter per row through the same call.  Returns
+    (logits (B,1,V), new_cache)."""
     x1 = embed_tokens(params, cfg, token[:, None])
     x1 = constrain(x1, ("batch", None, None))
     new_caches = {}

@@ -1,0 +1,30 @@
+"""Multi-tenant LoRA serving: the paper's adapters, served.
+
+FLASC trains a *different* sparse-communicated LoRA module per client;
+this package is the other half of the north star — serving millions of
+those personalized adapters from one backbone:
+
+* `serving.cache`     — paged device-resident adapter cache (LRU by
+  client id, host-side spill, hit/miss/eviction counters) loading
+  adapters from the same `checkpoint/io` snapshots training writes.
+* `serving.trace`     — seeded synthetic multi-tenant request traces
+  (Zipf client popularity, bucketed prompt lengths).
+* `serving.scheduler` — continuous batching: admission/retirement over
+  fixed decode lanes, reusing the `federated.async_clock` event-queue
+  idiom.
+* `serving.engine`    — batched prefill + grouped-adapter decode driving
+  the `kernels.lora_matmul` grouped-kernel registry.
+
+See docs/serving.md for the design and a runnable quickstart.
+"""
+from repro.serving.cache import (HostAdapterStore, PagedAdapterCache,
+                                 page_lora, paged_lora)
+from repro.serving.engine import ServingEngine, ServingReport
+from repro.serving.scheduler import ContinuousBatchingScheduler, Lane
+from repro.serving.trace import Request, synth_trace
+
+__all__ = [
+    "ContinuousBatchingScheduler", "HostAdapterStore", "Lane",
+    "PagedAdapterCache", "Request", "ServingEngine", "ServingReport",
+    "page_lora", "paged_lora", "synth_trace",
+]

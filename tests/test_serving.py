@@ -1,0 +1,318 @@
+"""Multi-tenant serving: grouped-kernel bit-equality, paged cache LRU,
+trace determinism, scheduler invariants, engine vs single-adapter parity,
+and the merge-for-serving cross-check promoted from examples/serve_lora.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.lora_matmul import (PallasGroupedKernel,
+                                       grouped_lora_delta,
+                                       registered_grouped_kernels,
+                                       resolve_grouped_kernel)
+from repro.models import lora as lora_mod
+from repro.models import model as mdl
+from repro.models.config import LoRAConfig, ModelConfig
+from repro.models.layers import init_params
+from repro.serving import (ContinuousBatchingScheduler, HostAdapterStore,
+                           PagedAdapterCache, ServingEngine, page_lora,
+                           synth_trace)
+
+CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                  param_dtype="float32", compute_dtype="float32")
+
+
+def _grouped_case(key, M, K=24, R=5, N=50, G=3):
+    kx, ka, kb, kg = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    a = jax.random.normal(ka, (G, K, R), jnp.float32)
+    b = jax.random.normal(kb, (G, R, N), jnp.float32)
+    gidx = jax.random.randint(kg, (M,), 0, G)
+    return x, a, b, gidx
+
+
+# ---------------------------------------------------------------------------
+# grouped-kernel registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+def test_grouped_registry_names():
+    names = registered_grouped_kernels()
+    assert {"grouped_ref", "grouped_gather", "grouped_pallas"} <= set(names)
+    if jax.default_backend() != "tpu":
+        # off-TPU dispatch rule: the gather path is the production default
+        assert resolve_grouped_kernel(None).name == "grouped_gather"
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("M", [1, 7, 130])   # non-block-multiple batch sizes
+def test_grouped_pallas_bit_identical_to_ref(M):
+    x, a, b, gidx = _grouped_case(jax.random.key(M), M)
+    ref = grouped_lora_delta(x, a, b, gidx, 1.7, kernel="grouped_ref")
+    pal = grouped_lora_delta(x, a, b, gidx, 1.7, kernel="grouped_pallas")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+    gat = grouped_lora_delta(x, a, b, gidx, 1.7, kernel="grouped_gather")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(gat),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.fast
+def test_grouped_pallas_block_padding_and_interpret():
+    # bn smaller than N forces the lane-padding path; explicit interpret=True
+    # must agree bit-for-bit with the reference loop
+    x, a, b, gidx = _grouped_case(jax.random.key(0), M=9, N=50)
+    ref = grouped_lora_delta(x, a, b, gidx, 0.5, kernel="grouped_ref")
+    kern = PallasGroupedKernel(bn=16, interpret=True)
+    pal = grouped_lora_delta(x, a, b, gidx, 0.5, kernel=kern)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+@pytest.mark.fast
+def test_grouped_mixed_ranks_via_zero_padding():
+    # a rank-2 adapter zero-padded to the rank-4 pool must contribute exactly
+    # its rank-2 delta (the padded b rows are zero)
+    key = jax.random.key(3)
+    kx, ka, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (6, 16), jnp.float32)
+    a2 = jax.random.normal(ka, (16, 2), jnp.float32)
+    b2 = jax.random.normal(kb, (2, 20), jnp.float32)
+    a4 = jnp.pad(a2, ((0, 0), (0, 2)))
+    b4 = jnp.pad(b2, ((0, 2), (0, 0)))
+    pool_a = jnp.stack([a4, jax.random.normal(ka, (16, 4))])
+    pool_b = jnp.stack([b4, jax.random.normal(kb, (4, 20))])
+    gidx = jnp.zeros((6,), jnp.int32)
+    got = grouped_lora_delta(x, pool_a, pool_b, gidx, 2.0, kernel="grouped_ref")
+    want = grouped_lora_delta(x, a2[None], b2[None], gidx, 2.0,
+                              kernel="grouped_ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.fast
+def test_grouped_delta_leading_dims():
+    # (B, T, K) activations with one adapter per batch row
+    x, a, b, _ = _grouped_case(jax.random.key(5), M=6)
+    xbt = x.reshape(2, 3, -1)
+    gidx = jnp.asarray([0, 2], jnp.int32)
+    out = grouped_lora_delta(xbt, a, b, gidx, 1.0, kernel="grouped_gather")
+    assert out.shape == (2, 3, b.shape[-1])
+    flat = grouped_lora_delta(x, a, b, jnp.repeat(gidx, 3), 1.0,
+                              kernel="grouped_gather")
+    np.testing.assert_array_equal(np.asarray(out.reshape(6, -1)),
+                                  np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# paged cache
+# ---------------------------------------------------------------------------
+
+def _tiny_adapter(seed, rank=4, d_in=8, d_out=8, layers=2):
+    rng = np.random.default_rng(seed)
+    return {"g0": {"attn": {"wq": {
+        "a": rng.normal(size=(layers, d_in, rank)).astype(np.float32),
+        "b": rng.normal(size=(layers, rank, d_out)).astype(np.float32)}}}}
+
+
+@pytest.mark.fast
+def test_cache_lru_hit_miss_eviction_and_pins():
+    store = HostAdapterStore()
+    for c in range(3):
+        store.put(c, _tiny_adapter(c))
+    cache = PagedAdapterCache(store, store.get(0), pages=2)
+
+    p0 = cache.acquire(0)
+    p1 = cache.acquire(1)
+    assert {p0, p1} == {0, 1} and cache.misses == 2
+    assert cache.acquire(2) is None          # both pages pinned
+    cache.release(0)
+    p2 = cache.acquire(2)                    # evicts client 0 (LRU, unpinned)
+    assert p2 == p0 and cache.evictions == 1
+    assert cache.page_of(0) is None and cache.page_of(1) == p1
+    assert cache.acquire(1) == p1 and cache.hits == 1   # resident hit
+    st = cache.stats()
+    assert st["resident"] == 2 and st["misses"] == 3
+    # uploaded page content matches the (rank-padded) host adapter
+    page = jax.tree.map(np.asarray, page_lora(cache.pool, p2))
+    want = store.get(2)
+    np.testing.assert_array_equal(page["g0"]["attn"]["wq"]["a"],
+                                  want["g0"]["attn"]["wq"]["a"])
+
+
+@pytest.mark.fast
+def test_cache_rank_padding_is_exact():
+    store = HostAdapterStore()
+    low = _tiny_adapter(7, rank=2)
+    store.put(0, low)
+    cache = PagedAdapterCache(store, _tiny_adapter(0, rank=4), pages=1)
+    assert cache.rank == 4
+    p = cache.acquire(0)
+    page = jax.tree.map(np.asarray, page_lora(cache.pool, p))
+    a = page["g0"]["attn"]["wq"]["a"]
+    b = page["g0"]["attn"]["wq"]["b"]
+    np.testing.assert_array_equal(a[..., :2], low["g0"]["attn"]["wq"]["a"])
+    np.testing.assert_array_equal(a[..., 2:], 0.0)
+    np.testing.assert_array_equal(b[..., 2:, :], 0.0)
+
+
+@pytest.mark.fast
+def test_host_store_disk_roundtrip(tmp_path):
+    store = HostAdapterStore()
+    for c in (3, 11):
+        store.put(c, _tiny_adapter(c))
+    store.save(str(tmp_path))
+    back = HostAdapterStore.load(str(tmp_path))
+    assert back.clients() == [3, 11]
+    for c in (3, 11):
+        for la, lb in zip(jax.tree.leaves(store.get(c)),
+                          jax.tree.leaves(back.get(c))):
+            np.testing.assert_array_equal(la, lb)
+
+
+# ---------------------------------------------------------------------------
+# trace + scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+def test_trace_deterministic_and_bounded():
+    t1 = synth_trace(32, 8, 100, seed=5, prompt_buckets=(4, 8),
+                     gen_range=(2, 6))
+    t2 = synth_trace(32, 8, 100, seed=5, prompt_buckets=(4, 8),
+                     gen_range=(2, 6))
+    assert t1 == t2
+    assert t1 != synth_trace(32, 8, 100, seed=6, prompt_buckets=(4, 8),
+                             gen_range=(2, 6))
+    arr = [r.arrival for r in t1]
+    assert arr == sorted(arr) and arr[0] > 0.0
+    for r in t1:
+        assert r.prompt_len in (4, 8) and len(r.prompt) == r.prompt_len
+        assert 2 <= r.gen_len <= 6
+        assert 0 <= r.client < 8
+        assert all(0 <= t < 100 for t in r.prompt)
+
+
+@pytest.mark.fast
+def test_scheduler_admission_stall_and_retirement():
+    store = HostAdapterStore()
+    for c in range(2):
+        store.put(c, _tiny_adapter(c))
+    cache = PagedAdapterCache(store, store.get(0), pages=1)
+    import dataclasses as dc
+    trace = synth_trace(2, 2, 50, seed=0, prompt_buckets=(4,),
+                        gen_range=(2, 2))
+    # force distinct clients so one page cannot satisfy both at once
+    trace = [dc.replace(trace[0], client=0), dc.replace(trace[1], client=1)]
+    sched = ContinuousBatchingScheduler(trace, cache, n_lanes=2)
+    sched.tick(1e9)
+    lanes = sched.admit()
+    assert len(lanes) == 1 and sched.stalls == 1   # head pinned the only page
+    lane = lanes[0]
+    assert lane.pos == trace[0].prompt_len and lane.remaining == 1
+    sched.push_token(lane, 7)                      # prefill token
+    assert lane.active
+    sched.push_token(lane, 9)                      # budget spent -> retire
+    assert not lane.active and sched.completions[trace[0].rid] == [7, 9]
+    lanes = sched.admit()                          # freed pin admits client 1
+    assert len(lanes) == 1 and lanes[0].request.client == 1
+    sched.push_token(lanes[0], 1)
+    sched.push_token(lanes[0], 2)
+    assert sched.done() and sched.retired == 2
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end parity
+# ---------------------------------------------------------------------------
+
+def _nonzero_lora(cfg, lcfg, seed):
+    k = jax.random.fold_in(jax.random.key(1), seed)
+    lt = lora_mod.init_lora(cfg, lcfg, k)
+    return jax.tree.map(lambda x: x + 0.02 * jax.random.normal(
+        jax.random.fold_in(k, 7), x.shape, x.dtype), lt)
+
+
+def test_engine_matches_single_adapter_reference():
+    params = init_params(mdl.model_spec(CFG), jax.random.key(0))
+    lcfg = LoRAConfig(rank=4, alpha=8, dtype="float32")
+    store = HostAdapterStore()
+    for c in range(5):
+        store.put(c, _nonzero_lora(CFG, lcfg, c))
+    cache = PagedAdapterCache(store, store.get(0), pages=2)
+    trace = synth_trace(6, 5, CFG.vocab_size, seed=3, prompt_buckets=(4, 8),
+                        gen_range=(1, 5))
+    eng = ServingEngine(params, CFG, cache, n_lanes=2, lora_scale=lcfg.scale,
+                        max_len=16)
+    rep = eng.run(trace)
+    assert len(rep.completions) == len(trace)
+    assert rep.cache["hits"] + rep.cache["misses"] > 0
+
+    for req in trace:
+        lt = jax.tree.map(jnp.asarray, store.get(req.client))
+        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        logits, c = mdl.prefill(params, CFG, {"tokens": toks}, lora=lt,
+                                lora_scale=lcfg.scale, max_len=16)
+        want = [int(jnp.argmax(logits[0, -1]))]
+        pos = req.prompt_len
+        for _ in range(req.gen_len - 1):
+            lg, c = mdl.decode_step(
+                params, CFG, jnp.asarray([want[-1]], jnp.int32),
+                jnp.asarray(pos, jnp.int32), c, lora=lt,
+                lora_scale=lcfg.scale)
+            want.append(int(jnp.argmax(lg[0, 0])))
+            pos += 1
+        assert rep.completions[req.rid] == want, req
+
+
+def test_decode_vector_pos_bit_equal_to_scalar():
+    # the (B,) per-lane position path must reproduce the shared-position
+    # path exactly when every lane sits at the same position
+    params = init_params(mdl.model_spec(CFG), jax.random.key(0))
+    B, S = 3, 8
+    batch = {"tokens": jax.random.randint(jax.random.key(2), (B, S), 0,
+                                          CFG.vocab_size)}
+    logits, cache = mdl.prefill(params, CFG, batch, max_len=16)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    lg_s, c_s = mdl.decode_step(params, CFG, tok, jnp.asarray(S), cache)
+    lg_v, c_v = mdl.decode_step(params, CFG, tok,
+                                jnp.full((B,), S, jnp.int32), cache)
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # mixed positions run and only move the row they belong to
+    lg_m, _ = mdl.decode_step(params, CFG, tok,
+                              jnp.asarray([S, 3, 5], jnp.int32), cache)
+    assert lg_m.shape == lg_s.shape
+    np.testing.assert_array_equal(np.asarray(lg_m[0]), np.asarray(lg_s[0]))
+
+
+def test_mla_decode_vector_pos_bit_equal():
+    from repro.configs.registry import get_config
+    cfg = get_config("deepseek-v2-236b", smoke=True)
+    params = init_params(mdl.model_spec(cfg), jax.random.key(0))
+    B, S = 2, 6
+    batch = {"tokens": jax.random.randint(jax.random.key(2), (B, S), 0,
+                                          cfg.vocab_size)}
+    logits, cache = mdl.prefill(params, cfg, batch, max_len=12)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    lg_s, _ = mdl.decode_step(params, cfg, tok, jnp.asarray(S), cache)
+    lg_v, _ = mdl.decode_step(params, cfg, tok,
+                              jnp.full((B,), S, jnp.int32), cache)
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
+
+
+# ---------------------------------------------------------------------------
+# merge-for-serving cross-check (promoted from examples/serve_lora.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+def test_merge_for_serving_matches_unmerged():
+    params = init_params(mdl.model_spec(CFG), jax.random.key(0))
+    lcfg = LoRAConfig(rank=4, alpha=8, dtype="float32")
+    lora = _nonzero_lora(CFG, lcfg, 0)
+    batch = {"tokens": jax.random.randint(jax.random.key(3), (2, 12), 0,
+                                          CFG.vocab_size)}
+    assert not CFG.tie_embeddings
+    merged = lora_mod.merge_lora(params, lora, CFG, lcfg)
+    lg_m = mdl.forward(merged, CFG, batch)["logits"][:, -1]
+    lg_u = mdl.forward(params, CFG, batch, lora=lora,
+                       lora_scale=lcfg.scale)["logits"][:, -1]
+    np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_u),
+                               atol=1e-4, rtol=1e-4)

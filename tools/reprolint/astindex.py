@@ -23,6 +23,7 @@ REGISTER_FUNCS = {"register_strategy": "strategies",
                   "register_selector": "selectors",
                   "register_engine": "engines",
                   "register_stage": "stages",
+                  "register_grouped_kernel": "grouped_kernels",
                   "register_rule": "rules"}
 
 
