@@ -32,6 +32,14 @@ DENSITY = 0.25
 SIZES = [(1 << 20, 3), (1 << 22, 3), (1 << 24, 2), (1 << 26, 1)]
 QUICK_SIZES = [(1 << 20, 3), (1 << 22, 2)]
 
+# streaming passes over the flat vector per sparsify call: the quantity
+# the one-pass pipeline (docs/kernels.md) optimizes.  exact is a sort,
+# not a streaming algorithm; histogram/pallas pay absmax + 24 bisection
+# count passes + the final mask pass; fused pays absmax + one binned
+# histogram + one mask(+quantize+pack) pass.
+STREAMING_PASSES = {"exact": None, "histogram": 26, "pallas": 26,
+                    "fused": 3}
+
 
 def timeit(fn, *args, n=5):
     # synchronize the warmup: jax dispatch is async, so an unawaited
@@ -55,14 +63,16 @@ def selector_sweep(rows):
     sizes = QUICK_SIZES if QUICK else SIZES
     for n, reps in sizes:
         x = jax.random.normal(jax.random.key(0), (n,))
-        for name in ("exact", "histogram", "pallas"):
+        for name in ("exact", "histogram", "pallas", "fused"):
             s = sel.resolve_selector(name)
             fn = jax.jit(lambda v, s=s: s.sparsify(v, DENSITY))
             us = timeit(fn, x, n=reps)
             rows.append(row("kernels", f"topk_{name}_{_label(n)}",
                             "us_per_call", us))
             jrows.append({"selector": name, "n": n, "batch": 1,
-                          "density": DENSITY, "us_per_call": round(us, 1)})
+                          "density": DENSITY,
+                          "streaming_passes": STREAMING_PASSES[name],
+                          "us_per_call": round(us, 1)})
         del x
 
     # batched client axis: 8 clients x 2M entries, traced keep-counts
@@ -70,7 +80,7 @@ def selector_sweep(rows):
     xb = jax.random.normal(jax.random.key(1), (b, nb))
     ks = jnp.asarray([max(int(nb * DENSITY) >> i, 1) for i in range(b)],
                      jnp.int32)
-    for name in ("exact", "histogram", "pallas"):
+    for name in ("exact", "histogram", "pallas", "fused"):
         s = sel.resolve_selector(name)
         fn = jax.jit(jax.vmap(lambda v, k, s=s: s.sparsify_by_count(v, k)))
         us = timeit(fn, xb, ks, n=2)
@@ -78,6 +88,7 @@ def selector_sweep(rows):
                         "us_per_call", us))
         jrows.append({"selector": name, "n": nb, "batch": b,
                       "density": "per-client counts",
+                      "streaming_passes": STREAMING_PASSES[name],
                       "us_per_call": round(us, 1)})
     return jrows
 
@@ -87,9 +98,14 @@ def write_bench_json(jrows):
         "bench": "topk_selector_sweep",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
-        "note": ("pallas numbers are Pallas interpret-mode (CPU) unless "
-                 "backend == tpu; they baseline the selector dispatch, "
-                 "not TPU kernel speed"),
+        "note": ("pallas/fused numbers are Pallas interpret-mode (CPU) "
+                 "unless backend == tpu; they baseline the selector "
+                 "dispatch, not TPU kernel speed.  streaming_passes is "
+                 "the HBM-traffic figure of merit the one-pass pipeline "
+                 "optimizes (docs/kernels.md): the fused selector's 3 "
+                 "passes vs ~26 for the bisection family — wall-time "
+                 "ratios here do NOT reflect that, the interpreter "
+                 "charges per block, not per HBM byte"),
         "quick": QUICK,
         "density": DENSITY,
         "metric": "us_per_call",

@@ -14,8 +14,11 @@
 #      parity/contract tests from tests/test_selectors.py and the
 #      exact_topk deprecation check, communication ledger, engine
 #      registry/callback/chunking units from tests/test_engine.py and
-#      tests/test_async_engine.py, the reprolint rule fixtures) —
-#      everything tagged @pytest.mark.fast.
+#      tests/test_async_engine.py (incl. the sparse-aggregation
+#      sim==async bit-equality anchor), the fused one-pass transport
+#      differential/property layer from tests/test_fused_transport.py,
+#      the reprolint rule fixtures) — everything tagged
+#      @pytest.mark.fast.
 #   4. the docs gate (scripts/check_docs.py: README/docs code
 #      references and registry tables must resolve,
 #      examples/quickstart.py must run).

@@ -127,3 +127,20 @@ class CommLedger:
 
 def lora_dense_bytes(n_params: int) -> int:
     return n_params * VALUE_BYTES
+
+
+def pack_capacity(n_params: int, k: int) -> int:
+    """Static slot count for a packed sparse message whose expected Top-K
+    support is `k` out of `n_params` entries.
+
+    The capacity is `k` plus 12.5% slack (at least 64 slots): the
+    histogram/fused selectors keep *every* entry tied at the threshold, so
+    a message can carry slightly more than `k` values.  Engines treat a
+    message whose nnz exceeds this capacity as an overflow and fall back
+    to the dense aggregation path for that buffer — the slack only has to
+    make overflow rare, not impossible.  Shared by the synchronous and
+    async engines so packed shapes (and therefore jit caches and
+    bit-equality) line up.
+    """
+    assert n_params >= 0 and k >= 0, (n_params, k)
+    return int(min(n_params, k + max(k // 8, 64)))

@@ -33,6 +33,7 @@ from repro.core import dp as dp_mod
 from repro.core import sparsity as sp
 from repro.core import strategies as st
 from repro.core import transport as tp
+from repro.kernels import fused_transport as ft
 from repro.models.config import FederatedConfig
 from repro.optim import adam_init, adam_update
 
@@ -189,6 +190,29 @@ def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
     return out, (m_down_cs, ax_down)
 
 
+def _aggregate_uploads(strat: st.Strategy, deltas, ctx):
+    """`Strategy.aggregate`, routed through the sparse aggregation kernel
+    when the strategy opts in (`StrategySpec.sparse_aggregate`).
+
+    The sparse path packs each (p_len,) upload row into a static-capacity
+    (index, value) pair (`fused_transport.pack_values`) and scatter-adds
+    the packed values directly (`Strategy.aggregate_sparse`) — O(C * cap)
+    instead of O(C * p_len) aggregation reads.  A message whose nonzero
+    support exceeds the capacity (pathological threshold ties) flips the
+    whole round to the dense rule via `jnp.where`, so results are never
+    silently truncated.  Capacity gating is static
+    (`strategies.sparse_aggregate_capacity`): unsupported specs compile
+    the unmodified dense aggregation, byte for byte.
+    """
+    cap = st.sparse_aggregate_capacity(strat, ctx.p_len)
+    if cap == 0:
+        return strat.aggregate(deltas, ctx)
+    idx, val, pnnz = jax.vmap(lambda v: ft.pack_values(v, cap))(deltas)
+    overflow = jnp.any(pnnz > cap)
+    return jnp.where(overflow, strat.aggregate(deltas, ctx),
+                     strat.aggregate_sparse(idx, val, ctx))
+
+
 def federated_round(flatP, server_state, sstate, client_batches, rng, *,
                     loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
                     strategy: Optional[st.StrategyLike] = None,
@@ -248,7 +272,7 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
                else jax.random.fold_in(jax.random.key(0), round_idx))
         pseudo_grad, _ = dp_mod.dp_aggregate(deltas, fed.dp_clip, fed.dp_noise, key)
     else:
-        pseudo_grad = strat.aggregate(deltas, ctx)
+        pseudo_grad = _aggregate_uploads(strat, deltas, ctx)
 
     if fed.server_opt == "adam":
         flatP, opt = adam_update(flatP, pseudo_grad, server_state["opt"],
@@ -328,7 +352,8 @@ def make_scanned_round_fn(round_fn):
 
 def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
                          strategy: st.StrategyLike, slots: Tuple[int, ...],
-                         repeats: Optional[Tuple[int, ...]] = None):
+                         repeats: Optional[Tuple[int, ...]] = None,
+                         pack_cap: Optional[int] = None):
     """Client side of the split round: run the cohort slots in `slots`
     (a static tuple of global client indices) against one server snapshot.
 
@@ -337,7 +362,17 @@ def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
         fn(flatP, sstate, round_idx, client_batches, rng)
             -> (deltas, up_nnzs, losses, down_nnzs)
 
-    with `client_batches` leaves shaped (len(slots), local_steps,
+    or, with `pack_cap` set (the AsyncEngine sparse-aggregation path),
+
+        fn(...) -> (deltas, up_nnzs, losses, down_nnzs, idx, val, pnnz)
+
+    where (idx, val, pnnz) are each delta row packed to `pack_cap` coded
+    (index, value) slots by `fused_transport.pack_values` — the engine
+    bulk-transfers the packed pair (O(cap) per job instead of O(p_len))
+    and pulls a dense row only for the rare message whose support
+    overflows the capacity (pnnz > pack_cap).
+
+    `client_batches` leaves are shaped (len(slots), local_steps,
     local_bs, ...).  It traces exactly the download-mask / plan-stacking /
     vmapped-client block of `federated_round` via `_run_clients`, and the
     quantization key schedule splits `rng` into the *full cohort's*
@@ -375,12 +410,16 @@ def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
             P_base, plans, client_batches, s, loss_of=loss_of, meta=meta,
             fed=fed, kdown=kdown, upkeys=upkeys, ax_key=ax_key,
             round_idx=round_idx)
+        if pack_cap:
+            idx, val, pnnz = jax.vmap(
+                lambda v: ft.pack_values(v, pack_cap))(deltas)
+            return deltas, nnzs, losses, down_nnzs, idx, val, pnnz
         return deltas, nnzs, losses, down_nnzs
     return fn
 
 
 def make_server_phase_fn(meta: FlatMeta, fed: FederatedConfig,
-                         strategy: st.StrategyLike):
+                         strategy: st.StrategyLike, *, sparse: bool = False):
     """Server side of the split round: one buffered aggregation event (the
     aggregate / server-opt / `post_round` tail of `federated_round`).
 
@@ -398,18 +437,37 @@ def make_server_phase_fn(meta: FlatMeta, fed: FederatedConfig,
     pre-update server snapshot, which is what the synchronous round hands
     it when the buffer is one full fresh cohort.
 
+    With `sparse=True` (only valid when `strategies.
+    supports_sparse_aggregate` holds) the delta operand is the packed
+    pair the sparse-aggregation client phase produced —
+
+        fn(flatP, server_state, sstate, idx, val, weights)
+
+    with (k, cap) index/value rows — and the pseudo-gradient comes from
+    `Strategy.aggregate_sparse` (one scatter-add, no densify).  Weights
+    scale the packed values exactly like the dense path, so all-ones
+    weights stay an IEEE identity and the synchronous sparse round is
+    reproduced bit for bit.
+
     DP aggregation (fed.dp_clip > 0) is noise-calibrated for one uniform
     synchronous cohort and is refused by the AsyncEngine before this
     function is ever built.
     """
     strat = st.resolve(strategy)
+    assert not sparse or st.supports_sparse_aggregate(strat), strat
 
-    def fn(flatP, server_state, sstate, deltas, weights):
+    def fn(flatP, server_state, sstate, *rest):
         round_idx = server_state["round"]
         m_down = strat.download_mask(flatP, sstate, round_idx)
         P_base = strat.download_base(flatP, sstate)
         ctx = meta.plan_context(fed.n_clients, round_idx=round_idx)
-        pseudo_grad = strat.aggregate(deltas * weights[:, None], ctx)
+        if sparse:
+            idx, val, weights = rest
+            pseudo_grad = strat.aggregate_sparse(
+                idx, val * weights[:, None], ctx)
+        else:
+            deltas, weights = rest
+            pseudo_grad = strat.aggregate(deltas * weights[:, None], ctx)
 
         if fed.server_opt == "adam":
             flatP2, opt = adam_update(flatP, pseudo_grad, server_state["opt"],

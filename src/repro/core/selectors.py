@@ -29,6 +29,19 @@ Registered implementations:
   with one whole-vector block to amortize the interpreter's per-block
   overhead.  Bit-identical to ``histogram`` by construction: both share
   the canonical bisection loop, only the count pass differs.
+* ``fused``     — the one-pass transport path (`kernels/fused_transport`,
+  docs/kernels.md).  Replaces the per-iteration count passes with a
+  single binned-magnitude histogram pass: every element replays its
+  `levels`-step bisection path and the threshold is replayed from bin
+  suffix sums, so `FusedSelector(levels=L)` is **bit-identical to
+  `HistogramSelector(iters=L)`** (and to `PallasSelector(iters=L)`) while
+  reading the vector 3 times total (absmax, bins, mask) instead of
+  `iters + 1`.  The default depth is `levels=12` — a 2^-12 probe
+  resolution vs the histogram default's 2^-24, which can keep a few more
+  tied entries; communication accounting always bills the actual nnz.
+  `sparsify_quantized` extends the third pass to also quantize (and
+  optionally pack the coded wire form) in the same kernel — the
+  `transport.FusedTopKQuantize` stage rides it.
 
 Strategy code never branches on the selector: `StrategySpec(selector=...)`
 threads the name through `core.transport.TopKSparsify` and the
@@ -47,7 +60,9 @@ from typing import (Callable, ClassVar, Dict, Optional, Tuple,
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantization as qz
 from repro.core import sparsity as sp
+from repro.kernels import fused_transport as ft
 from repro.kernels.topk_mask import (BLOCK, threshold_count_pallas,
                                      topk_mask_pallas)
 
@@ -279,4 +294,110 @@ class PallasSelector(Selector):
 
     def __repr__(self):
         return (f"PallasSelector(block={self.block}, iters={self.iters}, "
+                f"interpret={self.interpret})")
+
+
+@register_selector("fused")
+class FusedSelector(PallasSelector):
+    """One-pass binned-histogram Top-K (`kernels/fused_transport`).
+
+    Shares the whole `PallasSelector` surface — padding, backend/block
+    dispatch, batching, the final `topk_mask_pallas` mask+nnz pass — and
+    replaces only the threshold step: instead of `iters` streaming count
+    passes, one `bin_counts_pallas` pass bins every element by its
+    bisection *path* and `threshold_from_bins` replays the canonical
+    lo/hi recurrence over bin suffix sums.  Bit-identical to
+    `HistogramSelector(iters=levels)` / `PallasSelector(iters=levels)` by
+    construction (the differential suite in tests/test_fused_transport.py
+    pins this); 3 streaming passes total vs `iters + 1`.
+
+    `sparsify_quantized` fuses the direction's quantization (and
+    optionally the coded-wire pack) into the third pass — the
+    `transport.FusedTopKQuantize` stage entry point.  Its float ops and
+    stochastic-rounding draw match `quantization.quantize` on the masked
+    vector bit-for-bit (the mask always retains the argmax, so the
+    quantizer scale is the pass-1 absmax in both formulations).
+    """
+
+    def __init__(self, levels: int = ft.LEVELS,
+                 block: Optional[int] = None,
+                 interpret: Optional[bool] = None):
+        super().__init__(block=block, iters=levels, interpret=interpret)
+        self.levels = levels
+
+    # --- the one-pass threshold (replaces the bisection count passes) ------
+    def _threshold(self, a_pad, k, interpret, block):
+        hi0 = ft.absmax_pallas(a_pad, block=block, interpret=interpret)
+        hist = ft.bin_counts_pallas(a_pad, hi0, self.levels,
+                                    block=block, interpret=interpret)
+        return ft.threshold_from_bins(hist, hi0, k, self.levels)
+
+    # --- the fused mask+quantize(+pack) third pass -------------------------
+    def _fused_setup(self, flat, k, bits: int, key):
+        """Common prologue: pad, clamp, threshold, quantizer scale, and
+        the unpadded-shape uniform draw (matching `quantization.quantize`
+        randomness bit-for-bit)."""
+        n = flat.shape[-1]
+        interpret = self._interpret()
+        block = self._block_for(n, interpret)
+        x = self._pad(flat.astype(jnp.float32), block)
+        a = jnp.abs(x)
+        k = sp.clamp_count(k, n)
+        thr = jnp.maximum(self._threshold(a, k, interpret, block), sp.TINY)
+        hi0 = ft.absmax_pallas(a, block=block, interpret=interpret)
+        scale = jnp.maximum(hi0 / float(2 ** (bits - 1) - 1), 1e-12) \
+            if bits else jnp.float32(1.0)
+        u = None
+        if bits and key is not None:
+            u = self._pad(jax.random.uniform(key, (n,)), block)
+        return x, k, thr, scale, u, block, interpret
+
+    def sparsify_quantized(self, flat, *, density=None, count=None,
+                           bits: int = 0, key=None):
+        """(masked+quantized values, nnz) for one 1-D vector: Top-K mask
+        and b-bit quantization of the survivors in one kernel pass.
+        Bit-identical to `sparsify`/`sparsify_by_count` followed by
+        `quantization.quantize_roundtrip` under the same key."""
+        assert flat.ndim == 1, flat.shape
+        assert (density is None) != (count is None)
+        n = flat.shape[-1]
+        if bits <= 0 or bits >= 32:
+            bits = 0                        # quantize_roundtrip passthrough
+        if density is not None:
+            if density >= 1.0:              # no mask: plain quantization
+                values = qz.quantize_roundtrip(flat, bits, key) if bits \
+                    else flat
+                return values, jnp.sum(jnp.ones_like(flat, bool), axis=-1)
+            count = sp.density_count(n, density)
+        x, k, thr, scale, u, block, interpret = \
+            self._fused_setup(flat, count, bits, key)
+        masked, cnt = ft.fused_mask_quantize_pallas(
+            x, thr, scale, u, bits, block=block, interpret=interpret)
+        keep = k > 0                        # clamp_count contract: k=0 -> {}
+        return masked[:n].astype(flat.dtype) * keep, cnt * keep
+
+    def sparsify_quantized_packed(self, flat, *, count, bits: int = 0,
+                                  key=None, cap: int):
+        """`sparsify_quantized` that also packs the coded wire form in the
+        same kernel: returns (values, nnz, idx (cap,), val (cap,)).
+        Survivors past `cap` are dropped from the packed buffer (nnz still
+        counts them, so nnz > cap flags overflow); empty slots sit at the
+        sentinel index n.  Not vmap-safe (the pack accumulates across the
+        sequential grid) — the engines' batched bulk-transfer path packs
+        with `fused_transport.pack_values` instead."""
+        assert flat.ndim == 1, flat.shape
+        if bits <= 0 or bits >= 32:
+            bits = 0
+        n = flat.shape[-1]
+        x, k, thr, scale, u, block, interpret = \
+            self._fused_setup(flat, count, bits, key)
+        masked, idx, val, tot = ft.fused_mask_quantize_pack_pallas(
+            x, thr, scale, u, bits, cap, n, block=block, interpret=interpret)
+        keep = k > 0
+        idx = jnp.where(keep, idx, n)       # k=0: every slot -> sentinel
+        return (masked[:n].astype(flat.dtype) * keep, tot * keep,
+                idx, val * keep)
+
+    def __repr__(self):
+        return (f"FusedSelector(levels={self.levels}, block={self.block}, "
                 f"interpret={self.interpret})")

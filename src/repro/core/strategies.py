@@ -75,6 +75,15 @@ class StrategySpec:
     lowrank_up: int = 0
     lowrank_mode: str = "random"
     lowrank_seed: int = 0
+    # server-side sparse aggregation (docs/kernels.md): upload messages
+    # travel and aggregate in packed coded form (indices + values,
+    # `kernels.fused_transport.sparse_accumulate`) instead of dense
+    # (n_clients, p_len) stacks — O(total nnz) instead of O(C * p_len).
+    # Opt-in; only sound for uniform-averaging strategies with topk
+    # uploads (see `supports_sparse_aggregate`), and the engines fall
+    # back to the dense path whenever a message overflows its static
+    # pack capacity, so results are never silently truncated.
+    sparse_aggregate: bool = False
 
     def __post_init__(self):
         # user strategies enter the registry after import time, so accept
@@ -215,6 +224,19 @@ class Strategy:
         pseudo-gradient.  Default: uniform averaging (FedAvg)."""
         return jnp.mean(deltas, axis=0)
 
+    def aggregate_sparse(self, idx, val, ctx: PlanContext) -> jax.Array:
+        """`aggregate` over *packed* upload messages — (n_clients, cap)
+        index/value rows, sentinel index >= p_len in empty slots — without
+        ever densifying them: one scatter-add (`fused_transport.
+        sparse_accumulate`) then the uniform 1/C scaling.  Only called
+        when `supports_sparse_aggregate` holds, i.e. for strategies whose
+        `aggregate` is the base-class uniform mean, so the two paths
+        compute the same sum up to float summation order (bit-equality is
+        pinned *within* the sparse path: sim and async run this exact op
+        on identical packed inputs)."""
+        from repro.kernels import fused_transport as ft
+        return ft.sparse_accumulate(idx, val, ctx.p_len) / idx.shape[0]
+
     @property
     def uniform_aggregation(self) -> bool:
         """True when `aggregate` is plain averaging — the assumption DP
@@ -263,6 +285,40 @@ def register_strategy(kind: str):
 
 def registered_kinds() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+def supports_sparse_aggregate(strat: "Strategy") -> bool:
+    """True when `strat` may aggregate packed (index, value) upload
+    messages via `Strategy.aggregate_sparse` instead of dense stacks.
+
+    Requires `spec.sparse_aggregate` opt-in, the *base-class* uniform
+    `aggregate` (a weighted override like hetlora_weighted's rank
+    coverage reads the dense stack and must keep getting it), no
+    per-client upload densities (one static pack capacity serves the
+    whole cohort), and no low-rank upload compression (factor messages
+    are dense matrices, not sparse supports).  DP clipping is checked at
+    the call sites — `federated_round` only reaches the sparse branch
+    with dp_clip == 0, and AsyncEngine refuses DP outright."""
+    spec = strat.spec
+    return bool(spec.sparse_aggregate
+                and type(strat).aggregate is Strategy.aggregate
+                and not spec.client_densities
+                and spec.lowrank_up == 0)
+
+
+def sparse_aggregate_capacity(strat: "Strategy", p_len: int) -> int:
+    """Static packed-message slot count for the engines' sparse
+    aggregation path: 0 when `strat` does not support it (the engines
+    read 0 as "stay dense"), else `comm.pack_capacity` over the spec's
+    expected Top-K upload support at `density_up`.  Quantization only
+    ever zeroes kept values, so it never raises the support; threshold
+    ties can, which is what the capacity slack (and the dense overflow
+    fallback) absorbs."""
+    if not supports_sparse_aggregate(strat):
+        return 0
+    from repro.core import comm
+    return comm.pack_capacity(
+        p_len, int(sp.density_count(p_len, strat.spec.density_up)))
 
 
 StrategyLike = Union[Strategy, StrategySpec, str]

@@ -161,6 +161,45 @@ class Quantize(Stage):
         return (float(self.bits) if self.bits else value_bits), dense
 
 
+@register_stage("fused_topk_quantize")
+@dataclasses.dataclass
+class FusedTopKQuantize(Stage):
+    """Top-K and the direction's quantization in one fused kernel pass
+    (`selectors.FusedSelector.sparsify_quantized`, docs/kernels.md): the
+    flat delta is streamed 3 times total — absmax, bisection-path bins,
+    mask+quantize — instead of ~24 bisection passes plus separate mask
+    and quantize passes.  Bit-identical to `TopKSparsify(selector=
+    "histogram"/"fused")` followed by `Quantize(bits)` under the same key
+    (the differential suite in tests/test_fused_transport.py pins this).
+
+    Exactly one of `density` (static) or `count` (possibly traced,
+    per-client) must be set; `bits == 0` fuses just mask+count.
+    `selector` must resolve to a `FusedSelector` (name "fused" or an
+    instance with custom levels/block/interpret)."""
+    density: Optional[float] = None
+    count: Any = None
+    bits: int = 0
+    selector: sel.SelectorLike = "fused"
+
+    def __call__(self, msg: Message, *, key=None) -> Message:
+        assert (self.density is None) != (self.count is None)
+        s = sel.resolve_selector(self.selector)
+        assert isinstance(s, sel.FusedSelector), \
+            f"FusedTopKQuantize needs a FusedSelector, got {s!r}"
+        values, nnz = s.sparsify_quantized(
+            msg.values, density=self.density, count=self.count,
+            bits=self.bits, key=key)
+        bits = float(self.bits) if 0 < self.bits < 32 else msg.value_bits
+        return dataclasses.replace(msg, values=values, nnz=nnz,
+                                   value_bits=bits)
+
+    def wire(self, n, value_bits, dense):
+        # fuses Quantize's wire effect: the stage owns the value width
+        # when it quantizes; coding stays sparse (index/bitmap min)
+        return (float(self.bits) if 0 < self.bits < 32 else value_bits), \
+            dense
+
+
 def _factor_dims(n: int, rows: int = 0) -> Tuple[int, int]:
     """Near-square (rows, cols) embedding of an n-vector: rows = ceil(√n)
     unless pinned, cols = ceil(n / rows); the trailing rows*cols - n
@@ -358,8 +397,20 @@ def upload_pipeline(rule: UploadRule, quant_bits: int = 0, *,
     override a topk rule's static density with a (traced) keep-count;
     `selector` picks the Top-K implementation (`core.selectors`);
     `lowrank` appends a `LowRankCompress` stage (which then also owns the
-    direction's quantization)."""
+    direction's quantization).
+
+    A `FusedSelector` ("fused") on a topk rule collapses Top-K and the
+    direction's quantization into the single `FusedTopKQuantize` stage
+    (bit-identical to the two-stage form under the same key, 3 streaming
+    passes instead of ~26) — unless `lowrank` owns the quantization, in
+    which case the fused selector still serves the Top-K stage alone."""
     if rule.mode == "topk":
+        resolved = sel.resolve_selector(selector)
+        if isinstance(resolved, sel.FusedSelector) and lowrank is None:
+            fused = FusedTopKQuantize(
+                density=None if count is not None else rule.density,
+                count=count, bits=quant_bits, selector=resolved)
+            return Pipeline((fused,))
         if count is not None:
             stage: Stage = TopKSparsify(count=count, selector=selector)
         else:

@@ -119,13 +119,18 @@ class Job:
     bookkeeping — and bulk-transfers the cohort outputs once; keeping
     device rows here would pin the stacked device result until the last
     straggler aggregates).
+
+    Under sparse aggregation (`StrategySpec.sparse_aggregate`) `delta` is
+    the packed `(idx, val)` pair of (cap,) host rows — sentinel index
+    `p_len` in empty slots — instead of the dense (p_len,) row;
+    `dense_delta` recovers the dense form where the engine needs it.
     """
     slot: int                   # global client index
     version: int                # server version (round) the job started from
     seq: int                    # global submission counter (determinism)
     t_start: float
     t_finish: float
-    delta: Any                  # (p_len,) f32
+    delta: Any                  # (p_len,) f32, or packed (idx, val) pair
     loss: Any                   # f32 scalar
     down_nnz: float             # download message entries (for the ledger)
     up_nnz: float               # upload message entries
@@ -137,25 +142,73 @@ _JOB_SCALARS = (("slot", np.int64), ("version", np.int64), ("seq", np.int64),
                 ("up_nnz", np.float64))
 
 
+def dense_delta(delta: Any, p_len: int) -> np.ndarray:
+    """A Job's delta as a dense (p_len,) f32 row: packed `(idx, val)`
+    pairs are scatter-set into zeros (indices are unique and the sentinel
+    `p_len` marks empty slots, so this is exact), dense rows pass
+    through.  Note a position the packing skipped comes back as +0.0 even
+    if the original masked row carried -0.0 there — aggregation sums are
+    unaffected unless *every* contribution at a position is -0.0."""
+    if not isinstance(delta, tuple):
+        return np.asarray(delta, np.float32)
+    idx, val = (np.asarray(delta[0]), np.asarray(delta[1], np.float32))
+    out = np.zeros(p_len, np.float32)
+    keep = idx < p_len
+    out[idx[keep]] = val[keep]
+    return out
+
+
 def _jobs_to_arrays(jobs: List[Job], p_len: int) -> Dict[str, np.ndarray]:
     out = {name: np.asarray([getattr(j, name) for j in jobs], dtype)
            for name, dtype in _JOB_SCALARS}
-    out["delta"] = (np.stack([np.asarray(j.delta, np.float32) for j in jobs])
-                    if jobs else np.zeros((0, p_len), np.float32))
+    packed = [isinstance(j.delta, tuple) for j in jobs]
+    if any(packed):
+        # packed and dense jobs may coexist (capacity overflow): row i of
+        # the job list maps to the next row of delta_idx/delta_val when
+        # packed[i], else to the next row of delta — `_jobs_from_arrays`
+        # walks the flag vector to re-zip them
+        out["packed"] = np.asarray(packed, bool)
+        pj = [j for j, p in zip(jobs, packed) if p]
+        dj = [j for j, p in zip(jobs, packed) if not p]
+        out["delta_idx"] = np.stack(
+            [np.asarray(j.delta[0], np.int32) for j in pj])
+        out["delta_val"] = np.stack(
+            [np.asarray(j.delta[1], np.float32) for j in pj])
+        out["delta"] = (np.stack([np.asarray(j.delta, np.float32)
+                                  for j in dj])
+                        if dj else np.zeros((0, p_len), np.float32))
+    else:
+        # no packed jobs: byte-identical to the pre-sparse checkpoint
+        # layout, so existing dense-path checkpoints round-trip unchanged
+        out["delta"] = (np.stack([np.asarray(j.delta, np.float32)
+                                  for j in jobs])
+                        if jobs else np.zeros((0, p_len), np.float32))
     return out
 
 
 def _jobs_from_arrays(arrays: Dict[str, np.ndarray]) -> List[Job]:
     n = int(np.asarray(arrays["slot"]).shape[0])
-    return [Job(slot=int(arrays["slot"][i]), version=int(arrays["version"][i]),
-                seq=int(arrays["seq"][i]),
-                t_start=float(arrays["t_start"][i]),
-                t_finish=float(arrays["t_finish"][i]),
-                delta=np.asarray(arrays["delta"][i], np.float32),
-                loss=np.asarray(arrays["loss"][i], np.float32),
-                down_nnz=float(arrays["down_nnz"][i]),
-                up_nnz=float(arrays["up_nnz"][i]))
-            for i in range(n)]
+    packed = (np.asarray(arrays["packed"], bool) if "packed" in arrays
+              else np.zeros(n, bool))
+    jobs, pi, di = [], 0, 0
+    for i in range(n):
+        if packed[i]:
+            delta: Any = (np.asarray(arrays["delta_idx"][pi], np.int32),
+                          np.asarray(arrays["delta_val"][pi], np.float32))
+            pi += 1
+        else:
+            delta = np.asarray(arrays["delta"][di], np.float32)
+            di += 1
+        jobs.append(Job(
+            slot=int(arrays["slot"][i]), version=int(arrays["version"][i]),
+            seq=int(arrays["seq"][i]),
+            t_start=float(arrays["t_start"][i]),
+            t_finish=float(arrays["t_finish"][i]),
+            delta=delta,
+            loss=np.asarray(arrays["loss"][i], np.float32),
+            down_nnz=float(arrays["down_nnz"][i]),
+            up_nnz=float(arrays["up_nnz"][i])))
+    return jobs
 
 
 class VirtualClock:

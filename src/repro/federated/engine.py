@@ -692,12 +692,23 @@ class AsyncEngine(Engine):
         # spec (quantized, low-rank-compressed, or plain f32 sparse)
         down_vb, down_dense = tp.wire_format(spec, meta.p_len, "down")
         up_vb, up_dense = tp.wire_format(spec, meta.p_len, "up")
+        # sparse aggregation (spec.sparse_aggregate): jobs carry packed
+        # (index, value) rows at this static capacity instead of dense
+        # (p_len,) deltas, and buffers of all-packed jobs aggregate
+        # through the scatter-add server phase; 0 means "stay dense"
+        pack_cap = st.sparse_aggregate_capacity(
+            st.resolve(plan.strategy), meta.p_len)
         base_key = jax.random.key(plan.seed + 2)
         # no donation on either phase: flatP/sstate snapshots outlive the
         # call — in-flight client jobs keep reading the captured version,
         # so donating here would be a use-after-donate
         server_fn = jax.jit(  # reprolint: disable=jit-no-donate -- see above
             fedround.make_server_phase_fn(meta, fed, plan.strategy))
+        sparse_server_fn = None if not pack_cap else \
+            jax.jit(  # reprolint: disable=jit-no-donate -- see above
+                fedround.make_server_phase_fn(meta, fed, plan.strategy,
+                                              sparse=True))
+        server_fns = (server_fn, sparse_server_fn)
         client_fns: Dict[Any, Any] = {}
         clock = (ac.VirtualClock.from_arrays(state.aux, n, meta.p_len)
                  if state.aux is not None
@@ -729,7 +740,7 @@ class AsyncEngine(Engine):
                 client_fns[key] = jax.jit(  # reprolint: disable=jit-no-donate -- see above
                     fedround.make_client_phase_fn(
                         plan.loss_of, meta, fed, plan.strategy, slots,
-                        repeats))
+                        repeats, pack_cap=pack_cap or None))
             return client_fns[key]
 
         def launch(slots):
@@ -740,17 +751,34 @@ class AsyncEngine(Engine):
                     for c in slots]
             batch = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
             rng = jax.random.fold_in(base_key, version)
-            deltas, up_nnzs, losses, down_nnzs = client_fn(slots, repeats)(
+            out = client_fn(slots, repeats)(
                 state.flatP, state.sstate, jnp.asarray(version, jnp.int32),
                 batch, rng)
+            deltas, up_nnzs, losses, down_nnzs = out[:4]
             # one bulk pull per output: per-index float()/row indexing on
             # the device arrays would sync the stream once per job in this
             # loop, and device rows held in Jobs would pin the whole stacked
             # cohort result until the last straggler aggregates
             down_host = np.asarray(down_nnzs, np.float32)
             up_host = np.asarray(up_nnzs, np.float32)
-            delta_host = np.asarray(deltas, np.float32)
             loss_host = np.asarray(losses, np.float32)
+            if pack_cap:
+                # sparse aggregation: bulk-transfer the packed pair —
+                # O(pack_cap) per job instead of O(p_len) — and pull a
+                # dense row only for a message whose support overflowed
+                # the static capacity (that job aggregates densely)
+                pidx, pval, pnnz = out[4:]
+                idx_host = np.asarray(pidx, np.int32)
+                val_host = np.asarray(pval, np.float32)
+                pn_host = np.asarray(pnnz)
+                delta_rows = [
+                    (idx_host[i], val_host[i])
+                    if int(pn_host[i]) <= pack_cap
+                    else np.asarray(deltas[i], np.float32)
+                    for i in range(len(slots))]
+            else:
+                delta_host = np.asarray(deltas, np.float32)
+                delta_rows = [delta_host[i] for i in range(len(slots))]
             for i, c in enumerate(slots):
                 dn, un = float(down_host[i]), float(up_host[i])
                 dur = (prof.down_time(c, comm_mod.coded_message_bytes(
@@ -761,7 +789,7 @@ class AsyncEngine(Engine):
                 clock.submit(ac.Job(
                     slot=c, version=version, seq=clock.next_seq(),
                     t_start=clock.now, t_finish=clock.now + dur,
-                    delta=delta_host[i], loss=loss_host[i],
+                    delta=delta_rows[i], loss=loss_host[i],
                     down_nnz=dn, up_nnz=un))
                 clock.job_counts[c] += 1
 
@@ -805,7 +833,7 @@ class AsyncEngine(Engine):
                         # the buffer can never reach K — flush it partially
                         # (FedBuff timeout semantics)
                         assert clock.buffer, "async engine deadlocked"
-                        self._aggregate(state, clock, server_fn, callbacks)
+                        self._aggregate(state, clock, server_fns, callbacks)
                         continue
                     clock.pull_completions()
                 job = clock.pending.pop(0)
@@ -817,19 +845,27 @@ class AsyncEngine(Engine):
                     continue
                 clock.buffer.append(job)
                 if len(clock.buffer) >= buffer_size:
-                    self._aggregate(state, clock, server_fn, callbacks)
+                    self._aggregate(state, clock, server_fns, callbacks)
         except StopRun:
             pass
         state.aux = clock.to_arrays()
         return state
 
     def _aggregate(self, state: RunState, clock: "ac.VirtualClock",
-                   server_fn, callbacks: Sequence[Callback]) -> None:
+                   server_fns, callbacks: Sequence[Callback]) -> None:
         """Apply one buffered aggregation event and run the round-end
         callback pipeline for it.  Updates aggregate in submission (seq)
         order, so results don't depend on arrival jitter within a buffer —
         and a full fresh cohort aggregates in slot order, exactly like the
-        synchronous round."""
+        synchronous round.
+
+        `server_fns` is the (dense_fn, sparse_fn_or_None) pair built in
+        `run_rounds`: a buffer of all-packed jobs goes through the
+        scatter-add sparse phase; any dense row in the buffer (sparse
+        aggregation off, or a capacity-overflowed message) flips the whole
+        event to the dense phase, with packed peers densified on the
+        host first."""
+        server_fn, sparse_fn = server_fns
         jobs, clock.buffer = sorted(clock.buffer, key=lambda j: j.seq), []
         staleness = [state.round - j.version for j in jobs]
         weights = jnp.asarray(
@@ -837,10 +873,17 @@ class AsyncEngine(Engine):
             jnp.float32)
         # jobs carry host rows (see launch): one H2D upload of the stacked
         # buffer, instead of stacking per-job device remnants
-        deltas = jnp.asarray(np.stack([np.asarray(j.delta, np.float32)
-                                       for j in jobs]))
-        state.flatP, state.server, state.sstate = server_fn(
-            state.flatP, state.server, state.sstate, deltas, weights)
+        if sparse_fn is not None and all(isinstance(j.delta, tuple)
+                                         for j in jobs):
+            idx = jnp.asarray(np.stack([j.delta[0] for j in jobs]))
+            val = jnp.asarray(np.stack([j.delta[1] for j in jobs]))
+            state.flatP, state.server, state.sstate = sparse_fn(
+                state.flatP, state.server, state.sstate, idx, val, weights)
+        else:
+            deltas = jnp.asarray(np.stack(
+                [ac.dense_delta(j.delta, clock.p_len) for j in jobs]))
+            state.flatP, state.server, state.sstate = server_fn(
+                state.flatP, state.server, state.sstate, deltas, weights)
         drop_down, drop_up = clock.take_drops()
         down_list = [j.down_nnz for j in jobs] + drop_down
         up_list = [j.up_nnz for j in jobs] + drop_up

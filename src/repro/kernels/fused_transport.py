@@ -1,0 +1,345 @@
+"""Pallas one-pass transport kernels: fused Top-K -> quantize -> pack.
+
+The transport hot path used to pay ~26 streaming HBM passes per upload:
+24 bisection count passes (`threshold_count_pallas` per iteration of
+`sparsity.threshold_histogram_count`), one mask pass, and a separate
+quantize pass on top.  This module collapses the whole client-side wire
+path to **three** streaming passes over the flat delta:
+
+  pass 1  `absmax_pallas`      — per-block max |x|, reduced to `hi0`
+                                 (the bisection's initial upper bound
+                                 *and* the quantizer scale numerator).
+  pass 2  `bin_counts_pallas`  — every element replays the `levels`-step
+                                 bisection *path* it would take through
+                                 the canonical lo/hi recurrence and emits
+                                 a `levels`-bit bin index; the kernel
+                                 bincounts the indices per block.  A tiny
+                                 suffix-sum replay over the 2^levels-bin
+                                 histogram (`threshold_from_bins`) then
+                                 yields the threshold — **bit-identical**
+                                 to `threshold_histogram_count(iters=
+                                 levels)`, because every probe count the
+                                 canonical loop would compute is a suffix
+                                 sum of the bins, and the lo/hi float
+                                 math is replayed op-for-op.
+  pass 3  `fused_mask_quantize_pallas` / `..._pack_pallas`
+                               — mask at the threshold, quantize the
+                                 survivors (same float ops as
+                                 `quantization.quantize`), count the
+                                 nnz, and (pack variant) scatter the
+                                 coded wire form — ascending indices +
+                                 values — into a static-capacity buffer,
+                                 all in one kernel.
+
+Why the path replay is exact: the canonical bisection from `(lo, hi) =
+(0, max|x|)` visits nodes of a binary tree whose midpoints are fully
+determined by the float recurrence `mid = 0.5 * (lo + hi)`.  An element
+running the *same* recurrence against its own |x| takes one root-to-leaf
+path; its leaf index orders elements by magnitude interval, so the count
+`#{|x| >= mid}` at any tree node `(prefix p, depth d)` is exactly the
+suffix sum of the histogram from bin `(2p + 1) << (levels - 1 - d)`.
+Padding zeros land in bin 0 (never counted by any probe — every probe
+index is >= 1) except in the all-zero-vector case, where every probe's
+`mid == 0` and the threshold is 0 on every path anyway.
+
+The server side closes the loop without densifying: `sparse_accumulate`
+gather-accumulates packed (indices, values) client rows straight into the
+(p_len,) pseudo-gradient sum — the CSR-style scatter-add shape — and
+`pack_values` / `unpack_values` are the jnp reference codec the
+differential tests pin the kernels against (and the engines' bulk
+host-transfer coding).
+
+Backend notes: like `kernels/topk_mask.py`, these kernels run natively on
+TPU and under Pallas interpret mode everywhere else (the selector layer
+owns that dispatch).  The in-kernel bincount/scatter lower through jnp
+`.at[]` ops; the TPU-native lowering is re-baselined with the rest of
+`BENCH_topk.json` on a real TPU host (open ROADMAP item).  The pack
+variant accumulates its packed outputs across the sequential grid via
+`pl.program_id`, so it must not be vmapped — batch callers use the
+vmap-safe non-pack variant plus `pack_values`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.topk_mask import BLOCK
+
+LEVELS = 12         # default bisection depth: 2^12 magnitude bins (16 KiB)
+
+
+# ---------------------------------------------------------------------------
+# pass 1: absmax
+# ---------------------------------------------------------------------------
+
+def _absmax_kernel(x_ref, out_ref):
+    out_ref[0] = jnp.max(jnp.abs(x_ref[...]))
+
+
+def absmax_pallas(x: jax.Array, *, block: int = BLOCK,
+                  interpret: bool = False) -> jax.Array:
+    """max |x| of a (n,) vector, n % block == 0 (pad upstream).  Bitwise
+    equal to `jnp.max(jnp.abs(x))`: max-of-block-maxes is order-free."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    part = pl.pallas_call(
+        _absmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return jnp.max(part)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: bisection-path bin counts + the threshold replay
+# ---------------------------------------------------------------------------
+
+def _bin_kernel(levels, hi_ref, x_ref, hist_ref):
+    a = jnp.abs(x_ref[...])
+    lo = jnp.zeros_like(a)
+    hi = jnp.full_like(a, hi_ref[0])
+    idx = jnp.zeros(a.shape, jnp.int32)
+    for _ in range(levels):                 # static unroll: `levels` is small
+        mid = 0.5 * (lo + hi)               # the canonical recurrence,
+        up = a >= mid                       # replayed per element
+        idx = idx * 2 + up.astype(jnp.int32)
+        lo = jnp.where(up, mid, lo)
+        hi = jnp.where(up, hi, mid)
+    hist_ref[0, :] = jnp.zeros((1 << levels,), jnp.int32).at[idx].add(1)
+
+
+def bin_counts_pallas(x: jax.Array, hi0: jax.Array, levels: int = LEVELS,
+                      *, block: int = BLOCK,
+                      interpret: bool = False) -> jax.Array:
+    """(2^levels,) int32 histogram of bisection-path bin indices for a
+    (n,) vector with n % block == 0.  `hi0` is the absmax from pass 1."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    bins = 1 << levels
+    hist = pl.pallas_call(
+        functools.partial(_bin_kernel, levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),            # hi0 (broadcast)
+            pl.BlockSpec((block,), lambda i: (i,)),        # x tile
+        ],
+        out_specs=pl.BlockSpec((1, bins), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], bins), jnp.int32),
+        interpret=interpret,
+    )(jnp.reshape(hi0.astype(jnp.float32), (1,)), x.astype(jnp.float32))
+    return jnp.sum(hist, axis=0)
+
+
+def threshold_from_bins(hist: jax.Array, hi0: jax.Array, k,
+                        levels: int = LEVELS) -> jax.Array:
+    """Replay the canonical bisection over the bin histogram.
+
+    Carries (lo, hi, node prefix); each step's probe count is the suffix
+    sum of bins >= `(2p + 1) << (levels - 1 - d)` — exactly the count
+    `sparsity.threshold_histogram_count` would get from a streaming pass —
+    and the lo/hi updates are the same float ops, so the returned
+    threshold is bit-identical to `threshold_histogram_count(|x|, k,
+    iters=levels)`.  `k` must already honor `clamp_count`.
+    """
+    assert hist.shape[-1] == 1 << levels, (hist.shape, levels)
+    # suffix[i] = #{elements with bin index >= i}
+    suffix = jnp.cumsum(hist[::-1])[::-1]
+    k = jnp.asarray(k, jnp.int32)
+    hi0 = hi0.astype(jnp.float32)
+
+    def body(d, carry):
+        lo, hi, p = carry
+        mid = 0.5 * (lo + hi)
+        probe = (2 * p + 1) << (levels - 1 - d)
+        cnt = suffix[probe]
+        up = cnt > k                        # too many kept -> raise threshold
+        lo = jnp.where(up, mid, lo)
+        hi = jnp.where(up, hi, mid)
+        return lo, hi, 2 * p + up.astype(jnp.int32)
+
+    lo, _, _ = jax.lax.fori_loop(
+        0, levels, body,
+        (jnp.zeros_like(hi0), hi0, jnp.zeros((), jnp.int32)))
+    return lo
+
+
+# ---------------------------------------------------------------------------
+# pass 3: fused mask + quantize (+ pack)
+# ---------------------------------------------------------------------------
+
+def _quantized(x, u, bits: int, stochastic: bool, scale):
+    """The same float ops as `quantization.quantize` on the survivors:
+    y = x / scale, stochastic floor(y + u) or round(y), clip, rescale."""
+    qmax = float(2 ** (bits - 1) - 1)
+    y = x / scale
+    y = jnp.floor(y + u) if stochastic else jnp.round(y)
+    return jnp.clip(y, -qmax - 1.0, qmax) * scale
+
+
+def _fuse_kernel(bits, stochastic, s_ref, x_ref, u_ref, out_ref, cnt_ref):
+    t = s_ref[0]
+    scale = s_ref[1]
+    x = x_ref[...]
+    keep = jnp.abs(x) >= t
+    q = _quantized(x, u_ref[...], bits, stochastic, scale) if bits else x
+    out_ref[...] = jnp.where(keep, q, jnp.zeros_like(q))
+    cnt_ref[0] = jnp.sum(keep.astype(jnp.int32))
+
+
+def fused_mask_quantize_pallas(x: jax.Array, threshold: jax.Array,
+                               scale: jax.Array, u, bits: int, *,
+                               block: int = BLOCK, interpret: bool = False):
+    """Mask at `threshold`, quantize survivors at `scale`, count — one
+    streaming pass.  x (n,), n % block == 0.  `u` is the (n,)-shaped
+    stochastic-rounding uniform draw (None = round-to-nearest); drawn by
+    the caller at the *unpadded* shape so the randomness matches
+    `quantization.quantize` bit-for-bit, then padded.  bits == 0 skips
+    quantization (plain mask + count).  vmap-safe."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    stochastic = u is not None
+    s = jnp.stack([threshold.astype(jnp.float32),
+                   scale.astype(jnp.float32)])
+    uu = x if u is None else u              # placeholder keeps specs static
+    masked, counts = pl.pallas_call(
+        functools.partial(_fuse_kernel, bits, stochastic),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),            # thr, scale
+            pl.BlockSpec((block,), lambda i: (i,)),        # x tile
+            pl.BlockSpec((block,), lambda i: (i,)),        # uniform tile
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s, x.astype(jnp.float32), uu.astype(jnp.float32))
+    return masked, jnp.sum(counts)
+
+
+def _fuse_pack_kernel(bits, stochastic, cap, sentinel,
+                      s_ref, x_ref, u_ref,
+                      out_ref, idx_ref, val_ref, tot_ref):
+    i = pl.program_id(0)
+    t = s_ref[0]
+    scale = s_ref[1]
+    x = x_ref[...]
+    block = x.shape[-1]
+    keep = jnp.abs(x) >= t
+    q = _quantized(x, u_ref[...], bits, stochastic, scale) if bits else x
+    out = jnp.where(keep, q, jnp.zeros_like(q))
+    out_ref[...] = out
+
+    @pl.when(i == 0)
+    def _init():
+        idx_ref[...] = jnp.full((cap,), sentinel, jnp.int32)
+        val_ref[...] = jnp.zeros((cap,), jnp.float32)
+        tot_ref[0] = 0
+
+    # pack the block's survivors at the running global offset; position
+    # `cap` (non-kept) and positions past `cap` (overflow) scatter-drop,
+    # so `tot` > cap flags overflow without ever corrupting the buffer
+    off = tot_ref[0]
+    kept = keep.astype(jnp.int32)
+    pos = jnp.where(keep, off + jnp.cumsum(kept) - 1, cap)
+    src = i * block + jax.lax.iota(jnp.int32, block)
+    idx_ref[...] = idx_ref[...].at[pos].set(src, mode="drop")
+    val_ref[...] = val_ref[...].at[pos].set(out, mode="drop")
+    tot_ref[0] = off + jnp.sum(kept)
+
+
+def fused_mask_quantize_pack_pallas(x: jax.Array, threshold: jax.Array,
+                                    scale: jax.Array, u, bits: int,
+                                    cap: int, sentinel: int, *,
+                                    block: int = BLOCK,
+                                    interpret: bool = False):
+    """`fused_mask_quantize_pallas` that additionally packs the coded wire
+    form in the same kernel: ascending survivor indices + their (possibly
+    quantized) values in a static (cap,) buffer, empty slots at index
+    `sentinel` (callers pass the unpadded length, so `sparse_accumulate`
+    / `unpack_values` scatter-drop them).  Returns (masked dense, idx,
+    val, total kept); total > cap means overflow — the packed buffer
+    holds the first `cap` survivors and the caller must fall back to the
+    dense form.  Accumulates across the sequential grid (pl.program_id),
+    so NOT vmap-safe — batch callers use the non-pack variant +
+    `pack_values`."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    stochastic = u is not None
+    s = jnp.stack([threshold.astype(jnp.float32),
+                   scale.astype(jnp.float32)])
+    uu = x if u is None else u
+    masked, idx, val, tot = pl.pallas_call(
+        functools.partial(_fuse_pack_kernel, bits, stochastic, cap, sentinel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((cap,), lambda i: (0,)),          # accumulated
+            pl.BlockSpec((cap,), lambda i: (0,)),          # accumulated
+            pl.BlockSpec((1,), lambda i: (0,)),            # running offset
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((cap,), jnp.int32),
+            jax.ShapeDtypeStruct((cap,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s, x.astype(jnp.float32), uu.astype(jnp.float32))
+    return masked, idx, val, tot[0]
+
+
+# ---------------------------------------------------------------------------
+# the jnp reference codec + the server-side sparse accumulate
+# ---------------------------------------------------------------------------
+
+def pack_values(values: jax.Array, cap: int, mask=None):
+    """Reference pack: (n,) dense-embedded sparse vector -> (idx (cap,)
+    int32 ascending, val (cap,), nnz ()).  `mask` defaults to
+    `values != 0`; empty slots carry index n (out of range, so unpack /
+    accumulate scatter-drop them).  Entries past `cap` are dropped from
+    the buffer but still counted in nnz — nnz > cap flags overflow."""
+    n = values.shape[-1]
+    keep = values != 0 if mask is None else mask
+    kept = keep.astype(jnp.int32)
+    pos = jnp.where(keep, jnp.cumsum(kept) - 1, cap)
+    idx = jnp.full((cap,), n, jnp.int32).at[pos].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    val = jnp.zeros((cap,), jnp.float32).at[pos].set(
+        values.astype(jnp.float32), mode="drop")
+    return idx, val, jnp.sum(kept)
+
+
+def unpack_values(idx: jax.Array, val: jax.Array, n: int) -> jax.Array:
+    """Densify one packed message; sentinel slots (index >= n) drop."""
+    return jnp.zeros((n,), val.dtype).at[idx].set(val, mode="drop")
+
+
+def sparse_accumulate(idx: jax.Array, val: jax.Array, n: int) -> jax.Array:
+    """Sum packed client messages into a dense (n,) vector without ever
+    densifying the messages: one scatter-add over all (cap,) rows.  `idx`
+    / `val` are (..., cap); sentinel slots (index >= n) drop.  This is the
+    server-side aggregation kernel — O(total nnz) gather-accumulate,
+    vs O(clients * p_len) for the dense mean."""
+    return jnp.zeros((n,), val.dtype).at[idx.reshape(-1)].add(
+        val.reshape(-1), mode="drop")

@@ -307,6 +307,108 @@ def test_async_refuses_dp(task):
 
 
 # ---------------------------------------------------------------------------
+# sparse aggregation (StrategySpec.sparse_aggregate): the packed
+# bulk-transfer path must preserve every anchor above
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+@pytest.mark.parametrize("kw", [
+    dict(kind="flasc"),                                     # packed path
+    dict(kind="flasc", selector="fused", quant_bits_up=4),  # + fused kernels
+    dict(kind="hetlora", hetlora_ranks=(1, 2, 3, 4),        # weighted
+         hetlora_weighted=True),                            # override: must
+], ids=["flasc", "flasc-fused-quant", "hetlora-weighted"])  # fall back dense
+def test_async_sparse_aggregation_reduces_to_sim_bit_for_bit(task, kw):
+    """sim == async bit-equality at sync defaults still holds with the
+    sparse aggregation kernel enabled — the flasc specs actually exercise
+    the packed scatter-add server phase, and hetlora_weighted (whose
+    `aggregate` override reads the dense stack) must be gated back onto
+    the dense path rather than mis-aggregated."""
+    kw = dict(kw, sparse_aggregate=True)
+    kind = kw.pop("kind")
+    if kind == "hetlora":
+        assert not st.supports_sparse_aggregate(
+            st.resolve(st.StrategySpec(kind=kind, **kw)))
+    cap_sim, cap_async = _CaptureState(), _CaptureState()
+    res_sim = _experiment(task, kind, **kw).with_callbacks(cap_sim).run()
+    res_async = (_experiment(task, kind, **kw)
+                 .with_engine("async").with_callbacks(cap_async).run())
+    for rec_a, rec_s in zip(res_async.history, res_sim.history):
+        assert _strip_async(rec_a) == rec_s, rec_s["round"]
+    assert res_async.final_acc == res_sim.final_acc
+    for attr in LEDGER_ATTRS:
+        assert getattr(res_async.ledger, attr) == \
+            getattr(res_sim.ledger, attr), attr
+    np.testing.assert_array_equal(cap_async.flatP, cap_sim.flatP)
+
+
+@pytest.mark.fast
+def test_async_refuses_weighted_aggregation_despite_sparse_opt_in(task):
+    """The partial-buffer guard for rank-coverage weighting must survive
+    the sparse_aggregate opt-in: the opt-in never makes a weighted
+    `aggregate` override eligible for the packed path, and the
+    full-fresh-cohort refusal stays in force."""
+    exp = (_experiment(task, "hetlora", hetlora_ranks=(1, 2, 3, 4),
+                       hetlora_weighted=True, sparse_aggregate=True)
+           .with_engine("async", buffer_size=2))
+    with pytest.raises(NotImplementedError, match="full fresh cohort"):
+        exp.run()
+
+
+def test_async_sparse_checkpoint_resumes_packed_queue_bit_exactly(
+        task, tmp_path):
+    """Event-queue checkpoint/resume with packed job deltas in flight:
+    the `delta_idx`/`delta_val` serialization must round-trip so a
+    resumed genuinely-async sparse run reproduces the uninterrupted one
+    bit for bit (and keeps aggregating through the sparse phase)."""
+    kw = dict(sparse_aggregate=True)
+    full = (_experiment(task, rounds=8, **kw)
+            .with_engine(_tiered_engine()).run())
+
+    ckpt = str(tmp_path / "ckpt")
+    interrupted = (_experiment(task, rounds=8, **kw)
+                   .with_engine(_tiered_engine())
+                   .with_checkpoint(ckpt, every=3)
+                   .with_callbacks(_StopAfterCheckpoint())
+                   .run())
+    assert len(interrupted.history) == 3
+    resumed = Experiment.resume(ckpt).run()
+    assert resumed.history == full.history
+    assert resumed.final_acc == full.final_acc
+    for attr in LEDGER_ATTRS:
+        assert getattr(resumed.ledger, attr) == \
+            getattr(full.ledger, attr), attr
+
+
+@pytest.mark.fast
+def test_virtual_clock_packed_delta_roundtrip():
+    """`_jobs_to_arrays` with mixed packed/dense jobs: the flag-walk
+    re-zips rows correctly and `dense_delta` recovers the dense form."""
+    clock = ac.VirtualClock(n_clients=2, p_len=6)
+    packed = (np.asarray([1, 4, 6, 6], np.int32),
+              np.asarray([2.0, -3.0, 0.0, 0.0], np.float32))
+    dense = np.asarray([0, 1, 0, 0, 5, 0], np.float32)
+    clock.buffer.append(ac.Job(slot=0, version=0, seq=0, t_start=0.0,
+                               t_finish=1.0, delta=packed,
+                               loss=np.float32(0.5), down_nnz=6.0,
+                               up_nnz=2.0))
+    clock.buffer.append(ac.Job(slot=1, version=0, seq=1, t_start=0.0,
+                               t_finish=1.5, delta=dense,
+                               loss=np.float32(0.25), down_nnz=6.0,
+                               up_nnz=2.0))
+    restored = ac.VirtualClock.from_arrays(clock.to_arrays(), 2, 6)
+    r0, r1 = restored.buffer
+    assert isinstance(r0.delta, tuple) and not isinstance(r1.delta, tuple)
+    np.testing.assert_array_equal(r0.delta[0], packed[0])
+    np.testing.assert_array_equal(r0.delta[1], packed[1])
+    np.testing.assert_array_equal(r1.delta, dense)
+    np.testing.assert_array_equal(
+        ac.dense_delta(r0.delta, 6),
+        np.asarray([0, 2, 0, 0, -3, 0], np.float32))
+    np.testing.assert_array_equal(ac.dense_delta(r1.delta, 6), dense)
+
+
+# ---------------------------------------------------------------------------
 # fig3 regression + row-helper sentinel
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,361 @@
+"""Differential + property tests for the one-pass transport kernels.
+
+The fused pipeline's correctness claim is *bitwise*, not approximate:
+
+  * `FusedSelector(levels=L)` == `HistogramSelector(iters=L)` — same
+    masked values, same nnz — on every shape/edge the histogram path
+    supports: k=0, k=n, all-zero deltas, tied magnitudes,
+    non-block-multiple lengths, vmapped per-client traced keep-counts,
+    interpret and jit-compiled paths.
+  * the fused mask+quantize pass == the two-stage Top-K -> `quantization.
+    quantize_roundtrip` form under the same key, at the stage level too
+    (`transport.FusedTopKQuantize` vs `TopKSparsify` + `Quantize`).
+  * the in-kernel pack == the `fused_transport.pack_values` reference
+    codec, pack -> unpack is exact, and `sparse_accumulate` equals the
+    row-ordered dense sum.
+
+Plus the property-based wire-format layer (via tests/_hypcompat.py, so it
+runs with or without hypothesis installed): `Pipeline.wire` /
+`wire_format` / `CommLedger` coded bytes match the closed-form formulas
+for every stage pipeline x quantize width x coding x selector combination
+at random shapes/densities.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.core import quantization as qz
+from repro.core import selectors as sel
+from repro.core import sparsity as sp
+from repro.core import strategies as st
+from repro.core import transport as tp
+from repro.kernels import fused_transport as ft
+from tests._hypcompat import given, settings, hst
+
+pytestmark = pytest.mark.fast
+
+LEVELS = 12     # matched depth: FusedSelector(levels=L) vs Histogram(iters=L)
+
+
+def _fused(**kw):
+    return sel.FusedSelector(levels=LEVELS, **kw)
+
+
+def _hist():
+    return sel.HistogramSelector(iters=LEVELS)
+
+
+def _vec(n, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.key(seed), (n,)) * scale
+
+
+# ---------------------------------------------------------------------------
+# threshold: binned path-replay == streaming bisection, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [128, 1000, 4096])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_threshold_from_bins_matches_histogram_bisection(n, seed):
+    x = _vec(n, seed)
+    a = jnp.abs(x)
+    block = min(-(-n // 128) * 128, 1 << 26)
+    pad = jnp.pad(a, (0, block - n % block if n % block else 0))
+    hi0 = ft.absmax_pallas(pad, block=block, interpret=True)
+    hist = ft.bin_counts_pallas(pad, hi0, LEVELS, block=block, interpret=True)
+    for k in (0, 1, n // 7, n // 2, n - 1, n):
+        got = ft.threshold_from_bins(hist, hi0, jnp.asarray(k), LEVELS)
+        want = sp.threshold_histogram_count(a, jnp.asarray(k), LEVELS)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want), err_msg=f"k={k}")
+
+
+# ---------------------------------------------------------------------------
+# selector differential: fused == histogram on every edge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 333, 1000, 4096])
+def test_fused_selector_matches_histogram_bitwise(n):
+    fused, hist = _fused(), _hist()
+    x = _vec(n, 3)
+    for k in (0, 1, max(n // 5, 1), n - 1, n):
+        vf, cf = fused.sparsify_by_count(x, k)
+        vh, ch = hist.sparsify_by_count(x, k)
+        np.testing.assert_array_equal(np.asarray(vf), np.asarray(vh),
+                                      err_msg=f"n={n} k={k}")
+        assert int(cf) == int(ch), (n, k)
+
+
+@pytest.mark.parametrize("density", [0.01, 0.25, 0.5, 1.0])
+def test_fused_selector_density_path(density):
+    x = _vec(777, 5)
+    vf, cf = _fused().sparsify(x, density)
+    vh, ch = _hist().sparsify(x, density)
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(vh))
+    assert int(cf) == int(ch)
+
+
+def test_fused_selector_edge_vectors():
+    fused, hist = _fused(), _hist()
+    edges = [
+        jnp.zeros((256,)),                                  # all-zero delta
+        jnp.concatenate([jnp.full((100,), 2.0),             # tied at the
+                         jnp.full((100,), 1.0)]),           # threshold
+        jnp.asarray([1e-38] * 50 + [0.0] * 50),             # subnormal-ish
+        -jnp.ones((130,)),                                  # full negative
+                                                            # ties, odd length
+    ]
+    for x in edges:
+        n = x.shape[0]
+        for k in (0, 1, n // 2, n):
+            vf, cf = fused.sparsify_by_count(x, k)
+            vh, ch = hist.sparsify_by_count(x, k)
+            np.testing.assert_array_equal(np.asarray(vf), np.asarray(vh))
+            assert int(cf) == int(ch)
+
+
+def test_fused_selector_vmapped_traced_counts():
+    """The engine path: per-client keep-counts ride the vmapped axis as
+    tracers (heterogeneous cohorts)."""
+    X = jax.random.normal(jax.random.key(9), (5, 640))
+    ks = jnp.asarray([0, 1, 64, 639, 640], jnp.int32)
+    fused, hist = _fused(), _hist()
+    vf, cf = jax.vmap(fused.sparsify_by_count)(X, ks)
+    vh, ch = jax.vmap(hist.sparsify_by_count)(X, ks)
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(vh))
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(ch))
+
+
+def test_fused_selector_under_jit():
+    """Compiled (jit) path, including the k=0 / k=n guards as traced
+    operands."""
+    x = _vec(1000, 11)
+    fused, hist = _fused(), _hist()
+    f = jax.jit(fused.sparsify_by_count)
+    h = jax.jit(hist.sparsify_by_count)
+    for k in (0, 1, 100, 999, 1000):
+        vf, cf = f(x, jnp.asarray(k))
+        vh, ch = h(x, jnp.asarray(k))
+        np.testing.assert_array_equal(np.asarray(vf), np.asarray(vh))
+        assert int(cf) == int(ch)
+
+
+# ---------------------------------------------------------------------------
+# fused quantization: one kernel pass == mask then quantize_roundtrip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_fused_quantize_matches_two_pass(bits, stochastic):
+    x = _vec(1000, 2)
+    key = jax.random.key(7) if stochastic else None
+    fused, hist = _fused(), _hist()
+    for k in (0, 1, 250, 1000):
+        vf, cf = fused.sparsify_quantized(x, count=k, bits=bits, key=key)
+        vh, ch = hist.sparsify_by_count(x, k)
+        vq = qz.quantize_roundtrip(vh, bits, key)
+        np.testing.assert_array_equal(np.asarray(vf), np.asarray(vq),
+                                      err_msg=f"bits={bits} k={k}")
+        assert int(cf) == int(ch)
+
+
+def test_fused_quantize_density_one_shortcut():
+    """density >= 1 skips masking entirely — plain quantization, exactly
+    like the separate Quantize stage."""
+    x = _vec(500, 4)
+    key = jax.random.key(3)
+    vf, cf = _fused().sparsify_quantized(x, density=1.0, bits=4, key=key)
+    np.testing.assert_array_equal(np.asarray(vf),
+                                  np.asarray(qz.quantize_roundtrip(x, 4, key)))
+    assert int(cf) == x.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# the in-kernel pack vs the reference codec
+# ---------------------------------------------------------------------------
+
+def test_fused_pack_matches_reference_codec():
+    x = _vec(1000, 6)
+    fused = _fused()
+    for k, bits in ((0, 0), (1, 0), (100, 4), (333, 8), (1000, 0)):
+        key = jax.random.key(k) if bits else None
+        cap = comm.pack_capacity(1000, k)
+        vals, nnz, idx, val = fused.sparsify_quantized_packed(
+            x, count=k, bits=bits, key=key, cap=cap)
+        ridx, rval, rnnz = ft.pack_values(vals, cap)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+        np.testing.assert_array_equal(np.asarray(val), np.asarray(rval))
+        # kernel nnz counts threshold survivors; the reference counts
+        # nonzero *values* (quantization may round a survivor to zero),
+        # so kernel nnz >= reference nnz and unpacking is still exact
+        assert int(nnz) >= int(rnnz)
+        np.testing.assert_array_equal(
+            np.asarray(ft.unpack_values(idx, val, 1000)), np.asarray(vals))
+
+
+def test_fused_pack_overflow_flags_without_corrupting():
+    x = jnp.ones((512,))                        # fully tied: keeps all 512
+    cap = 64
+    vals, nnz, idx, val = _fused().sparsify_quantized_packed(
+        x, count=32, bits=0, key=None, cap=cap)
+    assert int(nnz) > cap                       # overflow is flagged...
+    ridx, rval, rnnz = ft.pack_values(vals, cap)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(val), np.asarray(rval))
+    assert int(rnnz) == int(nnz)                # ...and counted in full
+
+
+@settings(deadline=None, max_examples=6)
+@given(hst.integers(1, 2048), hst.floats(0.0, 1.0), hst.integers(0, 2 ** 31))
+def test_pack_unpack_roundtrip_property(n, density, seed):
+    """pack -> unpack is bit-exact at capacity >= nnz, for random shapes
+    and densities (satellite: the wire-format round-trip property)."""
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (n,))
+    x = x * (jax.random.uniform(jax.random.fold_in(key, 1), (n,)) < density)
+    idx, val, nnz = ft.pack_values(x, n)
+    assert int(nnz) == int(jnp.sum(x != 0))
+    np.testing.assert_array_equal(np.asarray(ft.unpack_values(idx, val, n)),
+                                  np.asarray(x, np.float32))
+    # ascending indices, sentinel n in the empty tail
+    host = np.asarray(idx)
+    assert (host[: int(nnz)] == np.flatnonzero(np.asarray(x))).all()
+    assert (host[int(nnz):] == n).all()
+
+
+def test_sparse_accumulate_matches_row_ordered_sum():
+    X = jax.random.normal(jax.random.key(12), (6, 800))
+    X = X * (jnp.abs(X) > 1.0)                  # sparse rows
+    cap = int(jnp.max(jnp.sum(X != 0, axis=1)))
+    idx, val, nnz = jax.vmap(lambda v: ft.pack_values(v, cap))(X)
+    got = ft.sparse_accumulate(idx, val, 800)
+    want = functools.reduce(lambda a, b: a + b, list(X))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# stage-level differential: FusedTopKQuantize == TopKSparsify + Quantize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [0, 4])
+def test_fused_stage_matches_two_stage_pipeline(bits):
+    x = _vec(900, 8)
+    key = jax.random.key(5) if bits else None
+    two = tp.Pipeline((tp.TopKSparsify(count=90, selector=_hist()),
+                       tp.Quantize(bits)))
+    one = tp.Pipeline((tp.FusedTopKQuantize(count=90, bits=bits,
+                                            selector=_fused()),))
+    ma, mb = two(x, key=key), one(x, key=key)
+    np.testing.assert_array_equal(np.asarray(ma.values), np.asarray(mb.values))
+    assert int(ma.nnz) == int(mb.nnz)
+    assert ma.value_bits == mb.value_bits
+    assert two.wire(900) == one.wire(900)
+
+
+def test_upload_pipeline_routes_fused_selector():
+    rule = st.UploadRule.topk(0.1)
+    pipe = tp.upload_pipeline(rule, quant_bits=4, selector="fused")
+    assert len(pipe.stages) == 1
+    assert isinstance(pipe.stages[0], tp.FusedTopKQuantize)
+    assert tp.resolve_stage("fused_topk_quantize") is tp.FusedTopKQuantize
+    # low-rank owns the quantization: the fused stage must not be used
+    lr = tp.LowRankCompress(rank=2, bits=4)
+    pipe_lr = tp.upload_pipeline(rule, quant_bits=4, selector="fused",
+                                 lowrank=lr)
+    assert isinstance(pipe_lr.stages[0], tp.TopKSparsify)
+    assert pipe_lr.stages[-1] is lr
+
+
+# ---------------------------------------------------------------------------
+# property-based wire-format closed forms (every stage combo x width x
+# coding x selector, random shapes/densities)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(hst.sampled_from(("exact", "histogram", "pallas", "fused")),
+       hst.sampled_from((0, 2, 4, 8)),
+       hst.sampled_from((0, 2)),
+       hst.integers(64, 100_000),
+       hst.floats(0.01, 1.0))
+def test_wire_format_closed_form_property(selector, bits, lowrank, n, density):
+    """`wire_format` and `Pipeline.wire` agree with the closed form for
+    every selector x quantize width x coding combination: value width =
+    quantize bits (32 if off), dense-coded iff low-rank compressed."""
+    spec = st.StrategySpec(kind="flasc", selector=selector,
+                           density_up=density, quant_bits_up=bits,
+                           lowrank_up=lowrank)
+    vb, dense = tp.wire_format(spec, n, "up")
+    lr = tp.lowrank_stage(spec, "up")
+    lr_active = lr is not None and lr.active(n)
+    assert dense is lr_active
+    assert vb == (float(bits) if bits else 32.0) / 8.0
+    # the actual upload pipeline (which may fuse stages) must declare the
+    # same wire format the spec-level dispatch promises
+    pipe = tp.upload_pipeline(st.UploadRule.topk(density), bits,
+                              selector=selector, lowrank=lr)
+    assert pipe.wire(n) == (vb * 8.0, dense)
+
+
+@settings(deadline=None, max_examples=10)
+@given(hst.sampled_from((0, 2, 4, 8)), hst.integers(64, 100_000),
+       hst.integers(0, 100_000), hst.integers(1, 32))
+def test_ledger_coded_bytes_closed_form_property(bits, n, nnz, clients):
+    """`CommLedger` coded bytes == the index-vs-bitmap closed form at the
+    pipeline's declared width, per message."""
+    nnz = min(nnz, n)
+    spec = st.StrategySpec(kind="flasc", selector="fused",
+                           quant_bits_up=bits)
+    vb, dense = tp.wire_format(spec, n, "up")
+    led = comm.CommLedger(total_params=n, up_value_bytes=vb, up_dense=dense)
+    led.record_round(clients, 0.0, nnz * clients,
+                     up_per_message=[nnz] * clients)
+    expect_one = min(int(nnz * (vb + comm.INDEX_BYTES)),
+                     int(nnz * vb) + n // 8)
+    assert led.up_coded_bytes == clients * expect_one
+    assert led.up_bytes == int(nnz * clients * vb)
+
+
+def test_pack_capacity_contract():
+    assert comm.pack_capacity(10_000, 0) == 64           # floor slack
+    assert comm.pack_capacity(10_000, 1000) == 1125      # k + k//8
+    assert comm.pack_capacity(100, 1000) == 100          # never beyond n
+    assert comm.pack_capacity(0, 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# sparse-aggregation gating + the packed server reduction
+# ---------------------------------------------------------------------------
+
+def test_supports_sparse_aggregate_gating():
+    on = st.resolve(st.StrategySpec(kind="flasc", sparse_aggregate=True))
+    assert st.supports_sparse_aggregate(on)
+    assert st.sparse_aggregate_capacity(on, 10_000) == \
+        comm.pack_capacity(10_000, sp.density_count(10_000, on.spec.density_up))
+    # off by default
+    assert not st.supports_sparse_aggregate(
+        st.resolve(st.StrategySpec(kind="flasc")))
+    # weighted-aggregate override keeps the dense stack
+    assert not st.supports_sparse_aggregate(st.resolve(st.StrategySpec(
+        kind="hetlora", hetlora_ranks=(1, 2), hetlora_weighted=True,
+        sparse_aggregate=True)))
+    # per-client densities / low-rank uploads stay dense
+    assert not st.supports_sparse_aggregate(st.resolve(st.StrategySpec(
+        kind="flasc", client_densities=(0.1, 0.5), sparse_aggregate=True)))
+    assert not st.supports_sparse_aggregate(st.resolve(st.StrategySpec(
+        kind="flasc", lowrank_up=4, sparse_aggregate=True)))
+
+
+def test_aggregate_sparse_matches_dense_mean():
+    strat = st.resolve(st.StrategySpec(kind="flasc", sparse_aggregate=True))
+    X = jax.random.normal(jax.random.key(13), (4, 600))
+    X = X * (jnp.abs(X) > 1.2)
+    cap = int(jnp.max(jnp.sum(X != 0, axis=1)))
+    idx, val, _ = jax.vmap(lambda v: ft.pack_values(v, cap))(X)
+    ctx = st.PlanContext(p_len=600, n_clients=4, round_idx=0,
+                         rank_idx=None, is_b=None)
+    got = strat.aggregate_sparse(idx, val, ctx)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(strat.aggregate(X, ctx)),
+                               rtol=1e-6, atol=1e-7)

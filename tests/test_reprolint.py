@@ -242,6 +242,63 @@ def test_stage_wire_silent_with_explicit_wire():
     assert lint(good, "stage-wire", docs_text="x", tests_text="x") == []
 
 
+def test_fused_stage_wire_fires_on_identity_wire():
+    # fuses quantization (has `bits`) but bills the un-narrowed width
+    bad = """
+        @register_stage("fused_fake")
+        class FusedFake:
+            bits: int = 4
+
+            def wire(self, n, value_bits, dense):
+                return value_bits, dense
+    """
+    found = lint(bad, "fused-stage-wire",
+                 docs_text="fused_fake", tests_text="fused_fake")
+    assert len(found) == 1
+    assert "never reads it" in found[0].message
+
+
+def test_fused_stage_wire_fires_on_missing_wire():
+    bad = """
+        @register_stage("fused_fake")
+        class FusedFake:
+            bits: int = 4
+    """
+    found = lint(bad, "fused-stage-wire",
+                 docs_text="fused_fake", tests_text="fused_fake")
+    assert len(found) == 1
+    assert "does not declare" in found[0].message
+
+
+def test_fused_stage_wire_silent_when_wire_reads_bits():
+    good = """
+        @register_stage("fused_fake")
+        class FusedFake:
+            bits: int = 4
+
+            def wire(self, n, value_bits, dense):
+                if 0 < self.bits < 32:
+                    return float(self.bits), dense
+                return value_bits, dense
+    """
+    assert lint(good, "fused-stage-wire",
+                docs_text="x", tests_text="x") == []
+
+
+def test_fused_stage_wire_ignores_unquantized_stages():
+    # no `bits` field -> not a fusing stage; stage-wire's jurisdiction
+    plain = """
+        @register_stage("plain")
+        class Plain:
+            density: float = 0.1
+
+            def wire(self, n, value_bits, dense):
+                return value_bits, dense
+    """
+    assert lint(plain, "fused-stage-wire",
+                docs_text="x", tests_text="x") == []
+
+
 def test_engine_config_fires():
     missing_config = """
         @register_engine("fake")
@@ -450,6 +507,7 @@ def test_rule_registry_is_complete():
     # table and this tuple are both checked against the live registry
     assert core.registered_rules() == (
         "engine-config",
+        "fused-stage-wire",
         "host-pull-in-loop",
         "host-reduction",
         "host-sync-in-traced",

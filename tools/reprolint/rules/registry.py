@@ -77,6 +77,50 @@ class StageWire(Rule):
                     "not: the ledger bills whatever this returns)")
 
 
+@register_rule("fused-stage-wire")
+class FusedStageWire(Rule):
+    """A transport stage that fuses quantization/coding into its transform
+    (it declares a `bits` field) owns the message's wire width — its
+    `wire` must exist and actually read `bits`.  `stage-wire` catches a
+    missing `wire`; this rule catches the subtler mis-billing where a
+    fused stage declares an identity `wire` and the ledger silently
+    bills fused-quantized messages at 32-bit values (the
+    `FusedTopKQuantize` failure mode)."""
+
+    scope = "project"
+
+    def check_project(self, project: Project) -> Iterator[Finding]:
+        for mod, cls in _src_classes(project):
+            regs = [n for r, n in registered_names(cls) if r == "stages"]
+            if not regs:
+                continue
+            has_bits = any(isinstance(sub, ast.AnnAssign)
+                           and isinstance(sub.target, ast.Name)
+                           and sub.target.id == "bits"
+                           for sub in cls.body)
+            if not has_bits:
+                continue
+            wire = _own_method(cls, "wire")
+            if wire is None:
+                yield Finding(
+                    mod.rel, cls.lineno, self.name,
+                    f"transport stage {regs[0]!r} ({cls.name}) fuses "
+                    "quantization (declares `bits`) but does not declare "
+                    "`wire` — the fused value width must be stated "
+                    "explicitly, never inherited")
+                continue
+            uses_bits = any(isinstance(node, ast.Attribute)
+                            and node.attr == "bits"
+                            for node in ast.walk(wire))
+            if not uses_bits:
+                yield Finding(
+                    mod.rel, wire.lineno, self.name,
+                    f"transport stage {regs[0]!r} ({cls.name}) fuses "
+                    "quantization (declares `bits`) but its `wire` never "
+                    "reads it — the ledger would bill fused-quantized "
+                    "messages at the un-narrowed value width")
+
+
 @register_rule("engine-config")
 class EngineConfig(Rule):
     """Every @register_engine class must round-trip its constructor
