@@ -119,6 +119,8 @@ REGISTRY_REF_RES = (
     (re.compile(r'resolve_engine\("(\w+)"'), "engines"),
     (re.compile(r"BENCH_ENGINE=([a-z_]+)"), "engines"),
     (re.compile(r'resolve_stage\("(\w+)"'), "stages"),
+    (re.compile(r'sampler="(\w+)"'), "samplers"),
+    (re.compile(r'resolve_sampler\("(\w+)"'), "samplers"),
     # suppression comments name rules (comma-separated; 'all' is builtin)
     (re.compile(r"reprolint:\s*disable=([\w,-]+)"), "rules"),
 )
@@ -128,6 +130,7 @@ TABLE_KEYWORDS = (("selector", ("selectors",)),
                   ("grouped kernel", ("grouped_kernels",)),
                   ("engine", ("engines",)),
                   ("transport stage", ("stages",)),
+                  ("sampler", ("samplers",)),
                   ("strateg", ("strategies",)),
                   ("kind", ("strategies",)),
                   ("baseline", ("strategies", "stages")),
@@ -158,7 +161,7 @@ def check_registry_names(md_path, registries):
     registries = {r: set(names) for r, names in registries.items()}
     registries["rules"].add("all")      # `disable=all` is builtin
     for m in re.finditer(r'@register_(strategy|selector|grouped_kernel|'
-                         r'engine|stage|rule)\("([\w-]+)"\)', text):
+                         r'engine|stage|sampler|rule)\("([\w-]+)"\)', text):
         registries[REGISTER_FUNCS["register_" + m.group(1)]].add(m.group(2))
     for pat, registry in REGISTRY_REF_RES:
         for match in pat.findall(text):

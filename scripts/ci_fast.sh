@@ -24,6 +24,13 @@
 #      examples/quickstart.py must run).
 #   5. a multi-tenant serving smoke: the continuous-batching engine over
 #      a tiny arch, 4 adapters, 8 requests (repro.launch.serve).
+#   6. the population-scaling smoke (docs/scale.md): the 1e4-client
+#      host-store run rides the fast tier as
+#      tests/test_population.py::test_population_smoke_1e4_clients;
+#      benchmarks/population_bench.py then runs in BENCH_QUICK mode
+#      (1e3/1e4 sweep, prefetch on/off) and regenerates
+#      BENCH_population.json, asserting the one-bulk-H2D-per-round
+#      transfer contract along the way.
 #
 # The full tier-1 suite (ROADMAP.md) still covers the slow
 # model-training paths.
@@ -38,3 +45,5 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m fast "$@"
 python scripts/check_docs.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.launch.serve \
     --arch yi-9b --clients 4 --pages 2 --lanes 2 --requests 8 --max-len 32
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/population_bench.py --quick

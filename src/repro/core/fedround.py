@@ -72,13 +72,17 @@ class FlatMeta:
             off += n
         return jax.tree.unflatten(self.treedef, out)
 
-    def plan_context(self, n_clients: int, round_idx=None) -> st.PlanContext:
+    def plan_context(self, n_clients: int, round_idx=None,
+                     cohort_slots=None) -> st.PlanContext:
         """Fresh per-round context; `round_idx` (traced scalar) lets
-        schedule-dependent strategies branch on the round, and `meta=self`
-        gives structure-aware hooks flatten/unflatten."""
+        schedule-dependent strategies branch on the round, `meta=self`
+        gives structure-aware hooks flatten/unflatten, and `cohort_slots`
+        (static tuple, AsyncEngine partial buffers) tells coverage-aware
+        aggregation which slots actually contributed."""
         return st.PlanContext(p_len=self.p_len, n_clients=n_clients,
                               rank_idx=self.rank_idx, is_b=self.is_b,
-                              round_idx=round_idx, meta=self)
+                              round_idx=round_idx, meta=self,
+                              cohort_slots=cohort_slots)
 
 
 def init_server(flatP: jax.Array):
@@ -86,9 +90,15 @@ def init_server(flatP: jax.Array):
 
 
 def _client_update(flat0, cbatch, m_train, up_pipe: tp.Pipeline, *,
-                   loss_of, meta: FlatMeta, fed: FederatedConfig, up_key=None):
+                   loss_of, meta: FlatMeta, fed: FederatedConfig, up_key=None,
+                   mu0=None):
     """One client's local epoch(s). cbatch leaves: (local_steps, local_bs, ...).
-    Returns (upload message values, up_nnz, mean loss)."""
+    Returns (upload message values, up_nnz, mean loss, final momentum).
+    `mu0` is the client's persistent momentum row (population runs,
+    docs/scale.md); None starts from zeros — the stateless-cohort default,
+    whose trace is unchanged (the final momentum is already a scan carry,
+    so returning it costs nothing and is dead-code-eliminated when the
+    caller drops it)."""
 
     def grad_step(carry, mb):
         flat, mu = carry
@@ -99,11 +109,11 @@ def _client_update(flat0, cbatch, m_train, up_pipe: tp.Pipeline, *,
         flat = flat - fed.client_lr * mu
         return (flat, mu), loss
 
-    mu0 = jnp.zeros_like(flat0)
-    (flatT, _), losses = jax.lax.scan(grad_step, (flat0, mu0), cbatch)
+    mu0 = jnp.zeros_like(flat0) if mu0 is None else mu0
+    (flatT, muT), losses = jax.lax.scan(grad_step, (flat0, mu0), cbatch)
     delta = flat0 - flatT                                     # pseudo-gradient sign
     msg = up_pipe(delta, key=up_key)
-    return msg.values, msg.nnz, jnp.mean(losses)
+    return msg.values, msg.nnz, jnp.mean(losses), muT
 
 
 def _share_or_stack(items):
@@ -121,7 +131,7 @@ def _keep_count(p_len: int, density: float) -> int:
 def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
                  loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
                  kdown=None, upkeys=None, ax_key=None, spmd_axis_name=None,
-                 round_idx=None):
+                 round_idx=None, client_mu=None):
     """Stack per-client `RoundPlan`s onto the vmapped client axis and run
     every client's local update through the transport pipelines.
 
@@ -133,6 +143,11 @@ def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
     Returns ((deltas, up_nnzs, losses, down_nnzs), (m_down_cs, ax_down)) —
     the second pair is the stacked download mask and its vmap axis, which
     the caller needs for the shared-vs-per-client download accounting.
+
+    `client_mu` (k, p_len) threads each client's persistent momentum row
+    through the local update (population runs); the output tuple then
+    grows a fifth element with the final rows.  None (default) keeps the
+    stateless zeros-init trace byte-identical.
     """
     # --- stack the plans onto the client axis -----------------------------
     m_down_cs, ax_down = _share_or_stack([p.m_down for p in plans])
@@ -164,7 +179,7 @@ def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
     lr_down = tp.lowrank_stage(s, "down", fold=round_idx)
     lr_up = tp.lowrank_stage(s, "up", fold=round_idx)
 
-    def one_client(m_dn, m_tr, up_arg, cb, kup):
+    def one_client(m_dn, m_tr, up_arg, cb, kup, mu):
         down = tp.download_pipeline(m_dn, s.quant_bits_down,
                                     lowrank=lr_down)(P_base, key=kdown)
         if up_mode == "fixed":
@@ -178,15 +193,18 @@ def _run_clients(P_base, plans, client_batches, s: st.StrategySpec, *,
             pipe = tp.upload_pipeline(plans[0].upload, s.quant_bits_up,
                                       selector=s.selector, count=up_arg,
                                       lowrank=lr_up)
-        values, nnz, loss = _client_update(down.values, cb, m_tr, pipe,
-                                           loss_of=loss_of, meta=meta, fed=fed,
-                                           up_key=kup)
-        return values, nnz, loss, down.nnz
+        values, nnz, loss, muT = _client_update(
+            down.values, cb, m_tr, pipe, loss_of=loss_of, meta=meta, fed=fed,
+            up_key=kup, mu0=mu)
+        if client_mu is None:
+            return values, nnz, loss, down.nnz
+        return values, nnz, loss, down.nnz, muT
 
+    ax_mu = None if client_mu is None else 0
     out = jax.vmap(
-        one_client, in_axes=(ax_down, ax_train, ax_up, 0, ax_key),
+        one_client, in_axes=(ax_down, ax_train, ax_up, 0, ax_key, ax_mu),
         spmd_axis_name=spmd_axis_name)(
-        m_down_cs, m_train_cs, up_cs, client_batches, upkeys)
+        m_down_cs, m_train_cs, up_cs, client_batches, upkeys, client_mu)
     return out, (m_down_cs, ax_down)
 
 
@@ -195,11 +213,13 @@ def _aggregate_uploads(strat: st.Strategy, deltas, ctx):
     when the strategy opts in (`StrategySpec.sparse_aggregate`).
 
     The sparse path packs each (p_len,) upload row into a static-capacity
-    (index, value) pair (`fused_transport.pack_values`) and scatter-adds
-    the packed values directly (`Strategy.aggregate_sparse`) — O(C * cap)
-    instead of O(C * p_len) aggregation reads.  A message whose nonzero
-    support exceeds the capacity (pathological threshold ties) flips the
-    whole round to the dense rule via `jnp.where`, so results are never
+    (index, value) pair — in-kernel via the batched pack accumulator
+    (`fused_transport.pack_values_batch`, bit-identical to the
+    `pack_values` reference codec) — and scatter-adds the packed values
+    directly (`Strategy.aggregate_sparse`) — O(C * cap) instead of
+    O(C * p_len) aggregation reads.  A message whose nonzero support
+    exceeds the capacity (pathological threshold ties) flips the whole
+    round to the dense rule via `jnp.where`, so results are never
     silently truncated.  Capacity gating is static
     (`strategies.sparse_aggregate_capacity`): unsupported specs compile
     the unmodified dense aggregation, byte for byte.
@@ -207,7 +227,7 @@ def _aggregate_uploads(strat: st.Strategy, deltas, ctx):
     cap = st.sparse_aggregate_capacity(strat, ctx.p_len)
     if cap == 0:
         return strat.aggregate(deltas, ctx)
-    idx, val, pnnz = jax.vmap(lambda v: ft.pack_values(v, cap))(deltas)
+    idx, val, pnnz = ft.pack_values_batch(deltas, cap)
     overflow = jnp.any(pnnz > cap)
     return jnp.where(overflow, strat.aggregate(deltas, ctx),
                      strat.aggregate_sparse(idx, val, ctx))
@@ -217,7 +237,7 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
                     loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
                     strategy: Optional[st.StrategyLike] = None,
                     spec: Optional[st.StrategySpec] = None,
-                    spmd_axis_name=None):
+                    spmd_axis_name=None, client_mu=None):
     """One round. client_batches leaves: (n_clients, local_steps, local_bs, ...).
 
     `strategy` accepts a `Strategy` instance, a `StrategySpec`, or a kind
@@ -225,6 +245,12 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
     or ('pod','data')) shards the vmapped client axis across the mesh in
     the production lowering.
     Returns (flatP', server_state', sstate', metrics).
+
+    `client_mu` (n_clients, p_len) threads the cohort's persistent
+    per-client momentum rows (population runs, docs/scale.md); the final
+    rows come back as `metrics["client_mu"]` for the engine to scatter
+    into the `federated.population` store.  None (the default) keeps the
+    stateless zeros-init trace unchanged.
     """
     strat = st.resolve(strategy if strategy is not None else spec)
     s = strat.spec
@@ -242,10 +268,15 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
     kdown = qkeys[-1] if use_keys else None     # shared: one broadcast message
     upkeys, ax_key = (qkeys[:-1], 0) if use_keys else (None, None)
 
-    (deltas, nnzs, losses, down_nnzs), (m_down_cs, ax_down) = _run_clients(
+    out, (m_down_cs, ax_down) = _run_clients(
         P_base, plans, client_batches, s, loss_of=loss_of, meta=meta, fed=fed,
         kdown=kdown, upkeys=upkeys, ax_key=ax_key,
-        spmd_axis_name=spmd_axis_name, round_idx=round_idx)
+        spmd_axis_name=spmd_axis_name, round_idx=round_idx,
+        client_mu=client_mu)
+    if client_mu is None:
+        (deltas, nnzs, losses, down_nnzs), mu_out = out, None
+    else:
+        deltas, nnzs, losses, down_nnzs, mu_out = out
 
     lr_down = tp.lowrank_stage(s, "down")
     if lr_down is not None and lr_down.active(meta.p_len):
@@ -300,6 +331,8 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
         # per program, so their scalars differ across engine backends)
         "loss_clients": losses,
     }
+    if mu_out is not None:
+        metrics["client_mu"] = mu_out
     return flatP, server_state, sstate, metrics
 
 
@@ -313,6 +346,31 @@ def make_round_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
         return federated_round(flatP, server_state, sstate, client_batches,
                                rng, loss_of=loss_of, meta=meta, fed=fed,
                                strategy=strat, spmd_axis_name=spmd_axis_name)
+    return fn
+
+
+def make_population_round_fn(loss_of: LossFn, meta: FlatMeta,
+                             fed: FederatedConfig, strategy: st.StrategyLike,
+                             spmd_axis_name=None):
+    """`make_round_fn` with the sampled cohort's persistent per-client
+    momentum rows threaded through (population runs, docs/scale.md):
+
+        fn(flatP, server_state, sstate, client_batches, client_mu, rng)
+            -> (flatP', server_state', sstate', metrics)
+
+    `client_mu` is the (cohort, p_len) gather the engine staged from the
+    `federated.population` store; the post-round rows ride back in
+    `metrics["client_mu"]` for the scatter commit.  Everything else is the
+    synchronous round, op for op — a cohort whose rows are all zeros
+    computes bit-identically to the stateless `make_round_fn` path.
+    """
+    strat = st.resolve(strategy)
+
+    def fn(flatP, server_state, sstate, client_batches, client_mu, rng):
+        return federated_round(flatP, server_state, sstate, client_batches,
+                               rng, loss_of=loss_of, meta=meta, fed=fed,
+                               strategy=strat, spmd_axis_name=spmd_axis_name,
+                               client_mu=client_mu)
     return fn
 
 
@@ -367,7 +425,8 @@ def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
         fn(...) -> (deltas, up_nnzs, losses, down_nnzs, idx, val, pnnz)
 
     where (idx, val, pnnz) are each delta row packed to `pack_cap` coded
-    (index, value) slots by `fused_transport.pack_values` — the engine
+    (index, value) slots by the in-kernel batched pack
+    (`fused_transport.pack_values_batch`) — the engine
     bulk-transfers the packed pair (O(cap) per job instead of O(p_len))
     and pulls a dense row only for the rare message whose support
     overflows the capacity (pnnz > pack_cap).
@@ -411,15 +470,15 @@ def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
             fed=fed, kdown=kdown, upkeys=upkeys, ax_key=ax_key,
             round_idx=round_idx)
         if pack_cap:
-            idx, val, pnnz = jax.vmap(
-                lambda v: ft.pack_values(v, pack_cap))(deltas)
+            idx, val, pnnz = ft.pack_values_batch(deltas, pack_cap)
             return deltas, nnzs, losses, down_nnzs, idx, val, pnnz
         return deltas, nnzs, losses, down_nnzs
     return fn
 
 
 def make_server_phase_fn(meta: FlatMeta, fed: FederatedConfig,
-                         strategy: st.StrategyLike, *, sparse: bool = False):
+                         strategy: st.StrategyLike, *, sparse: bool = False,
+                         cohort_slots: Optional[Tuple[int, ...]] = None):
     """Server side of the split round: one buffered aggregation event (the
     aggregate / server-opt / `post_round` tail of `federated_round`).
 
@@ -452,6 +511,14 @@ def make_server_phase_fn(meta: FlatMeta, fed: FederatedConfig,
     DP aggregation (fed.dp_clip > 0) is noise-calibrated for one uniform
     synchronous cohort and is refused by the AsyncEngine before this
     function is ever built.
+
+    `cohort_slots` (static tuple) records which client slots the buffered
+    rows came from, in row order — the AsyncEngine passes the buffer's
+    job slots when the buffer is not one full fresh cohort, so
+    coverage-weighted aggregation (hetlora_weighted) scales each entry by
+    the rank slices actually present instead of assuming the full cohort.
+    None (the sync-equivalence default) leaves the full-cohort context —
+    and the compiled program — untouched.
     """
     strat = st.resolve(strategy)
     assert not sparse or st.supports_sparse_aggregate(strat), strat
@@ -460,7 +527,8 @@ def make_server_phase_fn(meta: FlatMeta, fed: FederatedConfig,
         round_idx = server_state["round"]
         m_down = strat.download_mask(flatP, sstate, round_idx)
         P_base = strat.download_base(flatP, sstate)
-        ctx = meta.plan_context(fed.n_clients, round_idx=round_idx)
+        ctx = meta.plan_context(fed.n_clients, round_idx=round_idx,
+                                cohort_slots=cohort_slots)
         if sparse:
             idx, val, weights = rest
             pseudo_grad = strat.aggregate_sparse(

@@ -84,6 +84,20 @@ class StrategySpec:
     # back to the dense path whenever a message overflows its static
     # pack capacity, so results are never silently truncated.
     sparse_aggregate: bool = False
+    # hierarchical two-level aggregation (docs/scale.md): > 0 splits the
+    # flat vector into that many contiguous index ranges, each pre-reduced
+    # by an "edge" scatter-add over only its range (sparse uploads never
+    # densify at the edge) before the server concatenates the disjoint
+    # partials.  Parameter-sharded (reduce-scatter style), so the per-
+    # coordinate addition order matches the flat reduction exactly and the
+    # result is bit-equal; 0 = flat single-level reduction.  Only takes
+    # effect on the sparse-aggregation path (`sparse_aggregate=True`).
+    edge_shards: int = 0
+    # two_stage_ortho phase length: each A/B communication phase spans
+    # this many consecutive rounds (1 = the paper's strict alternation).
+    # The QR re-orthogonalization folds once per A phase, on its last
+    # round.  Ignored by every other kind.
+    phase_len: int = 1
 
     def __post_init__(self):
         # user strategies enter the registry after import time, so accept
@@ -123,6 +137,12 @@ class StrategySpec:
         if self.lowrank_down < 0 or self.lowrank_up < 0:
             raise ValueError("lowrank ranks must be >= 0 (0 = off); got "
                              f"{self.lowrank_down}/{self.lowrank_up}")
+        if self.edge_shards < 0:
+            raise ValueError(
+                f"edge_shards must be >= 0 (0 = flat); got {self.edge_shards}")
+        if self.phase_len < 1:
+            raise ValueError(
+                f"phase_len must be >= 1; got {self.phase_len}")
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +203,12 @@ class PlanContext:
     # the `fedround.FlatMeta` of the trainable tree — gives structure-aware
     # strategies (per-leaf QR in `two_stage_ortho`) flatten/unflatten
     meta: Any = None
+    # which client *slots* actually contributed the rows being aggregated
+    # (None = the full 0..n_clients-1 cohort, the sync-round default).
+    # AsyncEngine sets this to the buffer's job slots so coverage-weighted
+    # strategies (hetlora_weighted) scale by the slices actually present
+    # in a partial/repeated buffer instead of assuming the full cohort.
+    cohort_slots: Optional[Tuple[int, ...]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -233,9 +259,17 @@ class Strategy:
         `aggregate` is the base-class uniform mean, so the two paths
         compute the same sum up to float summation order (bit-equality is
         pinned *within* the sparse path: sim and async run this exact op
-        on identical packed inputs)."""
+        on identical packed inputs).  With `spec.edge_shards > 0` the
+        scatter-add runs as the hierarchical edge tree
+        (`fused_transport.hierarchical_accumulate`), which is bit-equal
+        to the flat reduction by construction (docs/scale.md)."""
         from repro.kernels import fused_transport as ft
-        return ft.sparse_accumulate(idx, val, ctx.p_len) / idx.shape[0]
+        if self.spec.edge_shards > 0:
+            acc = ft.hierarchical_accumulate(idx, val, ctx.p_len,
+                                             self.spec.edge_shards)
+        else:
+            acc = ft.sparse_accumulate(idx, val, ctx.p_len)
+        return acc / idx.shape[0]
 
     @property
     def uniform_aggregation(self) -> bool:
@@ -541,11 +575,20 @@ class HetLoRA(Strategy):
         return RoundPlan(m, m, UploadRule.fixed(m))
 
     def coverage(self, ctx: PlanContext) -> np.ndarray:
-        """(p_len,) count of clients whose rank mask covers each entry."""
+        """(p_len,) count of aggregated rows whose rank mask covers each
+        entry.  Defaults to the full 0..n_clients-1 cohort; when
+        `ctx.cohort_slots` is set (AsyncEngine partial/repeated buffers),
+        only the slices actually present in the buffer are counted — a
+        slot appearing twice (version repeats) contributes twice, matching
+        the two delta rows it stacked."""
         assert ctx.rank_idx is not None, "hetlora needs FlatMeta rank metadata"
-        ranks = np.asarray(self.spec.hetlora_ranks[:ctx.n_clients])
-        assert len(ranks) == ctx.n_clients, \
-            (len(self.spec.hetlora_ranks), ctx.n_clients)
+        if ctx.cohort_slots is not None:
+            ranks = np.asarray([self.spec.hetlora_ranks[s]
+                                for s in ctx.cohort_slots])
+        else:
+            ranks = np.asarray(self.spec.hetlora_ranks[:ctx.n_clients])
+            assert len(ranks) == ctx.n_clients, \
+                (len(self.spec.hetlora_ranks), ctx.n_clients)
         return np.sum(ranks[:, None] > ctx.rank_idx[None, :], axis=0)
 
     def aggregate(self, deltas, ctx):
@@ -601,7 +644,10 @@ class TwoStageOrtho(Strategy):
     adapter product A·B bit-for-bit unchanged in exact arithmetic while
     renormalizing the basis the next B phase trains against.  Download
     stays dense (clients need both factors to run the model); compose
-    with `lowrank_down` for download compression."""
+    with `lowrank_down` for download compression.  `StrategySpec(
+    phase_len=L)` stretches each phase to L consecutive rounds — the QR
+    fold then runs once per A phase, on its last round — with L=1
+    reproducing the paper's strict alternation bit-for-bit."""
 
     _phase_cache: Optional[Tuple[PlanContext, jax.Array]] = None
 
@@ -615,7 +661,9 @@ class TwoStageOrtho(Strategy):
         # instead of stacking copies
         if self._phase_cache is None or self._phase_cache[0] is not ctx:
             is_b = jnp.asarray(ctx.is_b == 1)
-            phase_b = (ctx.round_idx % 2) == 1
+            # phase_len consecutive rounds per phase (1 = strict A/B
+            # alternation, the paper's schedule)
+            phase_b = ((ctx.round_idx // self.spec.phase_len) % 2) == 1
             self._phase_cache = (ctx, jnp.where(phase_b, is_b, ~is_b))
         return self._phase_cache[1]
 
@@ -633,8 +681,11 @@ class TwoStageOrtho(Strategy):
         def orthogonalize(flat):
             return meta.flatten(_ortho_lora_pairs(meta.unflatten(flat)))
 
-        was_a_phase = (round_idx % 2) == 0
-        flatP = jax.lax.cond(was_a_phase, orthogonalize, lambda f: f, flatP)
+        # fold QR once per A phase, on its last round (phase_len=1 reduces
+        # to the original "after every even round" schedule)
+        L = self.spec.phase_len
+        a_phase_end = (((round_idx // L) % 2) == 0) & ((round_idx + 1) % L == 0)
+        flatP = jax.lax.cond(a_phase_end, orthogonalize, lambda f: f, flatP)
         return sstate, flatP
 
 

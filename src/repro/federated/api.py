@@ -46,6 +46,7 @@ from repro.core import transport as tp
 from repro.data.datasets import FederatedTask
 from repro.data.pipeline import sample_round
 from repro.federated import engine as eng
+from repro.federated import population as popn
 from repro.models import lora as lora_mod
 from repro.models import model as mdl
 from repro.models.config import FederatedConfig, LoRAConfig
@@ -109,6 +110,8 @@ class Experiment:
         self._callbacks: List[eng.Callback] = []
         self._restore: Optional[Tuple[Any, Dict[str, Any]]] = None
         self._frozen_written = False
+        self._population: Optional[Dict[str, Any]] = None
+        self._population_bundle: Optional[popn.Population] = None
 
     # --- builder facets ----------------------------------------------------
     def with_strategy(self, strategy: Optional[st.StrategyLike] = None,
@@ -197,6 +200,25 @@ class Experiment:
         self._callbacks.extend(callbacks)
         return self
 
+    def with_population(self, population: int, *,
+                        sampler: popn.SamplerLike = "uniform",
+                        chunk: int = 4096, prefetch: bool = True,
+                        **sampler_kw) -> "Experiment":
+        """Scale the client *population* past the device cohort
+        (docs/scale.md): every round samples `n_clients` ids out of
+        `population` with the named `CohortSampler` (e.g.
+        `sampler="fraction", participation=0.3`), gathers their momentum
+        rows from a chunked host-resident `PopulationStore` (`chunk`
+        clients per chunk; 0 selects the dense device test backend), and
+        commits the finals back after the round.  `prefetch` stages the
+        next cohort host-to-device while the current round computes.
+        Synchronous engines only (AsyncEngine takes `sampler=` itself)."""
+        self._population = {"population": int(population),
+                           "sampler": sampler, "chunk": int(chunk),
+                           "prefetch": bool(prefetch),
+                           "sampler_kw": dict(sampler_kw)}
+        return self
+
     # --- assembly ----------------------------------------------------------
     def build_backbone(self):
         """(params, ModelConfig) for the frozen backbone — pretrained unless
@@ -267,7 +289,16 @@ class Experiment:
             return mdl.loss_fn(p, cfg, rt._task_batch(cfg, mb),
                                lora=tree["lora"], lora_scale=scale)
 
-        plan = eng.RoundTask(loss_of, meta, fed, self.strategy, seed=t.seed)
+        pop = None
+        if self._population is not None:
+            ps = self._population
+            pop = popn.Population.build(
+                ps["population"], meta.p_len, cohort=fed.n_clients,
+                sampler=ps["sampler"], seed=t.seed, chunk=ps["chunk"],
+                prefetch=ps["prefetch"], **ps["sampler_kw"])
+            self._population_bundle = pop
+        plan = eng.RoundTask(loss_of, meta, fed, self.strategy, seed=t.seed,
+                             population=pop)
         if self._restore is not None:
             state, ledger, saved_acc = self._restore_state(plan, meta)
         else:
@@ -340,6 +371,10 @@ class Experiment:
                        "rounds_per_call":
                            int(getattr(self.engine, "rounds_per_call", 1))},
         }
+        if self._population_bundle is not None:
+            # the store payload itself rides state.aux (chunked arrays);
+            # the meta keeps only the JSON facets needed to rebuild
+            meta_json["population"] = self._population_bundle.config()
         # the first save of a fresh (non-resumed) run replaces any frozen
         # payload a previous run left in the directory
         overwrite = not (self._frozen_written or self._restore is not None)
@@ -404,5 +439,15 @@ class Experiment:
             ekw = ({"rounds_per_call": ej["rounds_per_call"]}
                    if ej.get("rounds_per_call", 1) > 1 else {})
         exp.with_engine(ej["name"], **ekw)
+        pj = mj.get("population")
+        if pj is not None:
+            # the sampler config() spec carries cohort/seed; the store
+            # arrays come back through the snapshot's aux payload when
+            # run() enters the population round loop
+            exp._population = {"population": int(pj["population"]),
+                               "sampler": dict(pj["sampler"]),
+                               "chunk": int(pj["chunk"]),
+                               "prefetch": bool(pj["prefetch"]),
+                               "sampler_kw": {}}
         exp._restore = (arrays, mj)
         return exp

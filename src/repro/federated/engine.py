@@ -54,6 +54,7 @@ from repro.core import fedround
 from repro.core import strategies as st
 from repro.core import transport as tp
 from repro.federated import async_clock as ac
+from repro.federated import population as popn
 from repro.models.config import FederatedConfig
 
 DataProvider = Callable[[int], Any]
@@ -96,12 +97,20 @@ class RoundTask:
     strategy — the *resolved* `Strategy` instance (not a spec/kind).
     seed     — base rng seed; engines derive per-round keys as
                `fold_in(key(seed + 2), round_idx)`.
+    population — optional `population.Population` bundle (host-resident
+               per-client state store + cohort sampler + prefetch flag);
+               when set, the synchronous engines run
+               `_run_population_rounds`: cohorts of `fed.n_clients` are
+               sampled out of a population that can be orders of
+               magnitude larger, with each client's momentum row
+               gathered from / committed back to the host store.
     """
     loss_of: fedround.LossFn
     meta: fedround.FlatMeta
     fed: FederatedConfig
     strategy: st.Strategy
     seed: int = 0
+    population: Optional[popn.Population] = None
 
 
 @dataclasses.dataclass
@@ -334,6 +343,8 @@ class Engine:
                    callbacks: Sequence[Callback] = ()) -> RunState:
         """Run rounds [state.round, state.rounds); mutates and returns
         `state`.  Rng schedule: fold_in(key(seed + 2), round_idx)."""
+        if state.plan.population is not None:
+            return self._run_population_rounds(state, data, callbacks)
         plan = state.plan
         base_key = jax.random.key(plan.seed + 2)
         step = self.compile(plan)
@@ -362,6 +373,83 @@ class Engine:
                 r += n
         except StopRun:
             pass
+        return state
+
+    # --- the population round loop -----------------------------------------
+    def compile_population(self, plan: RoundTask):
+        """-> step(flatP, server, sstate, batch, client_mu, key) ->
+        (flatP', server', sstate', metrics) where `client_mu` is the
+        (cohort, p_len) momentum gather staged from the host store and
+        `metrics["client_mu"]` carries the finals back for the scatter
+        commit."""
+        # no donation, like SimEngine.compile: callers snapshot flatP
+        # across calls for the equality anchors
+        return jax.jit(  # reprolint: disable=jit-no-donate -- see above
+            fedround.make_population_round_fn(plan.loss_of, plan.meta,
+                                              plan.fed, plan.strategy))
+
+    def _run_population_rounds(self, state: RunState, data: DataProvider,
+                               callbacks: Sequence[Callback] = ()
+                               ) -> RunState:
+        """The host-population variant of the round loop (docs/scale.md).
+
+        Each round: sample a cohort of `fed.n_clients` ids from the
+        population, gather their momentum rows from the host store and
+        stage them with ONE `jax.device_put` of the stacked block (never
+        a per-client transfer), run the unchanged vmapped round, then
+        scatter the final rows back.  With `population.prefetch` on,
+        round r+1's sample+gather+H2D happens between round r's async
+        dispatch and its blocking device pull, so staging overlaps
+        device compute — the double buffer.  Prefetch never changes
+        values (see `CohortPrefetcher`), only when they move.
+
+        The store rides `RunState.aux` (`{"population": ...}`) with the
+        same snapshot cadence as the AsyncEngine's clock: on rounds a
+        callback wants host state, plus a final snapshot — checkpoints
+        resume mid-flight bit-exactly.  Rounds run one device call each
+        (`rounds_per_call` is ignored: the scatter commit needs the
+        host between rounds)."""
+        plan = state.plan
+        pop = plan.population
+        assert pop is not None
+        n = plan.fed.n_clients
+        assert pop.sampler.cohort == n, \
+            f"sampler cohort {pop.sampler.cohort} != fed.n_clients {n}"
+        assert pop.store.row_len == plan.meta.p_len, \
+            (pop.store.row_len, plan.meta.p_len)
+        if state.aux and "population" in state.aux:
+            pop.store.load_arrays(state.aux["population"])
+        base_key = jax.random.key(plan.seed + 2)
+        step = self.compile_population(plan)
+        # always stage through the prefetcher: its cold take() is the
+        # same sample+gather+put the inline path would run, and its
+        # wait/H2D counters instrument both modes (population_bench.py)
+        pre = popn.CohortPrefetcher(pop.store, pop.sampler)
+        pop.last_prefetcher = pre
+        try:
+            r = state.round
+            while r < state.rounds:
+                ids, mu_dev = pre.take(r)
+                key = jax.random.fold_in(base_key, r)
+                state.flatP, state.server, state.sstate, metrics = step(
+                    state.flatP, state.server, state.sstate, data(r),
+                    mu_dev, key)
+                if pop.prefetch and r + 1 < state.rounds:
+                    # the jitted step dispatched asynchronously: stage
+                    # round r+1 while round r computes; `exclude` defers
+                    # any gather the commit below would invalidate
+                    pre.prefetch(r + 1, exclude=ids)
+                # this pull blocks on round r's device work
+                mu_out = np.asarray(metrics.pop("client_mu"), np.float32)
+                pop.store.commit_cohort(ids, mu_out)
+                if any(cb.wants_state(r, state.rounds) for cb in callbacks):
+                    state.aux = {"population": pop.store.to_arrays()}
+                self._finish_round(state, r, metrics, callbacks,
+                                   extra={"cohort": ids.tolist()})
+                r += 1
+        except StopRun:
+            pass
+        state.aux = {"population": pop.store.to_arrays()}
         return state
 
     def _chunk_len(self, r: int, state: RunState,
@@ -578,6 +666,17 @@ class ShardedEngine(Engine):
                             fedround.make_scanned_round_fn(self._round_fn(plan)),
                             batch_client_axis=1)
 
+    def compile_population(self, plan: RoundTask):
+        from repro.launch.steps import train_spmd_axes
+        # batch sharded over the client axes as usual; the (cohort,
+        # p_len) momentum block and the key ride `rest` replicated
+        return _ShardedStep(
+            self,
+            fedround.make_population_round_fn(
+                plan.loss_of, plan.meta, plan.fed, plan.strategy,
+                spmd_axis_name=train_spmd_axes(self.mesh)),
+            batch_client_axis=0)
+
 
 @register_engine("async")
 class AsyncEngine(Engine):
@@ -615,6 +714,17 @@ class AsyncEngine(Engine):
     bit for bit (tests/test_async_engine.py, all registered strategy
     kinds).
 
+    Client participation: an optional `sampler=` (a registered
+    `population.CohortSampler` name, spec dict, or instance) gates which
+    idle clients may start a job against each server version —
+    participation fractions and availability traces on the async path.
+    A version whose every startable client is gated falls back to
+    ignoring the trace (the FedBuff-timeout analog), so the event loop
+    cannot starve.  Non-uniform aggregation (`hetlora_weighted`) runs
+    under partial / stale / version-repeat buffers by specializing the
+    server phase to the buffer's slot tuple (`cohort_slots`), so rank
+    coverage counts exactly the rows present.
+
     Not supported: DP aggregation (`fed.dp_clip > 0`) — its noise
     calibration assumes one uniform synchronous cohort.
     """
@@ -624,7 +734,7 @@ class AsyncEngine(Engine):
                  staleness_alpha: float = 0.5,
                  max_staleness: Optional[int] = None,
                  allow_version_repeats: bool = False,
-                 profile=None):
+                 profile=None, sampler=None):
         if isinstance(profile, dict):   # checkpoint meta round-trip
             profile = ac.ClientSystemProfile(
                 **{k: tuple(v) if isinstance(v, list) else v
@@ -642,14 +752,24 @@ class AsyncEngine(Engine):
         self.allow_version_repeats = bool(allow_version_repeats)
         self.profile = profile if profile is not None \
             else ac.ClientSystemProfile()
+        # None, a registered sampler name, a CohortSampler instance, or a
+        # config() spec dict ({"kind": "fraction", "participation": ...}):
+        # gates which idle clients may start a job each server version —
+        # the participation-fraction / availability-trace leg of the
+        # population work, on the async path (docs/scale.md)
+        self.sampler = sampler
 
     def config(self) -> Dict[str, Any]:
+        sampler = (self.sampler.config()
+                   if isinstance(self.sampler, popn.CohortSampler)
+                   else self.sampler)
         return {"concurrency": self.concurrency,
                 "buffer_size": self.buffer_size,
                 "staleness_alpha": self.staleness_alpha,
                 "max_staleness": self.max_staleness,
                 "allow_version_repeats": self.allow_version_repeats,
-                "profile": dataclasses.asdict(self.profile)}
+                "profile": dataclasses.asdict(self.profile),
+                "sampler": sampler}
 
     def compile(self, plan: RoundTask):
         raise NotImplementedError(
@@ -666,24 +786,20 @@ class AsyncEngine(Engine):
             raise NotImplementedError(
                 "AsyncEngine: DP aggregation (dp_clip > 0) is calibrated "
                 "for one uniform synchronous cohort; run it on SimEngine")
+        if plan.population is not None:
+            raise NotImplementedError(
+                "AsyncEngine: the host population store is a synchronous-"
+                "engine path (the async cohort IS the client population); "
+                "pass sampler= to the engine for participation/"
+                "availability gating instead")
         n = fed.n_clients
         concurrency = (n if self.concurrency is None
                        else min(self.concurrency, n))
         buffer_size = n if self.buffer_size is None else self.buffer_size
         assert concurrency >= 1 and buffer_size >= 1, (concurrency,
                                                        buffer_size)
-        # a weighted Strategy.aggregate (hetlora_weighted's rank coverage)
-        # assumes one full fresh cohort; a partial buffer would silently
-        # mis-scale the pseudo-gradient — refuse, like the DP guard in the
-        # synchronous round
-        if not plan.strategy.uniform_aggregation and (
-                buffer_size < n or self.max_staleness is not None
-                or self.allow_version_repeats):
-            raise NotImplementedError(
-                f"{plan.strategy.kind}: non-uniform Strategy.aggregate "
-                "assumes a full fresh cohort; AsyncEngine supports it only "
-                "with buffer_size == n_clients, max_staleness=None, and "
-                "allow_version_repeats=False")
+        sampler = (None if self.sampler is None
+                   else popn.resolve_sampler(self.sampler, population=n))
         prof = self.profile
         spec = plan.strategy.spec
         # per-direction wire format from the transport config — the same
@@ -709,6 +825,33 @@ class AsyncEngine(Engine):
                 fedround.make_server_phase_fn(meta, fed, plan.strategy,
                                               sparse=True))
         server_fns = (server_fn, sparse_server_fn)
+        full_slots = tuple(range(n))
+        slot_server_fns: Dict[Any, Any] = {}
+
+        def get_server_fns(slots):
+            """(dense_fn, sparse_fn_or_None) for a buffer aggregating the
+            jobs of `slots` (seq order, duplicates allowed).  Uniform
+            aggregation — and the full fresh cohort of the
+            sync-equivalence anchor — reuses the two precompiled phases;
+            a weighted `Strategy.aggregate` (hetlora_weighted's rank
+            coverage) bakes the slot identities into the phase via
+            `cohort_slots`, so partial / stale / version-repeat buffers
+            scale every entry by the coverage of the rows actually
+            present instead of refusing to run.  One compile per
+            distinct slots tuple (at most one per buffer composition
+            seen)."""
+            if plan.strategy.uniform_aggregation or slots == full_slots:
+                return server_fns
+            if slots not in slot_server_fns:
+                def mk(sp):
+                    return jax.jit(  # reprolint: disable=jit-no-donate -- see above
+                        fedround.make_server_phase_fn(
+                            meta, fed, plan.strategy, sparse=sp,
+                            cohort_slots=slots))
+                slot_server_fns[slots] = (mk(False),
+                                          mk(True) if pack_cap else None)
+            return slot_server_fns[slots]
+
         client_fns: Dict[Any, Any] = {}
         clock = (ac.VirtualClock.from_arrays(state.aux, n, meta.p_len)
                  if state.aux is not None
@@ -755,6 +898,12 @@ class AsyncEngine(Engine):
                 state.flatP, state.sstate, jnp.asarray(version, jnp.int32),
                 batch, rng)
             deltas, up_nnzs, losses, down_nnzs = out[:4]
+            # double-buffered data staging: the client phase dispatched
+            # asynchronously, so warm each starter's *next* job batch from
+            # the provider now — the host-side data prep overlaps the
+            # device compute instead of serializing before the next launch
+            for c in slots:
+                fetch(int(clock.job_counts[c]) + 1)
             # one bulk pull per output: per-index float()/row indexing on
             # the device arrays would sync the stream once per job in this
             # loop, and device rows held in Jobs would pin the whole stacked
@@ -795,17 +944,27 @@ class AsyncEngine(Engine):
 
         def start_jobs():
             version = state.round
-            starters, remaining = [], []
-            budget = concurrency - len(clock.inflight)
-            for c in clock.idle:
-                startable = (self.allow_version_repeats
-                             or clock.last_version[c] < version)
-                if budget > 0 and startable:
-                    starters.append(c)
-                    budget -= 1
-                else:
-                    remaining.append(c)
-            clock.idle = remaining
+            budget = max(concurrency - len(clock.inflight), 0)
+            startable = [c for c in clock.idle
+                         if (self.allow_version_repeats
+                             or clock.last_version[c] < version)]
+            if sampler is not None:
+                elig = sampler.eligible(version)
+                avail = [c for c in startable if bool(elig[c])]
+                if not avail and startable and not clock.inflight \
+                        and not clock.buffer:
+                    # availability starvation: every startable client is
+                    # outside its trace window with nothing in flight or
+                    # buffered.  The server version only advances through
+                    # an aggregation and eligibility is a function of the
+                    # version, so waiting would deadlock — ignore the
+                    # trace for this version (FedBuff-timeout analog)
+                    avail = startable
+            else:
+                avail = startable
+            starters = avail[:budget]
+            taken = set(starters)
+            clock.idle = [c for c in clock.idle if c not in taken]
             if not starters:
                 return
             slots = tuple(sorted(starters))
@@ -833,7 +992,7 @@ class AsyncEngine(Engine):
                         # the buffer can never reach K — flush it partially
                         # (FedBuff timeout semantics)
                         assert clock.buffer, "async engine deadlocked"
-                        self._aggregate(state, clock, server_fns, callbacks)
+                        self._aggregate(state, clock, get_server_fns, callbacks)
                         continue
                     clock.pull_completions()
                 job = clock.pending.pop(0)
@@ -845,28 +1004,31 @@ class AsyncEngine(Engine):
                     continue
                 clock.buffer.append(job)
                 if len(clock.buffer) >= buffer_size:
-                    self._aggregate(state, clock, server_fns, callbacks)
+                    self._aggregate(state, clock, get_server_fns, callbacks)
         except StopRun:
             pass
         state.aux = clock.to_arrays()
         return state
 
     def _aggregate(self, state: RunState, clock: "ac.VirtualClock",
-                   server_fns, callbacks: Sequence[Callback]) -> None:
+                   get_server_fns, callbacks: Sequence[Callback]) -> None:
         """Apply one buffered aggregation event and run the round-end
         callback pipeline for it.  Updates aggregate in submission (seq)
         order, so results don't depend on arrival jitter within a buffer —
         and a full fresh cohort aggregates in slot order, exactly like the
         synchronous round.
 
-        `server_fns` is the (dense_fn, sparse_fn_or_None) pair built in
-        `run_rounds`: a buffer of all-packed jobs goes through the
-        scatter-add sparse phase; any dense row in the buffer (sparse
-        aggregation off, or a capacity-overflowed message) flips the whole
-        event to the dense phase, with packed peers densified on the
-        host first."""
-        server_fn, sparse_fn = server_fns
+        `get_server_fns(slots)` (built in `run_rounds`) resolves the
+        (dense_fn, sparse_fn_or_None) pair for this buffer's slot tuple —
+        slot-specialized under a non-uniform `Strategy.aggregate`, the
+        shared precompiled pair otherwise.  A buffer of all-packed jobs
+        goes through the scatter-add sparse phase; any dense row in the
+        buffer (sparse aggregation off, or a capacity-overflowed message)
+        flips the whole event to the dense phase, with packed peers
+        densified on the host first."""
         jobs, clock.buffer = sorted(clock.buffer, key=lambda j: j.seq), []
+        server_fn, sparse_fn = get_server_fns(
+            tuple(int(j.slot) for j in jobs))
         staleness = [state.round - j.version for j in jobs]
         weights = jnp.asarray(
             [ac.staleness_weight(s, self.staleness_alpha) for s in staleness],

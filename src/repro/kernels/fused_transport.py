@@ -53,10 +53,14 @@ Backend notes: like `kernels/topk_mask.py`, these kernels run natively on
 TPU and under Pallas interpret mode everywhere else (the selector layer
 owns that dispatch).  The in-kernel bincount/scatter lower through jnp
 `.at[]` ops; the TPU-native lowering is re-baselined with the rest of
-`BENCH_topk.json` on a real TPU host (open ROADMAP item).  The pack
-variant accumulates its packed outputs across the sequential grid via
-`pl.program_id`, so it must not be vmapped — batch callers use the
-vmap-safe non-pack variant plus `pack_values`.
+`BENCH_topk.json` on a real TPU host (open ROADMAP item).  The
+single-vector pack variant accumulates its packed outputs across the
+sequential grid via `pl.program_id(0)`, so it must not be vmapped;
+batched callers (the engines' cohort pack step) use
+`pack_values_batch`, whose 2-D-grid kernel gives every batch row its
+*own* accumulator block — per-row init at the row's first grid step —
+and is bit-identical to `jax.vmap(pack_values)` by construction
+(pinned in tests/test_fused_transport.py).
 """
 from __future__ import annotations
 
@@ -330,6 +334,92 @@ def pack_values(values: jax.Array, cap: int, mask=None):
     return idx, val, jnp.sum(kept)
 
 
+def _pack_batch_kernel(cap, sentinel, x_ref, idx_ref, val_ref, tot_ref):
+    """Batched pack: grid (B, nblocks); the per-row accumulator blocks are
+    indexed by the *batch* grid axis, so rows never share state (the
+    vmap-safety the single-vector `_fuse_pack_kernel` lacks) and the row
+    offset re-initializes at each row's first block."""
+    j = pl.program_id(1)
+    x = x_ref[0, :]
+    block = x.shape[-1]
+    keep = x != 0
+
+    @pl.when(j == 0)
+    def _init():
+        idx_ref[...] = jnp.full((1, cap), sentinel, jnp.int32)
+        val_ref[...] = jnp.zeros((1, cap), jnp.float32)
+        tot_ref[0, 0] = 0
+
+    # same packing scheme as `_fuse_pack_kernel`: survivors land at the
+    # row's running offset, position `cap` (non-kept) and past-`cap`
+    # (overflow) scatter-drop, so tot > cap flags overflow uncorrupted
+    off = tot_ref[0, 0]
+    kept = keep.astype(jnp.int32)
+    pos = jnp.where(keep, off + jnp.cumsum(kept) - 1, cap)
+    src = j * block + jax.lax.iota(jnp.int32, block)
+    idx_ref[0, :] = idx_ref[0, :].at[pos].set(src, mode="drop")
+    val_ref[0, :] = val_ref[0, :].at[pos].set(x, mode="drop")
+    tot_ref[0, 0] = off + jnp.sum(kept)
+
+
+def pack_values_batched_pallas(values: jax.Array, cap: int, *,
+                               block: int = BLOCK, interpret: bool = False):
+    """In-kernel batched pack of (B, n) dense-embedded sparse rows ->
+    (idx (B, cap), val (B, cap), nnz (B,)), n % block == 0 (pad
+    upstream; zero padding is never kept).  Empty slots carry sentinel
+    index n — the *padded* length when the caller padded, which
+    `pack_values_batch` clamps back to the unpadded length.  Otherwise
+    bit-identical to `jax.vmap(lambda v: pack_values(v, cap))(values)`:
+    same keep mask, same cumsum positions, same overflow semantics."""
+    B, n = values.shape
+    assert n % block == 0, (n, block)
+    grid = (B, n // block)
+    idx, val, tot = pl.pallas_call(
+        functools.partial(_pack_batch_kernel, cap, n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block), lambda b, j: (b, j))],
+        out_specs=[
+            pl.BlockSpec((1, cap), lambda b, j: (b, 0)),   # per-row accum
+            pl.BlockSpec((1, cap), lambda b, j: (b, 0)),   # per-row accum
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),     # per-row offset
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, cap), jnp.int32),
+            jax.ShapeDtypeStruct((B, cap), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(values.astype(jnp.float32))
+    return idx, val, tot[:, 0]
+
+
+def pack_values_batch(values: jax.Array, cap: int, *,
+                      interpret=None):
+    """The engines' batched cohort pack step: in-kernel packing via
+    `pack_values_batched_pallas` (native on TPU; interpret mode with one
+    whole-row block everywhere else, the selector layer's dispatch
+    idiom), padding the rows up to the block multiple internally.  The
+    sentinel stays the unpadded length `n`, matching `pack_values`
+    exactly — padded tail zeros are never kept, so the result is
+    bit-identical to `jax.vmap(lambda v: pack_values(v, cap))`."""
+    n = values.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    # one lane-aligned whole-row block under interpret (per-block cost
+    # dominates there); the VMEM-sized tile on TPU
+    block = -(-n // 128) * 128 if interpret else BLOCK
+    pad = -n % block
+    x = values.astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    idx, val, tot = pack_values_batched_pallas(
+        x, cap, block=block, interpret=interpret)
+    # padded source positions can never be kept (zeros), but their slot
+    # indices would exceed n; clamp the sentinel back to n for bit-parity
+    idx = jnp.minimum(idx, n)
+    return idx, val, tot
+
+
 def unpack_values(idx: jax.Array, val: jax.Array, n: int) -> jax.Array:
     """Densify one packed message; sentinel slots (index >= n) drop."""
     return jnp.zeros((n,), val.dtype).at[idx].set(val, mode="drop")
@@ -343,3 +433,34 @@ def sparse_accumulate(idx: jax.Array, val: jax.Array, n: int) -> jax.Array:
     vs O(clients * p_len) for the dense mean."""
     return jnp.zeros((n,), val.dtype).at[idx.reshape(-1)].add(
         val.reshape(-1), mode="drop")
+
+
+def hierarchical_accumulate(idx: jax.Array, val: jax.Array, n: int,
+                            edges: int) -> jax.Array:
+    """Two-level edge -> server reduction of packed client messages,
+    bit-equal to the flat `sparse_accumulate` (docs/scale.md).
+
+    Edges are *parameter-sharded* (reduce-scatter style): edge `e` owns
+    the contiguous index range [e*n//edges, (e+1)*n//edges) and
+    scatter-adds only the pairs that land in its range (everything else
+    is redirected to that edge's local sentinel and dropped — sparse
+    uploads never densify at the edge); the server then concatenates the
+    disjoint dense partials with *no* cross-edge additions.  Because
+    every coordinate's additions happen at exactly one edge, in the same
+    flattened row-major order the flat scatter-add applies them, the
+    f32 sums associate identically and the result is bitwise equal —
+    unlike client-sharded edge partials, whose server-side re-addition
+    would re-associate the per-coordinate sums.  Each edge's work is
+    O(total nnz) masking + O(nnz in range) scatter, so the server-side
+    combine stays O(n) concatenation regardless of cohort or population
+    size."""
+    assert edges >= 1, edges
+    parts = []
+    for e in range(edges):
+        lo, hi = e * n // edges, (e + 1) * n // edges
+        in_range = (idx >= lo) & (idx < hi)
+        # out-of-range pairs -> this edge's sentinel (hi - lo), dropped
+        eidx = jnp.where(in_range, idx - lo, hi - lo)
+        parts.append(jnp.zeros((hi - lo,), val.dtype).at[
+            eidx.reshape(-1)].add(val.reshape(-1), mode="drop"))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]

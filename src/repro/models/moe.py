@@ -2,7 +2,9 @@
 
 Dispatch uses the grouped GShard/MaxText dense-dispatch formulation: tokens
 are split into groups of `group_tokens`; each group has a local expert
-capacity C = ceil(group_tokens * top_k * capacity_factor / E).  The dispatch
+capacity C = min(g_tok, ceil(group_tokens * top_k * capacity_factor / E)) —
+anchored to the design group size so under-full calls (decode, prefill
+tails) keep the same drop semantics as full groups.  The dispatch
 one-hot (g, t, E, C) is materialized in bf16 per layer (bounded by the group
 size) and contracted with token activations; under SPMD the expert dimension
 is sharded over `model`, so the two dispatch einsums lower to the expected
@@ -54,7 +56,14 @@ def moe_apply(params, x, cfg: ModelConfig, *, group_tokens: int = GROUP_TOKENS):
     g_tok = min(group_tokens, n)
     assert n % g_tok == 0, (n, g_tok)
     G = n // g_tok
-    C = _capacity(g_tok, cfg)
+    # Capacity is defined against the *design* group size, not the per-call
+    # token count: an under-full call (prefill tail, single-token decode)
+    # must not see a tighter capacity than the same tokens would inside a
+    # full group, or forward / prefill / decode drop different expert
+    # assignments and their logits diverge.  Per-expert load never exceeds
+    # g_tok (a token's top-k experts are distinct), so clamping keeps the
+    # dispatch tensor bounded and makes every under-full call dropless.
+    C = min(g_tok, _capacity(group_tokens, cfg))
 
     xt = x.reshape(G, g_tok, D)
     logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),

@@ -274,16 +274,49 @@ def test_virtual_clock_array_roundtrip():
 
 
 @pytest.mark.fast
-def test_async_refuses_weighted_aggregation_with_partial_buffers(task):
-    """hetlora_weighted's coverage math assumes one full fresh cohort; a
-    partial buffer must be rejected, not silently mis-scaled — but the
-    full-buffer default configuration still runs (and is covered by the
-    bit-equivalence test above)."""
-    exp = (_experiment(task, "hetlora", hetlora_ranks=(1, 2, 3, 4),
-                       hetlora_weighted=True)
-           .with_engine("async", buffer_size=2))
-    with pytest.raises(NotImplementedError, match="full fresh cohort"):
-        exp.run()
+def test_async_weighted_aggregation_runs_with_partial_buffers(task):
+    """hetlora_weighted under partial buffers: the server phase is
+    specialized to each buffer's slot tuple (`cohort_slots`), so the
+    rank-coverage weighting counts exactly the rows present instead of
+    refusing (the PR 9 fix for the old full-fresh-cohort guard).  With a
+    uniform profile and full concurrency every aggregation event is a
+    deterministic half-cohort, so the run is reproducible and each entry
+    of the pseudo-gradient is scaled by the coverage of its own buffer —
+    which must differ from the unweighted trajectory."""
+    kw = dict(hetlora_ranks=(1, 2, 3, 4), hetlora_weighted=True)
+    res = (_experiment(task, "hetlora", **kw)
+           .with_engine("async", buffer_size=2).run())
+    assert all(rec["applied"] == 2 for rec in res.history)
+    assert all(np.isfinite(rec["loss"]) for rec in res.history)
+    again = (_experiment(task, "hetlora", **kw)
+             .with_engine("async", buffer_size=2).run())
+    assert [r["loss"] for r in res.history] == \
+        [r["loss"] for r in again.history]
+    unweighted = (_experiment(task, "hetlora",
+                              hetlora_ranks=(1, 2, 3, 4))
+                  .with_engine("async", buffer_size=2).run())
+    assert [r["loss"] for r in res.history] != \
+        [r["loss"] for r in unweighted.history]
+
+
+@pytest.mark.fast
+def test_hetlora_coverage_counts_buffer_slots():
+    """Unit-level pin of the slot-aware coverage: a partial buffer counts
+    only its own rank slices, and a repeated slot counts twice."""
+    spec = st.StrategySpec(kind="hetlora", hetlora_ranks=(1, 2, 3, 4),
+                           hetlora_weighted=True)
+    strat = st.resolve(spec)
+    rank_idx = np.asarray([0, 1, 2, 3])
+    full = st.PlanContext(n_clients=4, p_len=4, round_idx=0,
+                          rank_idx=rank_idx)
+    np.testing.assert_array_equal(strat.coverage(full), [4, 3, 2, 1])
+    part = st.PlanContext(n_clients=4, p_len=4, round_idx=0,
+                          rank_idx=rank_idx, cohort_slots=(1, 3))
+    # ranks present: 2 and 4 -> entry j covered by ranks > j
+    np.testing.assert_array_equal(strat.coverage(part), [2, 2, 1, 1])
+    rep = st.PlanContext(n_clients=4, p_len=4, round_idx=0,
+                         rank_idx=rank_idx, cohort_slots=(3, 3))
+    np.testing.assert_array_equal(strat.coverage(rep), [2, 2, 2, 2])
 
 
 @pytest.mark.fast
@@ -343,16 +376,18 @@ def test_async_sparse_aggregation_reduces_to_sim_bit_for_bit(task, kw):
 
 
 @pytest.mark.fast
-def test_async_refuses_weighted_aggregation_despite_sparse_opt_in(task):
-    """The partial-buffer guard for rank-coverage weighting must survive
-    the sparse_aggregate opt-in: the opt-in never makes a weighted
-    `aggregate` override eligible for the packed path, and the
-    full-fresh-cohort refusal stays in force."""
-    exp = (_experiment(task, "hetlora", hetlora_ranks=(1, 2, 3, 4),
-                       hetlora_weighted=True, sparse_aggregate=True)
-           .with_engine("async", buffer_size=2))
-    with pytest.raises(NotImplementedError, match="full fresh cohort"):
-        exp.run()
+def test_async_weighted_aggregation_with_sparse_opt_in_partial_buffers(task):
+    """The sparse_aggregate opt-in never makes a weighted `aggregate`
+    override eligible for the packed path (it falls back dense), and the
+    slot-specialized dense phase runs partial buffers bit-identically to
+    the same spec without the opt-in."""
+    kw = dict(hetlora_ranks=(1, 2, 3, 4), hetlora_weighted=True)
+    sparse = (_experiment(task, "hetlora", sparse_aggregate=True, **kw)
+              .with_engine("async", buffer_size=2).run())
+    dense = (_experiment(task, "hetlora", **kw)
+             .with_engine("async", buffer_size=2).run())
+    assert [r["loss"] for r in sparse.history] == \
+        [r["loss"] for r in dense.history]
 
 
 def test_async_sparse_checkpoint_resumes_packed_queue_bit_exactly(
@@ -446,3 +481,64 @@ def test_fig3_rel_row_sentinel():
             {"round": 1, "loss": 0.5, "acc": 0.4, "sim_time": 7.0}]
     assert sim_time_to_target(hist, 0.3) == 7.0
     assert sim_time_to_target(hist, 0.9) is None
+
+
+# ---------------------------------------------------------------------------
+# PR 9 anchors: phased strategies and cohort samplers under AsyncEngine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("phase_len", [2, 3])
+def test_two_stage_ortho_phases_match_sim_bit_for_bit(task, phase_len):
+    """phase_len > 1 must produce the same phase schedule (and hence the
+    same weights) on both engines; the phase index derives from the server
+    round counter, which AsyncEngine advances once per aggregation."""
+    cap_sim, cap_async = _CaptureState(), _CaptureState()
+    res_sim = (_experiment(task, "two_stage_ortho", rounds=6,
+                           phase_len=phase_len)
+               .with_callbacks(cap_sim).run())
+    res_async = (_experiment(task, "two_stage_ortho", rounds=6,
+                             phase_len=phase_len)
+                 .with_engine("async").with_callbacks(cap_async).run())
+    for rec_a, rec_s in zip(res_async.history, res_sim.history):
+        assert _strip_async(rec_a) == rec_s, rec_s["round"]
+    np.testing.assert_array_equal(cap_async.flatP, cap_sim.flatP)
+
+
+def test_two_stage_ortho_phase_len_changes_trajectory(task):
+    """Sanity: the schedule knob is live (L=3 differs from L=1)."""
+    res_1 = _experiment(task, "two_stage_ortho", rounds=6, phase_len=1).run()
+    res_3 = _experiment(task, "two_stage_ortho", rounds=6, phase_len=3).run()
+    assert [r["loss"] for r in res_1.history] != \
+        [r["loss"] for r in res_3.history]
+
+
+def test_async_full_participation_sampler_reduces_to_sim(task):
+    """A fraction sampler at participation=1.0 gates nothing, so the async
+    run must stay bit-identical to the sim engine."""
+    res_sim = _experiment(task, "flasc").run()
+    res_async = (_experiment(task, "flasc")
+                 .with_engine("async",
+                              sampler={"kind": "fraction",
+                                       "participation": 1.0}).run())
+    for rec_a, rec_s in zip(res_async.history, res_sim.history):
+        assert _strip_async(rec_a) == rec_s, rec_s["round"]
+    assert res_async.final_acc == res_sim.final_acc
+
+
+def test_async_partial_participation_runs_and_differs(task):
+    """participation < 1 throttles client starts: the run still completes
+    (FedBuff timeout flushes partial buffers), stays reproducible, and
+    diverges from the full-participation trajectory."""
+    def run():
+        return (_experiment(task, "flasc", rounds=6)
+                .with_engine("async",
+                             sampler={"kind": "fraction",
+                                      "participation": 0.5, "seed": 3})
+                .run())
+    res_a, res_b = run(), run()
+    assert [r["loss"] for r in res_a.history] == \
+        [r["loss"] for r in res_b.history]
+    assert all(np.isfinite(r["loss"]) for r in res_a.history)
+    res_full = _experiment(task, "flasc", rounds=6).with_engine("async").run()
+    assert [r["loss"] for r in res_a.history] != \
+        [r["loss"] for r in res_full.history]

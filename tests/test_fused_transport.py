@@ -359,3 +359,55 @@ def test_aggregate_sparse_matches_dense_mean():
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(strat.aggregate(X, ctx)),
                                rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# batched in-kernel pack (PR 9): pinned against the per-row codec
+# ---------------------------------------------------------------------------
+
+def _sparse_rows(B, n, density, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((B, n)).astype(np.float32)
+    keep = rng.random((B, n)) < density
+    return jnp.asarray(np.where(keep, X, 0.0))
+
+
+@pytest.mark.parametrize("n", [64, 100, 300])
+def test_pack_values_batch_pins_vmapped_codec(n):
+    """The engines' batched pack must stay bit-identical to the wire
+    codec `pack_values` — idx (incl. the unpadded sentinel n), val, nnz."""
+    X = _sparse_rows(B=5, n=n, density=0.3, seed=n)
+    cap = int(jnp.max(jnp.sum(X != 0, axis=1))) + 2
+    bidx, bval, bnnz = ft.pack_values_batch(X, cap)
+    ridx, rval, rnnz = jax.vmap(lambda v: ft.pack_values(v, cap))(X)
+    np.testing.assert_array_equal(np.asarray(bidx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(bval), np.asarray(rval))
+    np.testing.assert_array_equal(np.asarray(bnnz), np.asarray(rnnz))
+    assert int(jnp.max(bidx)) <= n        # sentinel is the unpadded length
+
+
+def test_pack_values_batch_overflow_matches_reference():
+    """nnz > cap rows must flag overflow identically to `pack_values`
+    (same truncation order, same reported total)."""
+    X = _sparse_rows(B=4, n=128, density=0.9, seed=7)
+    cap = 16                              # far below the true nnz
+    bidx, bval, bnnz = ft.pack_values_batch(X, cap)
+    ridx, rval, rnnz = jax.vmap(lambda v: ft.pack_values(v, cap))(X)
+    np.testing.assert_array_equal(np.asarray(bnnz), np.asarray(rnnz))
+    assert bool(jnp.all(bnnz > cap))
+    np.testing.assert_array_equal(np.asarray(bidx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(bval), np.asarray(rval))
+
+
+def test_pack_values_batched_pallas_multiblock_grid():
+    """Force a multi-block grid (block < n) through the kernel directly:
+    the per-row accumulator carries positions across blocks."""
+    n, block = 256, 128
+    X = _sparse_rows(B=3, n=n, density=0.2, seed=11)
+    cap = int(jnp.max(jnp.sum(X != 0, axis=1))) + 1
+    bidx, bval, bnnz = ft.pack_values_batched_pallas(
+        X, cap, block=block, interpret=True)
+    ridx, rval, rnnz = jax.vmap(lambda v: ft.pack_values(v, cap))(X)
+    np.testing.assert_array_equal(np.asarray(bidx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(bval), np.asarray(rval))
+    np.testing.assert_array_equal(np.asarray(bnnz), np.asarray(rnnz))

@@ -24,6 +24,7 @@ REGISTER_FUNCS = {"register_strategy": "strategies",
                   "register_engine": "engines",
                   "register_stage": "stages",
                   "register_grouped_kernel": "grouped_kernels",
+                  "register_sampler": "samplers",
                   "register_rule": "rules"}
 
 
