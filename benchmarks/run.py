@@ -15,12 +15,13 @@ def main() -> None:
     from benchmarks import (fig2_comm_efficiency, fig3_async_bandwidth,
                             fig4_freezing, fig5_heterogeneity, fig6_system_het,
                             fig7_privacy, kernels_bench, serving_bench,
-                            table1_partitions)
+                            sharded_bench, table1_partitions)
     t0 = time.time()
     print("figure,setting,metric,value")
     table1_partitions.main()
     kernels_bench.main()
     serving_bench.main()
+    sharded_bench.main()
     fig2_comm_efficiency.main()
     fig3_async_bandwidth.main()
     fig4_freezing.main()

@@ -1,0 +1,196 @@
+"""Scan-chunk dispatch savings on the forced 8-device 2-D mesh.
+
+`ShardedEngine(rounds_per_call=k)` scans k rounds inside one device call
+(`fedround.make_scanned_round_fn`), amortizing per-dispatch host
+overhead (argument placement, donation bookkeeping, callback fan-out)
+over k rounds.  This harness measures that amortization on the same
+mesh the differential suite pins: a real `(data=4, model=2)` mesh over
+8 forced host devices with FSDP backbone sharding
+(`tests/test_sharded_multidevice.py`).
+
+The sweep runs in ONE subprocess (the forced device count must precede
+jax initialization, the tests/test_dryrun_small.py discipline).  Per
+`rounds_per_call` in {1, 2, 4, 8}: device dispatches are counted by
+wrapping the engine step, the first call (jit compile) is reported
+separately, and throughput is `k / median(post-compile call time)`.
+Final weights for every k are checked bit-equal to the k=1 run — the
+scan chunking must never change the numbers, only the dispatch count.
+
+Writes `BENCH_sharded.json` at the repo root: one row per k plus the
+dispatch-savings summary.  Wall numbers are CPU container figures; the
+regressable quantities are `n_dispatches` (exact: ceil(rounds/k)) and
+`all_bit_equal`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+from benchmarks.common import QUICK as _ENV_QUICK, emit, row
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_sharded.json")
+
+QUICK = _ENV_QUICK or "--quick" in sys.argv[1:]
+CHUNKS = (1, 2, 4, 8)
+# >= 2 dispatches at the largest chunk, so every k has at least one
+# post-compile dispatch to time
+ROUNDS = (2 if QUICK else 4) * max(CHUNKS)
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro.data import datasets as ds
+from repro.federated import engine as eng
+from repro.federated.api import Experiment
+
+assert len(jax.devices()) == 8, jax.devices()
+
+ROUNDS = int(os.environ["BENCH_ROUNDS"])
+CHUNKS = [int(k) for k in os.environ["BENCH_CHUNKS"].split(",")]
+
+task = ds.make_synth_image(n_examples=256, n_clients=8, n_patches=4,
+                           dim=16, seed=0, n_eval=64)
+
+# count + time every device dispatch through the sharded step
+calls = []
+orig_call = eng._ShardedStep.__call__
+
+def counting_call(self, *args):
+    t0 = time.perf_counter()
+    out = orig_call(self, *args)
+    jax.block_until_ready(out[0])
+    calls.append(time.perf_counter() - t0)
+    return out
+
+eng._ShardedStep.__call__ = counting_call
+
+
+class Capture(eng.Callback):
+    def on_round_end(self, ev):
+        self.flatP = np.asarray(ev.state.flatP)
+
+
+def run_k(k):
+    del calls[:]
+    cap = Capture()
+    exp = (Experiment(task)
+           .with_strategy("flasc", density_down=0.5, density_up=0.5)
+           .with_federation(n_clients=4, local_batch=4)
+           .with_model(d_model=16, num_layers=1, num_heads=2, d_ff=32)
+           .with_lora(rank=4)
+           .with_training(rounds=ROUNDS, eval_every=0, pretrain_steps=2,
+                          seed=0)
+           .with_mesh((4, 2), fsdp=True, rounds_per_call=k)
+           .with_callbacks(cap))
+    t0 = time.perf_counter()
+    exp.run()
+    wall = time.perf_counter() - t0
+    post = calls[1:] or calls      # first dispatch absorbs the jit compile
+    med = statistics.median(post)
+    return {
+        "rounds_per_call": k,
+        "rounds": ROUNDS,
+        "n_dispatches": len(calls),
+        "compile_s": round(calls[0], 3),
+        "median_dispatch_s": round(med, 4),
+        "rounds_per_s": round(min(k, ROUNDS) / med, 3),
+        "wall_s": round(wall, 3),
+    }, cap.flatP
+
+
+rows, finals = [], {}
+for k in CHUNKS:
+    r, flatP = run_k(k)
+    rows.append(r)
+    finals[k] = flatP
+
+base = finals[CHUNKS[0]]
+for r in rows:
+    r["bit_equal_to_k1"] = bool(np.array_equal(base, finals[r["rounds_per_call"]]))
+
+print("RESULT " + json.dumps(rows))
+"""
+
+
+def sharded_sweep(rows):
+    env = dict(os.environ, BENCH_ROUNDS=str(ROUNDS),
+               BENCH_CHUNKS=",".join(str(k) for k in CHUNKS),
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    # CPU by design (forced host devices); an unset JAX_PLATFORMS lets jax
+    # probe the TPU-less libtpu plugin, which can block indefinitely.
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, proc.stdout
+    jrows = json.loads(line[0][len("RESULT "):])
+    for cell in jrows:
+        k = cell["rounds_per_call"]
+        rows.append(row("sharded", f"rpc{k}", "rounds_per_s",
+                        cell["rounds_per_s"]))
+        rows.append(row("sharded", f"rpc{k}", "n_dispatches",
+                        cell["n_dispatches"]))
+    by_k = {c["rounds_per_call"]: c for c in jrows}
+    lo, hi = min(CHUNKS), max(CHUNKS)
+    summary = {
+        "mesh": [4, 2],
+        "fsdp": True,
+        # exact and hardware-independent: scan chunking must collapse the
+        # dispatch count to ceil(rounds / k)
+        "dispatch_reduction": round(by_k[lo]["n_dispatches"]
+                                    / by_k[hi]["n_dispatches"], 2),
+        # container wall figure: throughput at the largest chunk vs k=1
+        "dispatch_savings": round(by_k[hi]["rounds_per_s"]
+                                  / by_k[lo]["rounds_per_s"], 3),
+        "all_bit_equal": all(c["bit_equal_to_k1"] for c in jrows),
+    }
+    rows.append(row("sharded", "summary", "dispatch_savings",
+                    summary["dispatch_savings"]))
+    rows.append(row("sharded", "summary", "dispatch_reduction",
+                    summary["dispatch_reduction"]))
+    return jrows, summary
+
+
+def write_bench_json(jrows, summary):
+    payload = {
+        "bench": "sharded_rounds_per_call_scan",
+        "backend": jax.default_backend(),
+        "devices_forced": 8,
+        "note": ("rounds/s are CPU container figures over a forced "
+                 "8-host-device (data=4, model=2) mesh with FSDP backbone "
+                 "sharding; the regressable quantities are n_dispatches "
+                 "(exact: ceil(rounds/k)) and all_bit_equal (scan "
+                 "chunking changes dispatch count, never values)"),
+        "quick": QUICK,
+        "summary": summary,
+        "rows": jrows,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {BENCH_JSON} ({len(jrows)} rows)", flush=True)
+
+
+def main():
+    rows = []
+    jrows, summary = sharded_sweep(rows)
+    assert summary["all_bit_equal"], jrows
+    write_bench_json(jrows, summary)
+    return emit(rows, "Sharded engine (2-D mesh rounds_per_call scan)")
+
+
+if __name__ == "__main__":
+    main()

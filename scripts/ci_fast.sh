@@ -17,6 +17,9 @@
 #      tests/test_async_engine.py (incl. the sparse-aggregation
 #      sim==async bit-equality anchor), the fused one-pass transport
 #      differential/property layer from tests/test_fused_transport.py,
+#      the sharded-params 2-D mesh differential subset from
+#      tests/test_sharded_multidevice.py (one strategy, forced
+#      8-device subprocess, bit-equality + sharding inspection),
 #      the reprolint rule fixtures) — everything tagged
 #      @pytest.mark.fast.
 #   4. the docs gate (scripts/check_docs.py: README/docs code

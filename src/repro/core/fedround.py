@@ -23,6 +23,7 @@ This function *is* the object lowered by the multi-pod dry-run for the
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -39,6 +40,11 @@ from repro.optim import adam_init, adam_update
 
 LossFn = Callable[[Any, Dict[str, jax.Array]], jax.Array]
 # loss_of(trainable_tree, microbatch) -> scalar
+
+ParamLossFn = Callable[[Any, Any, Dict[str, jax.Array]], jax.Array]
+# loss_of(params, trainable_tree, microbatch) -> scalar — the sharded-params
+# path: the frozen backbone rides the step as an explicit (shardable,
+# FSDP-able) argument instead of a closed-over replicated constant.
 
 
 @dataclasses.dataclass
@@ -237,7 +243,7 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
                     loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
                     strategy: Optional[st.StrategyLike] = None,
                     spec: Optional[st.StrategySpec] = None,
-                    spmd_axis_name=None, client_mu=None):
+                    spmd_axis_name=None, client_mu=None, params=None):
     """One round. client_batches leaves: (n_clients, local_steps, local_bs, ...).
 
     `strategy` accepts a `Strategy` instance, a `StrategySpec`, or a kind
@@ -251,8 +257,24 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
     rows come back as `metrics["client_mu"]` for the engine to scatter
     into the `federated.population` store.  None (the default) keeps the
     stateless zeros-init trace unchanged.
+
+    `params` is the frozen backbone pytree on the sharded-params path:
+    when set, `loss_of` is a `ParamLossFn` taking `(params, tree, mb)`
+    and `params` must be a *traced argument* of the enclosing jit, so
+    FSDP/TP in_shardings apply to the backbone instead of baking it in
+    as a replicated constant (docs/engines.md).  None keeps the legacy
+    two-argument closure contract, trace-identical to before.
     """
     strat = st.resolve(strategy if strategy is not None else spec)
+    if params is not None:
+        # ZeRO-3 semantics: the backbone is *stored* sharded between
+        # rounds (the jit's FSDP/TP in_shardings) and gathered to full
+        # replicas at use, so every client's forward/backward computes on
+        # local full weights — which also keeps the sharded program
+        # bit-identical to the single-device one (no-op without an
+        # activation_sharding context, i.e. on SimEngine)
+        from repro.launch.shardings import gather_replicated
+        loss_of = functools.partial(loss_of, gather_replicated(params))
     s = strat.spec
     round_idx = server_state["round"]
     n_clients = jax.tree.leaves(client_batches)[0].shape[0]
@@ -277,6 +299,14 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
         (deltas, nnzs, losses, down_nnzs), mu_out = out, None
     else:
         deltas, nnzs, losses, down_nnzs, mu_out = out
+    if spmd_axis_name:
+        # all-gather the (n_clients, p_len) deltas before aggregation so
+        # the cross-client reduce runs replicated in program order — a
+        # partitioner-chosen all-reduce over the sharded client axis picks
+        # its own association, off the single-device result by an ulp
+        # (no-op without an activation_sharding context)
+        from repro.launch.shardings import gather_replicated
+        deltas = gather_replicated(deltas)
 
     lr_down = tp.lowrank_stage(s, "down")
     if lr_down is not None and lr_down.active(meta.p_len):
@@ -337,10 +367,30 @@ def federated_round(flatP, server_state, sstate, client_batches, rng, *,
 
 
 def make_round_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
-                  strategy: st.StrategyLike, spmd_axis_name=None):
+                  strategy: st.StrategyLike, spmd_axis_name=None, *,
+                  with_params: bool = False):
     """jit-ready closure over the static pieces; `strategy` may be a
-    Strategy, StrategySpec, or kind string."""
+    Strategy, StrategySpec, or kind string.
+
+    `with_params=True` selects the sharded-params contract: `loss_of` is a
+    `ParamLossFn` and the returned function takes the frozen backbone as
+    its leading argument —
+
+        fn(params, flatP, server_state, sstate, client_batches, rng)
+
+    — so a jit over it can shard (FSDP/TP) and audit the backbone like
+    any other operand instead of replicating it as a baked-in constant.
+    """
     strat = st.resolve(strategy)
+
+    if with_params:
+        def pfn(params, flatP, server_state, sstate, client_batches, rng):
+            return federated_round(flatP, server_state, sstate,
+                                   client_batches, rng, loss_of=loss_of,
+                                   meta=meta, fed=fed, strategy=strat,
+                                   spmd_axis_name=spmd_axis_name,
+                                   params=params)
+        return pfn
 
     def fn(flatP, server_state, sstate, client_batches, rng):
         return federated_round(flatP, server_state, sstate, client_batches,
@@ -351,7 +401,8 @@ def make_round_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
 
 def make_population_round_fn(loss_of: LossFn, meta: FlatMeta,
                              fed: FederatedConfig, strategy: st.StrategyLike,
-                             spmd_axis_name=None):
+                             spmd_axis_name=None, *,
+                             with_params: bool = False):
     """`make_round_fn` with the sampled cohort's persistent per-client
     momentum rows threaded through (population runs, docs/scale.md):
 
@@ -363,8 +414,22 @@ def make_population_round_fn(loss_of: LossFn, meta: FlatMeta,
     `metrics["client_mu"]` for the scatter commit.  Everything else is the
     synchronous round, op for op — a cohort whose rows are all zeros
     computes bit-identically to the stateless `make_round_fn` path.
+
+    `with_params=True` prepends the frozen backbone argument exactly like
+    `make_round_fn`: fn(params, flatP, server, sstate, batches, client_mu,
+    rng).
     """
     strat = st.resolve(strategy)
+
+    if with_params:
+        def pfn(params, flatP, server_state, sstate, client_batches,
+                client_mu, rng):
+            return federated_round(flatP, server_state, sstate,
+                                   client_batches, rng, loss_of=loss_of,
+                                   meta=meta, fed=fed, strategy=strat,
+                                   spmd_axis_name=spmd_axis_name,
+                                   client_mu=client_mu, params=params)
+        return pfn
 
     def fn(flatP, server_state, sstate, client_batches, client_mu, rng):
         return federated_round(flatP, server_state, sstate, client_batches,
@@ -374,7 +439,7 @@ def make_population_round_fn(loss_of: LossFn, meta: FlatMeta,
     return fn
 
 
-def make_scanned_round_fn(round_fn):
+def make_scanned_round_fn(round_fn, *, with_params: bool = False):
     """Scan-chunked round driver: runs `round_fn` over a leading rounds axis
     in one device call, amortizing host dispatch (ShardedEngine's
     `rounds_per_call`).
@@ -385,21 +450,33 @@ def make_scanned_round_fn(round_fn):
     round's rng is derived as fold_in(base_key, round_id) — bit-identical to
     the per-round driver's key schedule.  Metrics come back stacked along
     the rounds axis.
+
+    `with_params=True` expects a sharded-params `round_fn` and prepends
+    the backbone argument: fn(params, flatP, server, sstate, batches,
+    round_ids, base_key).  The backbone is scan-invariant — it enters the
+    loop as a constant carry-free operand, so the k chunked rounds reuse
+    one sharded copy instead of re-transferring it per round (the
+    dispatch-savings scan `benchmarks/sharded_bench.py` measures).
     """
 
-    def fn(flatP, server_state, sstate, batches, round_ids, base_key):
+    def scan_rounds(params, flatP, server_state, sstate, batches, round_ids,
+                    base_key):
         def body(carry, xs):
             flatP, server_state, sstate = carry
             cb, rid = xs
             key = jax.random.fold_in(base_key, rid)
-            flatP, server_state, sstate, m = round_fn(
-                flatP, server_state, sstate, cb, key)
+            args = (flatP, server_state, sstate, cb, key)
+            flatP, server_state, sstate, m = (
+                round_fn(params, *args) if with_params else round_fn(*args))
             return (flatP, server_state, sstate), m
 
         (flatP, server_state, sstate), metrics = jax.lax.scan(
             body, (flatP, server_state, sstate), (batches, round_ids))
         return flatP, server_state, sstate, metrics
-    return fn
+
+    if with_params:
+        return scan_rounds
+    return functools.partial(scan_rounds, None)
 
 
 # ---------------------------------------------------------------------------
@@ -411,7 +488,8 @@ def make_scanned_round_fn(round_fn):
 def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
                          strategy: st.StrategyLike, slots: Tuple[int, ...],
                          repeats: Optional[Tuple[int, ...]] = None,
-                         pack_cap: Optional[int] = None):
+                         pack_cap: Optional[int] = None, *,
+                         with_params: bool = False):
     """Client side of the split round: run the cohort slots in `slots`
     (a static tuple of global client indices) against one server snapshot.
 
@@ -419,6 +497,11 @@ def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
 
         fn(flatP, sstate, round_idx, client_batches, rng)
             -> (deltas, up_nnzs, losses, down_nnzs)
+
+    or, with `with_params=True` (the sharded-params contract, lockstep
+    with `make_round_fn`), the frozen backbone leads the argument list —
+
+        fn(params, flatP, sstate, round_idx, client_batches, rng)
 
     or, with `pack_cap` set (the AsyncEngine sparse-aggregation path),
 
@@ -449,7 +532,9 @@ def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
     repeats = tuple(repeats) if repeats is not None else (0,) * len(slots)
     assert len(repeats) == len(slots), (slots, repeats)
 
-    def fn(flatP, sstate, round_idx, client_batches, rng):
+    def phase(params, flatP, sstate, round_idx, client_batches, rng):
+        loss = (loss_of if params is None
+                else functools.partial(loss_of, params))
         m_down_global = strat.download_mask(flatP, sstate, round_idx)
         P_base = strat.download_base(flatP, sstate)
         ctx = meta.plan_context(fed.n_clients, round_idx=round_idx)
@@ -466,14 +551,17 @@ def make_client_phase_fn(loss_of: LossFn, meta: FlatMeta, fed: FederatedConfig,
             kdown, upkeys, ax_key = None, None, None
 
         (deltas, nnzs, losses, down_nnzs), _ = _run_clients(
-            P_base, plans, client_batches, s, loss_of=loss_of, meta=meta,
+            P_base, plans, client_batches, s, loss_of=loss, meta=meta,
             fed=fed, kdown=kdown, upkeys=upkeys, ax_key=ax_key,
             round_idx=round_idx)
         if pack_cap:
             idx, val, pnnz = ft.pack_values_batch(deltas, pack_cap)
             return deltas, nnzs, losses, down_nnzs, idx, val, pnnz
         return deltas, nnzs, losses, down_nnzs
-    return fn
+
+    if with_params:
+        return phase
+    return functools.partial(phase, None)
 
 
 def make_server_phase_fn(meta: FlatMeta, fed: FederatedConfig,

@@ -180,6 +180,25 @@ class Experiment:
         self.engine = eng.resolve_engine(engine, **kwargs)
         return self
 
+    def with_mesh(self, shape: Tuple[int, int] = (1, 1), *,
+                  fsdp: bool = False, rounds_per_call: int = 1,
+                  donate: bool = True) -> "Experiment":
+        """2-D client-axis × model-axis ShardedEngine: `shape=(c, m)`
+        builds `jax.make_mesh((c, m), ("data", "model"))` — the vmapped
+        client dimension shards over "data" while the backbone params
+        (which `run()` passes as an explicit step argument) TP-shard over
+        "model"; `fsdp=True` overlays ZeRO-3 so weight storage dims shard
+        over the client axis too (docs/engines.md "Sharded backbone
+        params").  Pass a prebuilt `Mesh` instead of a shape tuple to
+        bring your own axes.  c*m must not exceed `len(jax.devices())`."""
+        from repro.launch.mesh import make_train_mesh
+        mesh = (make_train_mesh(*shape)
+                if isinstance(shape, (tuple, list)) else shape)
+        self.engine = eng.ShardedEngine(mesh, fsdp=fsdp,
+                                        rounds_per_call=rounds_per_call,
+                                        donate=donate)
+        return self
+
     def with_data(self, provider: eng.DataProvider) -> "Experiment":
         """Replace the default `sample_round`-based batch provider with
         `provider(round_idx) -> client_batches` (leaves shaped
@@ -280,10 +299,13 @@ class Experiment:
         params, cfg = self.build_backbone()
         trainable, meta, scale = self._build_trainable(params, cfg)
 
-        def loss_of(tree, mb):
+        # sharded-params path (docs/engines.md): the backbone enters every
+        # engine step as its leading argument instead of a closure capture,
+        # so a ShardedEngine can apply TRAIN_RULES/FSDP in_shardings to it
+        def loss_of(bb, tree, mb):
             if t.full_finetune:
                 return rt.task_loss(tree["backbone"], cfg, mb)
-            p = dict(params)
+            p = dict(bb)
             if "head" in tree:
                 p.update(tree["head"])
             return mdl.loss_fn(p, cfg, rt._task_batch(cfg, mb),
@@ -298,7 +320,8 @@ class Experiment:
                 prefetch=ps["prefetch"], **ps["sampler_kw"])
             self._population_bundle = pop
         plan = eng.RoundTask(loss_of, meta, fed, self.strategy, seed=t.seed,
-                             population=pop)
+                             population=pop, params=params,
+                             param_spec=mdl.model_spec(cfg))
         if self._restore is not None:
             state, ledger, saved_acc = self._restore_state(plan, meta)
         else:

@@ -87,9 +87,12 @@ class RoundTask:
     """The static facets of one experiment — what an engine compiles (the
     `plan` argument of `Engine.compile(plan)`).
 
-    loss_of  — `loss_of(trainable_tree, microbatch) -> scalar`, closing
-               over the frozen backbone params (see the ShardedEngine
-               limitation note about carrying params explicitly).
+    loss_of  — with `params=None` (legacy):
+               `loss_of(trainable_tree, microbatch) -> scalar`, closing
+               over the frozen backbone params (which then enter every
+               compiled step as replicated constants).  With `params`
+               set (the sharded-params path): a `fedround.ParamLossFn`,
+               `loss_of(params, trainable_tree, microbatch) -> scalar`.
     meta     — `fedround.FlatMeta` for the trainable tree: treedef, leaf
                shapes, the flat length `p_len`, and the LoRA rank/is-B
                index maps strategies use for structured masks.
@@ -104,6 +107,16 @@ class RoundTask:
                sampled out of a population that can be orders of
                magnitude larger, with each client's momentum row
                gathered from / committed back to the host store.
+    params   — the frozen backbone pytree, passed as the leading step
+               argument by every engine (never donated: the same
+               buffers feed every round).  This is what lets the
+               ShardedEngine apply TRAIN_RULES/FSDP in_shardings to the
+               backbone so the big `configs/` entries fit a pod mesh
+               (docs/engines.md "Sharded backbone params").
+    param_spec — optional logical-axes `P` spec tree matching `params`
+               (e.g. `models.model.model_spec(cfg)`); the ShardedEngine
+               translates it through its sharding rules into the
+               backbone in_shardings.  None replicates the backbone.
     """
     loss_of: fedround.LossFn
     meta: fedround.FlatMeta
@@ -111,6 +124,8 @@ class RoundTask:
     strategy: st.Strategy
     seed: int = 0
     population: Optional[popn.Population] = None
+    params: Any = None
+    param_spec: Any = None
 
 
 @dataclasses.dataclass
@@ -327,9 +342,19 @@ class Engine:
         device mesh fall back to their defaults)."""
         return {}
 
+    def _step_params(self, plan: RoundTask) -> tuple:
+        """Leading step arguments: the frozen backbone on the
+        sharded-params path, nothing on the legacy closure path.  Every
+        engine prepends this to every step call, so the one `RoundTask`
+        switch keeps all backends in signature lockstep.  The
+        ShardedEngine overrides this to place the backbone into its
+        FSDP/TP storage layout once per run."""
+        return () if plan.params is None else (plan.params,)
+
     def compile(self, plan: RoundTask):
         """-> step(flatP, server, sstate, batch, key) ->
-        (flatP', server', sstate', metrics)."""
+        (flatP', server', sstate', metrics); with `plan.params` set the
+        step takes the backbone first: step(params, flatP, ...)."""
         raise NotImplementedError
 
     def _compile_chunk(self, plan: RoundTask):
@@ -346,6 +371,7 @@ class Engine:
         if state.plan.population is not None:
             return self._run_population_rounds(state, data, callbacks)
         plan = state.plan
+        pargs = self._step_params(plan)
         base_key = jax.random.key(plan.seed + 2)
         step = self.compile(plan)
         chunk_step = None
@@ -356,7 +382,8 @@ class Engine:
                 if n == 1:
                     key = jax.random.fold_in(base_key, r)
                     state.flatP, state.server, state.sstate, metrics = step(
-                        state.flatP, state.server, state.sstate, data(r), key)
+                        *pargs, state.flatP, state.server, state.sstate,
+                        data(r), key)
                     per_round = [metrics]
                 else:
                     if chunk_step is None:
@@ -364,8 +391,8 @@ class Engine:
                     batches = _tree_stack([data(i) for i in range(r, r + n)])
                     rids = jnp.arange(r, r + n, dtype=jnp.int32)
                     state.flatP, state.server, state.sstate, ms = chunk_step(
-                        state.flatP, state.server, state.sstate, batches,
-                        rids, base_key)
+                        *pargs, state.flatP, state.server, state.sstate,
+                        batches, rids, base_key)
                     per_round = [jax.tree.map(lambda x, i=i: x[i], ms)
                                  for i in range(n)]
                 for i, m in enumerate(per_round):
@@ -385,8 +412,9 @@ class Engine:
         # no donation, like SimEngine.compile: callers snapshot flatP
         # across calls for the equality anchors
         return jax.jit(  # reprolint: disable=jit-no-donate -- see above
-            fedround.make_population_round_fn(plan.loss_of, plan.meta,
-                                              plan.fed, plan.strategy))
+            fedround.make_population_round_fn(
+                plan.loss_of, plan.meta, plan.fed, plan.strategy,
+                with_params=plan.params is not None))
 
     def _run_population_rounds(self, state: RunState, data: DataProvider,
                                callbacks: Sequence[Callback] = ()
@@ -419,6 +447,7 @@ class Engine:
             (pop.store.row_len, plan.meta.p_len)
         if state.aux and "population" in state.aux:
             pop.store.load_arrays(state.aux["population"])
+        pargs = self._step_params(plan)
         base_key = jax.random.key(plan.seed + 2)
         step = self.compile_population(plan)
         # always stage through the prefetcher: its cold take() is the
@@ -432,7 +461,7 @@ class Engine:
                 ids, mu_dev = pre.take(r)
                 key = jax.random.fold_in(base_key, r)
                 state.flatP, state.server, state.sstate, metrics = step(
-                    state.flatP, state.server, state.sstate, data(r),
+                    *pargs, state.flatP, state.server, state.sstate, data(r),
                     mu_dev, key)
                 if pop.prefetch and r + 1 < state.rounds:
                     # the jitted step dispatched asynchronously: stage
@@ -559,19 +588,37 @@ class SimEngine(Engine):
         # callers snapshot flatP across calls for the equality anchors
         return jax.jit(  # reprolint: disable=jit-no-donate -- see above
             fedround.make_round_fn(plan.loss_of, plan.meta,
-                                   plan.fed, plan.strategy))
+                                   plan.fed, plan.strategy,
+                                   with_params=plan.params is not None))
 
 
 class _ShardedStep:
     """Deferred-jit wrapper: in_shardings need the concrete arg pytrees, so
     the jit is built on first call and executed under the engine's
-    activation-sharding context (required at trace time for `constrain`)."""
+    activation-sharding context (required at trace time for `constrain`).
 
-    def __init__(self, engine: "ShardedEngine", fn, batch_client_axis: int):
+    After the first call, `in_shardings` and `donate_argnums` record what
+    the jit was built with — the multi-device differential suite inspects
+    them (plus the compiled executable's input shardings) to assert that
+    FSDP param sharding actually applied and that the backbone is never
+    donated (tests/test_sharded_multidevice.py)."""
+
+    def __init__(self, engine: "ShardedEngine", fn, batch_client_axis: int,
+                 param_shardings=None):
         self.engine = engine
         self.fn = fn
         self.batch_client_axis = batch_client_axis
+        # None on the legacy closure path; a NamedSharding tree (built by
+        # the engine from plan.param_spec through its rules) when the
+        # step takes the backbone as its leading argument
+        self.param_shardings = param_shardings
+        self.in_shardings = None
+        self.donate_argnums: tuple = ()
         self._jitted = None
+
+    @property
+    def has_params(self) -> bool:
+        return self.param_shardings is not None
 
     def _build(self, server, sstate, batch, rest):
         from jax.sharding import NamedSharding, PartitionSpec
@@ -592,15 +639,28 @@ class _ShardedStep:
         shardings = (rep, rep_tree(server), rep_tree(sstate),
                      jax.tree.map(batch_sharding, batch),
                      *(rep_tree(x) for x in rest))
+        # flatP/server/sstate are consumed and rebuilt every round; the
+        # backbone params are NOT — the same buffers feed every call, so
+        # donating position 0 on the params path would be a
+        # use-after-donate on round 2.  The shift keeps the donated set
+        # exactly {flatP, server, sstate} on both paths.
         donate = (0, 1, 2) if self.engine.donate else ()
+        if self.has_params:
+            shardings = (self.param_shardings, *shardings)
+            donate = tuple(i + 1 for i in donate)
+        self.in_shardings = shardings
+        self.donate_argnums = donate
         return jax.jit(self.fn, in_shardings=shardings, donate_argnums=donate)
 
-    def __call__(self, flatP, server, sstate, batch, *rest):
+    def __call__(self, *args):
         from repro.launch.shardings import activation_sharding
+        _, server, sstate, batch, *rest = \
+            args[1:] if self.has_params else args
         if self._jitted is None:
             self._jitted = self._build(server, sstate, batch, rest)
-        with activation_sharding(self.engine.mesh, self.engine.rules):
-            return self._jitted(flatP, server, sstate, batch, *rest)
+        with activation_sharding(self.engine.mesh, self.engine.rules,
+                                 exact=self.engine.exact):
+            return self._jitted(*args)
 
 
 @register_engine("sharded")
@@ -618,26 +678,53 @@ class ShardedEngine(Engine):
     (`fedround.make_scanned_round_fn`); chunks are cut at rounds where a
     callback needs host state (eval, checkpoint), so cadences still hold.
 
-    Limitation: `plan.loss_of` closes over the frozen backbone params, so
-    they enter the executable as replicated constants — fine at Experiment
-    scale, but the big-model production path must keep passing params as a
-    sharded step argument (`launch/steps.build_train_step`, as lowered by
-    the dry-run) until the plan carries params explicitly (ROADMAP item).
+    Sharded backbone params: with `plan.params` set, the step takes the
+    frozen backbone as its leading argument (never donated) and its
+    *storage* in_shardings come from `plan.param_spec` through
+    `param_rules` — on a 2-D client×model mesh the vmapped client axis
+    shards over "data" while backbone storage dims shard over "model"
+    (and, with `fsdp=True`, over "data" too: the ZeRO-3 overlay).  With
+    `exact=True` (the default) compute gathers the backbone to full
+    replicas at use and model-axis activation rules are dropped, so the
+    sharded program is bit-identical to SimEngine — the differential
+    anchor tests/test_sharded_multidevice.py holds on a real 8-device
+    mesh.  `exact=False` keeps full TP activation sharding (the dry-run
+    lowering), trading the bit-equality anchor for sharded compute.
+    Without `plan.params` the legacy closure path bakes the backbone
+    into the executable as replicated constants — fine at Experiment
+    scale, wrong for the big `configs/` entries (docs/engines.md
+    "Sharded backbone params").
     """
 
     def __init__(self, mesh=None, *, rounds_per_call: int = 1,
-                 donate: bool = True, rules=None):
+                 donate: bool = True, rules=None, fsdp: bool = False,
+                 exact: bool = True):
         self._mesh = mesh
         self.rounds_per_call = max(int(rounds_per_call), 1)
         self.donate = donate
+        self.fsdp = bool(fsdp)
+        self.exact = bool(exact)
         self._rules = rules
+        # the most recently compiled _ShardedStep: after a run, its
+        # recorded in_shardings/donate_argnums let tests and harnesses
+        # inspect what the round was actually built with
+        self.last_step: Optional[_ShardedStep] = None
+        # backbone placed into its storage layout, cached per params id:
+        # re-placing every round would re-transfer the whole backbone
+        self._placed_params: Optional[tuple] = None
 
     # mesh/rules are live device/partition objects (not serializable) and
     # donate only matters with a mesh: a resumed engine comes back on its
     # defaults (documented in Experiment.resume)
     def config(self) -> Dict[str, Any]:  # reprolint: disable=engine-config -- see above
-        return ({"rounds_per_call": self.rounds_per_call}
-                if self.rounds_per_call > 1 else {})
+        cfg: Dict[str, Any] = {}
+        if self.rounds_per_call > 1:
+            cfg["rounds_per_call"] = self.rounds_per_call
+        if self.fsdp:
+            cfg["fsdp"] = True
+        if not self.exact:
+            cfg["exact"] = False
+        return cfg
 
     @property
     def mesh(self):
@@ -647,35 +734,91 @@ class ShardedEngine(Engine):
 
     @property
     def rules(self):
+        """Activation rules for the step trace.  In `exact` mode the
+        model-axis entries are dropped: per-client compute stays local
+        and full (gather-at-use), so only the client axis shards compute
+        — what keeps sim==sharded bitwise.  Param *storage* still shards
+        over the model axis through `param_rules`."""
         if self._rules is None:
             from repro.launch.steps import TRAIN_RULES
-            self._rules = TRAIN_RULES
+            if self.exact:
+                self._rules = {k: (() if "model" in v else v)
+                               for k, v in TRAIN_RULES.items()}
+            else:
+                self._rules = TRAIN_RULES
         return self._rules
+
+    @property
+    def param_rules(self):
+        """Storage rules for the backbone step argument: TP dims over
+        "model" (TRAIN_RULES), plus the ZeRO-3 `embed` overlay over the
+        data axes with `fsdp=True`."""
+        from repro.launch.steps import TRAIN_FSDP_RULES, TRAIN_RULES
+        return TRAIN_FSDP_RULES if self.fsdp else TRAIN_RULES
+
+    def _param_shardings(self, plan: RoundTask):
+        """NamedSharding tree for the backbone step argument, or None on
+        the legacy closure path.  `plan.param_spec` (logical P axes)
+        translates through `param_rules`; without a spec the backbone
+        replicates."""
+        if plan.params is None:
+            return None
+        if plan.param_spec is None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            return jax.tree.map(lambda _: rep, plan.params)
+        from repro.launch.shardings import spec_tree_shardings
+        return spec_tree_shardings(plan.param_spec, self.mesh,
+                                   self.param_rules)
+
+    def _step_params(self, plan: RoundTask) -> tuple:
+        """Place the backbone into its sharded storage layout ONCE per
+        run (matching the step's in_shardings, so no per-round reshard)
+        and feed the placed copy to every step call."""
+        if plan.params is None:
+            return ()
+        key = id(plan.params)
+        if self._placed_params is None or self._placed_params[0] != key:
+            placed = jax.device_put(plan.params, self._param_shardings(plan))
+            self._placed_params = (key, placed)
+        return (self._placed_params[1],)
 
     def _round_fn(self, plan: RoundTask):
         from repro.launch.steps import train_spmd_axes
         return fedround.make_round_fn(plan.loss_of, plan.meta, plan.fed,
                                       plan.strategy,
-                                      spmd_axis_name=train_spmd_axes(self.mesh))
+                                      spmd_axis_name=train_spmd_axes(self.mesh),
+                                      with_params=plan.params is not None)
 
     def compile(self, plan: RoundTask):
-        return _ShardedStep(self, self._round_fn(plan), batch_client_axis=0)
+        self.last_step = _ShardedStep(
+            self, self._round_fn(plan), batch_client_axis=0,
+            param_shardings=self._param_shardings(plan))
+        return self.last_step
 
     def _compile_chunk(self, plan: RoundTask):
-        return _ShardedStep(self,
-                            fedround.make_scanned_round_fn(self._round_fn(plan)),
-                            batch_client_axis=1)
+        self.last_step = _ShardedStep(
+            self,
+            fedround.make_scanned_round_fn(
+                self._round_fn(plan),
+                with_params=plan.params is not None),
+            batch_client_axis=1,
+            param_shardings=self._param_shardings(plan))
+        return self.last_step
 
     def compile_population(self, plan: RoundTask):
         from repro.launch.steps import train_spmd_axes
         # batch sharded over the client axes as usual; the (cohort,
         # p_len) momentum block and the key ride `rest` replicated
-        return _ShardedStep(
+        self.last_step = _ShardedStep(
             self,
             fedround.make_population_round_fn(
                 plan.loss_of, plan.meta, plan.fed, plan.strategy,
-                spmd_axis_name=train_spmd_axes(self.mesh)),
-            batch_client_axis=0)
+                spmd_axis_name=train_spmd_axes(self.mesh),
+                with_params=plan.params is not None),
+            batch_client_axis=0,
+            param_shardings=self._param_shardings(plan))
+        return self.last_step
 
 
 @register_engine("async")
@@ -784,8 +927,14 @@ class AsyncEngine(Engine):
         fed, meta = plan.fed, plan.meta
         if fed.dp_clip > 0.0:
             raise NotImplementedError(
-                "AsyncEngine: DP aggregation (dp_clip > 0) is calibrated "
-                "for one uniform synchronous cohort; run it on SimEngine")
+                "AsyncEngine: DP aggregation (dp_clip > 0) under buffered/"
+                "partial aggregation is the open ROADMAP item 'DP noise "
+                "calibration under buffered/partial aggregation' (Million-"
+                "client cohorts): the noise scale assumes one uniform "
+                "synchronous cohort, and stale/partial buffers change each "
+                "client's effective sensitivity.  Run DP on SimEngine or "
+                "ShardedEngine — sync mode draws fresh noise every round "
+                "(the PR 6 key-rotation fix, pinned in tests/test_engine.py)")
         if plan.population is not None:
             raise NotImplementedError(
                 "AsyncEngine: the host population store is a synchronous-"
@@ -883,8 +1032,11 @@ class AsyncEngine(Engine):
                 client_fns[key] = jax.jit(  # reprolint: disable=jit-no-donate -- see above
                     fedround.make_client_phase_fn(
                         plan.loss_of, meta, fed, plan.strategy, slots,
-                        repeats, pack_cap=pack_cap or None))
+                        repeats, pack_cap=pack_cap or None,
+                        with_params=plan.params is not None))
             return client_fns[key]
+
+        pargs = self._step_params(plan)
 
         def launch(slots):
             version = state.round
@@ -895,8 +1047,8 @@ class AsyncEngine(Engine):
             batch = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
             rng = jax.random.fold_in(base_key, version)
             out = client_fn(slots, repeats)(
-                state.flatP, state.sstate, jnp.asarray(version, jnp.int32),
-                batch, rng)
+                *pargs, state.flatP, state.sstate,
+                jnp.asarray(version, jnp.int32), batch, rng)
             deltas, up_nnzs, losses, down_nnzs = out[:4]
             # double-buffered data staging: the client phase dispatched
             # asynchronously, so warm each starter's *next* job batch from

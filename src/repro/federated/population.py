@@ -37,6 +37,7 @@ scatter-back.  See docs/scale.md.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Any, Dict, Optional, Tuple, Type, Union
 
@@ -162,11 +163,22 @@ class AvailabilitySampler(CohortSampler):
     hardware) are available for more of the cycle while fast devices
     come and go, the diurnal pattern of real cross-device deployments.
     A uniform profile gives every client the same window and only the
-    phases differ."""
+    phases differ.
+
+    Alternatively, `trace=<path>` replaces the synthetic duty-cycle model
+    with a recorded on/off trace: an `.npz`/`.npy` (array under the key
+    `"windows"`, or the file's first/only array) or a `.json` (a dict
+    with a `"windows"` entry, or a bare nested list) holding an (N, T)
+    0/1 matrix — N trace rows over a T-round cycle.  Client c follows
+    row `c % N` and round r reads column `r % T`, so any population size
+    replays the trace deterministically.  `config()` carries the *path*,
+    not the matrix: checkpoints stay small, and a resumed run re-reads
+    the file (moving/editing it between runs is on the operator, same as
+    the dataset files)."""
 
     def __init__(self, population: int, cohort: Optional[int] = None,
                  seed: int = 0, period: int = 24, duty: float = 0.5,
-                 profile: Any = None):
+                 profile: Any = None, trace: Optional[str] = None):
         super().__init__(population, cohort, seed)
         assert period >= 1, period
         assert 0.0 < duty <= 1.0, duty
@@ -178,6 +190,14 @@ class AvailabilitySampler(CohortSampler):
         self.duty = float(duty)
         self.profile = profile if profile is not None \
             else ac.ClientSystemProfile()
+        self.trace = None if trace is None else str(trace)
+        if self.trace is not None:
+            windows = load_availability_trace(self.trace)
+            rows = np.arange(self.population, dtype=np.int64) \
+                % windows.shape[0]
+            self._windows = windows[rows]           # (population, T)
+            return
+        self._windows = None
         factors = np.asarray(self.profile.speed_factors or (1.0,), float)
         f = factors[np.arange(self.population) % factors.size]
         self._window = np.clip(
@@ -187,11 +207,39 @@ class AvailabilitySampler(CohortSampler):
             % self.period
 
     def eligible(self, round_idx: int) -> np.ndarray:
+        if self._windows is not None:
+            return self._windows[:, round_idx % self._windows.shape[1]]
         return ((round_idx - self._phase) % self.period) < self._window
 
     def config(self) -> Dict[str, Any]:
         return dict(super().config(), period=self.period, duty=self.duty,
-                    profile=dataclasses.asdict(self.profile))
+                    profile=dataclasses.asdict(self.profile),
+                    trace=self.trace)
+
+
+def load_availability_trace(path: str) -> np.ndarray:
+    """Read an (N, T) bool availability matrix from `path` (see
+    `AvailabilitySampler`): npz (key `"windows"` preferred, else the
+    first array in file order), npy, or json (`{"windows": [...]}` or a
+    bare list of rows)."""
+    if path.endswith((".npz", ".npy")):
+        loaded = np.load(path)
+        if isinstance(loaded, np.lib.npyio.NpzFile):
+            with loaded:
+                key = "windows" if "windows" in loaded.files \
+                    else loaded.files[0]
+                arr = loaded[key]
+        else:
+            arr = loaded
+    else:
+        with open(path) as f:
+            obj = json.load(f)
+        arr = np.asarray(obj["windows"] if isinstance(obj, dict) else obj)
+    arr = np.asarray(arr)
+    assert arr.ndim == 2 and arr.size, \
+        f"availability trace {path}: need a non-empty (N, T) matrix, " \
+        f"got shape {arr.shape}"
+    return arr.astype(bool)
 
 
 SamplerLike = Union["CohortSampler", str, Dict[str, Any],

@@ -16,6 +16,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_train_mesh(clients: int = 1, model: int = 1):
+    """2-D client-axis × model-axis mesh for the federated engine path
+    (`Experiment.with_mesh`, `repro.launch.train --mesh CxM`): the vmapped
+    client dimension shards over "data", backbone params TP/FSDP-shard
+    over "model"/"data" per the engine rules (docs/engines.md)."""
+    return jax.make_mesh((int(clients), int(model)), ("data", "model"))
+
+
 def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, pods: int = 0):
     """Small mesh for in-test dry-runs (requires enough host devices)."""
     if pods:

@@ -57,6 +57,7 @@ def fsdp_rules(base=None):
 class _Ctx(threading.local):
     mesh: Optional[Mesh] = None
     rules: Optional[dict] = None
+    exact: bool = False
 
 
 _CTX = _Ctx()
@@ -91,13 +92,43 @@ def spec_tree_shardings(spec_tree, mesh: Mesh, rules=None):
 
 
 @contextlib.contextmanager
-def activation_sharding(mesh: Mesh, rules=None):
-    old = (_CTX.mesh, _CTX.rules)
-    _CTX.mesh, _CTX.rules = mesh, (rules or DEFAULT_RULES)
+def activation_sharding(mesh: Mesh, rules=None, *, exact: bool = False):
+    """Activate `constrain` (and, with `exact=True`, `gather_replicated`)
+    for traces under this context.  `exact` marks the bit-exact engine
+    discipline: param storage stays sharded but compute gathers to full
+    replicas at use, so the sharded program reduces in the same
+    association as the single-device one.  The dry-run/production
+    lowering path keeps the default `exact=False` — full TP activations,
+    no gathers."""
+    old = (_CTX.mesh, _CTX.rules, _CTX.exact)
+    _CTX.mesh, _CTX.rules, _CTX.exact = mesh, (rules or DEFAULT_RULES), exact
     try:
         yield
     finally:
-        _CTX.mesh, _CTX.rules = old
+        _CTX.mesh, _CTX.rules, _CTX.exact = old
+
+
+def gather_replicated(tree):
+    """ZeRO-3 "gather at use": constrain every leaf of `tree` to fully
+    replicated.  No-op unless an activation_sharding context with
+    `exact=True` is active.
+
+    Two call sites in the federated round keep the sharded engine
+    bit-identical to the single-device program (the repo's differential
+    anchor, tests/test_sharded_multidevice.py): the backbone params —
+    *stored* sharded between rounds (FSDP/TP in_shardings), gathered here
+    at use so every client's forward/backward computes on full local
+    weights — and the stacked client deltas before `Strategy.aggregate`,
+    so the cross-client reduction runs replicated in program order
+    instead of as a partitioner-chosen cross-device all-reduce (whose
+    association differs from the single-device lowering at the ulp
+    level)."""
+    if _CTX.mesh is None or not _CTX.exact:
+        return tree
+    rep = NamedSharding(_CTX.mesh, PartitionSpec())
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, rep)
+        if isinstance(x, jax.Array) or hasattr(x, "aval") else x, tree)
 
 
 def constrain(x, logical_axes):

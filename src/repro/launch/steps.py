@@ -29,8 +29,8 @@ from repro.models import model as mdl
 from repro.models.config import (FederatedConfig, InputShape, LoRAConfig,
                                  ModelConfig)
 from repro.models.layers import P, spec_to_shape_dtype
-from repro.launch.shardings import (DEFAULT_RULES, logical_to_pspec,
-                                    spec_tree_shardings)
+from repro.launch.shardings import (DEFAULT_RULES, fsdp_rules,
+                                    logical_to_pspec, spec_tree_shardings)
 
 
 def fed_for_mesh(mesh, shape: InputShape) -> FederatedConfig:
@@ -114,21 +114,18 @@ def specs_to_shardings(spec_tree, mesh):
 def build_train_step(cfg: ModelConfig, lcfg: LoRAConfig, fed: FederatedConfig,
                      strategy: st.StrategyLike, meta: fedround.FlatMeta,
                      window=None, spmd_axis_name=None):
-    strat = st.resolve(strategy)
+    """-> train_step(params, flatP, server, sstate, batches, rng) — the
+    same params-as-leading-argument shape the engine layer runs
+    (`fedround.make_round_fn(with_params=True)`), so the dry-run lowers
+    exactly the program the ShardedEngine executes."""
 
-    def loss_of_factory(params):
-        def loss_of(lora_tree, mb):
-            return mdl.loss_fn(params, cfg, mb, lora=lora_tree,
-                               lora_scale=lcfg.scale, window=window)
-        return loss_of
+    def loss_of(params, lora_tree, mb):
+        return mdl.loss_fn(params, cfg, mb, lora=lora_tree,
+                           lora_scale=lcfg.scale, window=window)
 
-    def train_step(params, flatP, server, sstate, batches, rng):
-        loss_of = loss_of_factory(params)
-        return fedround.federated_round(flatP, server, sstate, batches, rng,
-                                        loss_of=loss_of, meta=meta, fed=fed,
-                                        strategy=strat,
-                                        spmd_axis_name=spmd_axis_name)
-    return train_step
+    return fedround.make_round_fn(loss_of, meta, fed, st.resolve(strategy),
+                                  spmd_axis_name=spmd_axis_name,
+                                  with_params=True)
 
 
 def train_spmd_axes(mesh):
@@ -138,6 +135,12 @@ def train_spmd_axes(mesh):
 # activation rules for the federated train step: the vmapped client axis
 # carries the data/pod sharding, so per-client batch dims stay local.
 TRAIN_RULES = dict(DEFAULT_RULES, batch=())
+
+# the FSDP overlay on the train rules: backbone weight storage dims
+# (`embed`) shard over the data/pod axes too (ZeRO-3) — what
+# `ShardedEngine(fsdp=True)` and `launch.train --fsdp` apply to the
+# params step argument (docs/engines.md "Sharded backbone params").
+TRAIN_FSDP_RULES = fsdp_rules(TRAIN_RULES)
 
 
 def abstract_flat_meta(cfg: ModelConfig, lcfg: LoRAConfig) -> fedround.FlatMeta:

@@ -32,6 +32,12 @@ def main():
                     help="registered engine backend (sim | sharded)")
     ap.add_argument("--rounds-per-call", type=int, default=1,
                     help="scan-chunk k rounds into one device call (sharded)")
+    ap.add_argument("--mesh", default=None, metavar="CxM",
+                    help="2-D client-axis x model-axis mesh for the sharded "
+                         "engine, e.g. 4x2 (needs >= C*M jax devices)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="overlay ZeRO-3 backbone param sharding over the "
+                         "client axis (sharded engine with --mesh)")
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0,
                     help="seeds param init and the synthetic data stream")
@@ -92,8 +98,18 @@ def main():
            .with_training(rounds=args.rounds, eval_every=0, log_every=5,
                           pretrain_steps=0, train_head=False, verbose=True)
            .with_params(params, cfg)
-           .with_data(batch_for_round)
-           .with_engine(args.engine, **engine_kw))
+           .with_data(batch_for_round))
+    if args.mesh is not None:
+        assert args.engine == "sharded", "--mesh needs --engine sharded"
+        c, m = (int(x) for x in args.mesh.lower().split("x"))
+        assert c * m <= len(jax.devices()), \
+            f"mesh {c}x{m} needs {c * m} devices, have {len(jax.devices())}"
+        exp.with_mesh((c, m), fsdp=args.fsdp,
+                      rounds_per_call=args.rounds_per_call)
+        print(f"[train] mesh data={c} model={m} fsdp={args.fsdp}")
+    else:
+        assert not args.fsdp, "--fsdp needs --mesh"
+        exp.with_engine(args.engine, **engine_kw)
     res = exp.run()
 
     led = res.ledger

@@ -331,12 +331,22 @@ def test_async_rejects_zero_buffer_and_concurrency(task):
 
 @pytest.mark.fast
 def test_async_refuses_dp(task):
+    """The refusal must *name the open ROADMAP item* ('DP noise
+    calibration under buffered/partial aggregation') and point at the
+    sync engines, whose per-round noise rotation is pinned by
+    tests/test_engine.py::test_dp_fallback_key_rotates_per_round — an
+    operator hitting this error should land on the actual state of DP
+    support, not a bare 'not implemented'."""
     exp = (_experiment(task)
            .with_federation(n_clients=N_CLIENTS, local_batch=4, dp_clip=1.0,
                             dp_noise=0.1)
            .with_engine("async"))
-    with pytest.raises(NotImplementedError, match="dp_clip"):
+    with pytest.raises(NotImplementedError, match="dp_clip") as ei:
         exp.run()
+    msg = str(ei.value)
+    assert "DP noise calibration under buffered/partial aggregation" in msg
+    assert "ROADMAP" in msg
+    assert "fresh noise every round" in msg
 
 
 # ---------------------------------------------------------------------------

@@ -67,7 +67,10 @@ print("RESULT " + json.dumps(out))
 def test_small_mesh_dryrun(arch):
     env = dict(os.environ, ARCH=arch,
                PYTHONPATH=os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))
-    env.pop("JAX_PLATFORMS", None)
+    # Pin the CPU platform: the forced-host-device mesh is CPU by design,
+    # and an unset JAX_PLATFORMS lets jax probe the (installed but
+    # TPU-less) libtpu plugin, which can block indefinitely on some hosts.
+    env["JAX_PLATFORMS"] = "cpu"
     try:
         proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                               capture_output=True, text=True, timeout=420)

@@ -324,6 +324,72 @@ def test_pack_capacity_contract():
     assert comm.pack_capacity(0, 0) == 0
 
 
+@settings(deadline=None, max_examples=10)
+@given(hst.integers(0, 1_000_000), hst.integers(0, 1_000_000))
+def test_pack_capacity_property(n, k):
+    """pack_capacity is the shared shape contract between the sync and
+    async engines (jit caches and bit-equality line up on it), so the
+    closed form is pinned, not just spot-checked."""
+    cap = comm.pack_capacity(n, k)
+    assert cap == min(n, k + max(k // 8, 64))
+    assert 0 <= cap <= n                 # never beyond the buffer
+    assert cap >= min(n, k)              # every expected Top-K slot fits
+    assert cap >= min(n, 64)             # floor slack
+    # monotone in both arguments: growing the buffer or the expected
+    # support never shrinks the message shape
+    assert comm.pack_capacity(n + 1, k) >= cap
+    assert comm.pack_capacity(n, k + 1) >= cap
+
+
+# ---------------------------------------------------------------------------
+# property: hierarchical edge -> server reduction == flat scatter-add,
+# bitwise, for edge_shards in 1..8 x overflow x all-zero/tied inputs
+# (the docs/scale.md bit-equality claim; deterministic spot checks live in
+# tests/test_population.py)
+# ---------------------------------------------------------------------------
+
+def _packed_rows(n, cap, clients, mode, seed):
+    rng = np.random.default_rng(seed)
+    if mode == "all_zero":
+        val = np.zeros((clients, cap), np.float32)
+    elif mode == "tied":
+        # every kept magnitude identical (only signs differ): per-coordinate
+        # sums cancel or tie, the worst case for association-order claims
+        val = (0.5 * rng.choice([-1.0, 1.0], (clients, cap))).astype(np.float32)
+    else:
+        val = rng.normal(0, 1, (clients, cap)).astype(np.float32)
+    if mode == "overflow":
+        # every slot occupied, duplicate coordinates allowed: nnz == cap
+        # exceeds the k the capacity was sized for (engines call this
+        # overflow and fall back to dense) — the kernels must still agree
+        idx = rng.integers(0, n, (clients, cap))
+    else:
+        # pack_values layout: a sorted prefix of kept coordinates, the tail
+        # parked at the sentinel n (dropped by both reductions; values left
+        # nonzero on purpose to stress the drop path)
+        idx = np.full((clients, cap), n, np.int64)
+        for c in range(clients):
+            nnz = int(rng.integers(0, min(cap, n) + 1))
+            idx[c, :nnz] = np.sort(rng.choice(n, size=nnz, replace=False))
+    return jnp.asarray(idx), jnp.asarray(val)
+
+
+@settings(deadline=None, max_examples=10)
+@given(hst.integers(1, 8), hst.integers(16, 3000), hst.integers(1, 6),
+       hst.sampled_from(("random", "all_zero", "tied", "overflow")),
+       hst.integers(0, 10_000))
+def test_hierarchical_accumulate_matches_flat_property(edges, n, clients,
+                                                       mode, seed):
+    cap = comm.pack_capacity(n, max(n // 8, 1))
+    idx, val = _packed_rows(n, cap, clients, mode, seed)
+    flat = ft.sparse_accumulate(idx, val, n)
+    hier = ft.hierarchical_accumulate(idx, val, n, edges)
+    assert hier.shape == flat.shape and hier.dtype == flat.dtype
+    # bitwise, not allclose: compare the raw f32 words
+    assert np.array_equal(np.asarray(flat).view(np.uint32),
+                          np.asarray(hier).view(np.uint32))
+
+
 # ---------------------------------------------------------------------------
 # sparse-aggregation gating + the packed server reduction
 # ---------------------------------------------------------------------------

@@ -17,6 +17,8 @@ The scaling claims are bitwise, not approximate:
 Plus a 10^4-client smoke (the `scripts/ci_fast.sh` population gate) and
 the store/sampler unit layer.
 """
+import json
+
 import numpy as np
 import pytest
 
@@ -188,6 +190,49 @@ def test_availability_trace_windows():
         np.testing.assert_array_equal(h.eligible(r), h2.eligible(r))
 
 
+@pytest.mark.fast
+def test_availability_trace_file_loader(tmp_path):
+    """Recorded on/off traces: every accepted file format reads back the
+    same (N, T) matrix, client c follows row c % N, round r reads column
+    r % T, and the config spec carries the *path* and replays."""
+    windows = np.array([[1, 1, 0, 0],
+                        [0, 1, 1, 0],
+                        [0, 0, 1, 1]], np.int64)
+    npz = tmp_path / "trace.npz"
+    np.savez(npz, windows=windows)
+    npy = tmp_path / "trace.npy"
+    np.save(npy, windows.astype(bool))
+    js = tmp_path / "trace.json"
+    js.write_text(json.dumps({"windows": windows.tolist()}))
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps(windows.tolist()))
+    first = tmp_path / "first.npz"      # no "windows" key -> first array
+    np.savez(first, w=windows)
+
+    for p in (npz, npy, js, bare, first):
+        s = popn.resolve_sampler("availability", population=7, cohort=2,
+                                 seed=0, trace=str(p))
+        for r in range(9):
+            np.testing.assert_array_equal(
+                s.eligible(r), windows[np.arange(7) % 3, r % 4].astype(bool),
+                err_msg=f"{p} round {r}")
+
+    # determinism + config round-trip: same path -> same cohort sequence
+    s = popn.resolve_sampler("availability", population=12, cohort=3,
+                             seed=4, trace=str(npz))
+    s2 = popn.resolve_sampler(s.config(), population=12)
+    assert s2.trace == str(npz)
+    for r in range(8):
+        np.testing.assert_array_equal(s.eligible(r), s2.eligible(r))
+        np.testing.assert_array_equal(s.sample(r), s2.sample(r))
+
+    # a 1-D payload is rejected, not silently broadcast
+    bad = tmp_path / "bad.json"
+    bad.write_text("[1, 0, 1]")
+    with pytest.raises(AssertionError, match="matrix"):
+        popn.load_availability_trace(str(bad))
+
+
 # ---------------------------------------------------------------------------
 # the engine anchors
 # ---------------------------------------------------------------------------
@@ -239,6 +284,32 @@ def test_population_checkpoint_resumes_mid_flight_bit_exactly(
     for got, want in zip(resumed.history, full.history):
         assert got["loss"] == want["loss"], want["round"]
         assert got["cohort"] == want["cohort"], want["round"]
+    assert resumed.final_acc == full.final_acc
+
+
+def test_population_trace_sampler_checkpoint_roundtrip(task, tmp_path):
+    """A file-backed availability trace rides the sampler config through
+    checkpoint/resume: the spec serializes the *path*, resume re-reads
+    the file, and the remaining cohort sequence replays bit-exactly."""
+    rng = np.random.default_rng(7)
+    windows = rng.random((16, 6)) < 0.6
+    windows[::4] = True     # every 4th trace row always on: >= cohort elig
+    tr = tmp_path / "tr.npz"
+    np.savez(tr, windows=windows)
+    kw = dict(sampler="availability", trace=str(tr))
+    full = _experiment(task, rounds=6).with_population(64, **kw).run()
+    assert len({tuple(h["cohort"]) for h in full.history}) > 1
+
+    class Stop(eng.Callback):
+        def on_round_end(self, ev):
+            if ev.round == 3:
+                raise eng.StopRun()
+
+    d = str(tmp_path / "ckpt")
+    (_experiment(task, rounds=6).with_population(64, **kw)
+     .with_checkpoint(d, every=3).with_callbacks(Stop()).run())
+    resumed = Experiment.resume(d).run()
+    assert resumed.history == full.history
     assert resumed.final_acc == full.final_acc
 
 

@@ -475,6 +475,46 @@ def test_use_after_donate_silent_when_rebound():
     assert lint(good, "use-after-donate") == []
 
 
+def test_params_closure_fires():
+    bad = """
+        def make_round_fn(params, loss):
+            def round_fn(flatP, server, batch):
+                return loss(params, flatP, batch)
+            return round_fn
+    """
+    found = lint(bad, "params-closure", rel="src/repro/federated/fake.py")
+    assert len(found) == 1
+    assert "`round_fn` closes over `params`" in found[0].message
+    assert "with_params=True" in found[0].message
+
+
+def test_params_closure_silent_on_explicit_argument_and_scope():
+    good = """
+        def make_round_fn(loss):
+            def round_fn(params, flatP, server, batch):
+                return loss(params, flatP, batch)
+            return round_fn
+
+        def round_stats(history):
+            params = {"n": len(history)}   # locally bound, not a closure
+            return params
+
+        def summarize(params):             # not a step/round/phase name
+            def helper():
+                return params
+            return helper
+    """
+    assert lint(good, "params-closure",
+                rel="src/repro/federated/fake.py") == []
+    # scoped to the engine trees: models/ et al. are exempt
+    bad_elsewhere = """
+        def round_fn(x):
+            return params
+    """
+    assert lint(bad_elsewhere, "params-closure",
+                rel="src/repro/models/fake.py") == []
+
+
 # ---------------------------------------------------------------------------
 # framework: suppressions, registry, baseline
 # ---------------------------------------------------------------------------
@@ -515,6 +555,7 @@ def test_rule_registry_is_complete():
         "pallas-grid-guard",
         "pallas-interpret",
         "pallas-raw-index",
+        "params-closure",
         "prng-constant-key",
         "prng-key-reuse",
         "registry-coverage",

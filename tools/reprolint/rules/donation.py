@@ -12,6 +12,15 @@ round/phase/step builders) that passes no `donate_argnums`/
 
 `use-after-donate`: a name passed at a donated position of a jitted
 call and then used again in the same straight-line body.
+
+`params-closure`: an engine step/round/phase function in the engine
+trees (core/, federated/, launch/) that *closes over* the backbone
+`params` instead of taking it as an argument.  A closed-over backbone is
+baked into the trace as a constant: it can't be given an in_shardings
+entry (so FSDP/TP storage sharding silently degrades to replication),
+it escapes the donation audit, and every re-trace re-embeds it.  The
+sharded-params round path threads it explicitly
+(`fedround.make_round_fn(..., with_params=True)`).
 """
 from __future__ import annotations
 
@@ -24,6 +33,11 @@ from tools.reprolint.rules import _util as u
 
 ENTRY_FN_RE = re.compile(r"^(make|build)_\w*(round|phase|step)\w*$")
 DONATE_KWS = {"donate_argnums", "donate_argnames"}
+
+# params-closure scope: the engine trees whose step functions feed jits
+STEP_TOKENS = {"step", "round", "rounds", "phase"}
+PARAM_SCOPES = ("src/repro/core/", "src/repro/federated/",
+                "src/repro/launch/")
 
 
 def _jit_calls(tree) -> Iterator[ast.Call]:
@@ -128,3 +142,48 @@ class UseAfterDonate(Rule):
                             donated_names[node.args[i].id] = node.lineno
             for nm in u.assigned_names(stmt):
                 donated_names.pop(nm, None)
+
+
+def _own_scope(fn) -> Iterator[ast.AST]:
+    """Nodes of `fn`'s own scope: nested function bodies are skipped
+    (their loads belong to their own scope — `walk_functions` visits
+    each of them separately)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, u.FUNC_TYPES):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+@register_rule("params-closure")
+class ParamsClosure(Rule):
+    """An engine step/round/phase function closing over the backbone
+    `params` instead of taking it as an explicit argument."""
+
+    def check(self, mod: Module, project: Project) -> Iterator[Finding]:
+        if not mod.rel.startswith(PARAM_SCOPES):
+            return
+        for fn in u.walk_functions(mod.tree):
+            name = u.func_name(fn)
+            if not STEP_TOKENS & set(name.lower().split("_")):
+                continue
+            bound = set(u.arg_names(fn))
+            loads = []
+            for node in _own_scope(fn):
+                if isinstance(node, ast.Name) and node.id == "params":
+                    if isinstance(node.ctx, ast.Load):
+                        loads.append(node)
+                    else:
+                        bound.add(node.id)
+            if loads and "params" not in bound:
+                yield Finding(
+                    mod.rel, loads[0].lineno, self.name,
+                    f"`{name}` closes over `params` instead of taking it "
+                    "as an argument — a closed-over backbone is baked "
+                    "into the trace as a constant: no in_shardings entry "
+                    "(FSDP/TP storage sharding degrades to replication), "
+                    "invisible to the donation audit, re-embedded on "
+                    "every re-trace; thread it explicitly "
+                    "(fedround.make_round_fn(..., with_params=True))")
